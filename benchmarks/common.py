@@ -1,0 +1,222 @@
+"""Shared benchmark harness: a small DLRM on planted synthetic Criteo,
+trainable under any embedding-quantization strategy, with exact AUC eval.
+
+Every paper table/figure benchmark builds on this; budgets are sized for
+the CPU container (a few hundred steps, ~100k samples) — the *relative*
+orderings the paper reports are what we reproduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FQuantConfig, auc
+from repro.core import qat_store as qs
+from repro.core.baselines import alpt as alpt_lib
+from repro.core.baselines import mpe as mpe_lib
+from repro.data.criteo import CriteoConfig, CriteoSynth
+from repro.models import embedding as E
+from repro.models import recsys as R
+from repro.optim import rowwise_adagrad
+from repro.optim.optimizers import apply_updates
+
+
+@dataclasses.dataclass
+class BenchSetup:
+    ds: CriteoSynth
+    model: R.Model
+    params: dict
+    train_steps: int = 800
+    batch_size: int = 512
+    eval_batches: int = 8
+    eval_batch_size: int = 1024
+
+
+def make_setup(num_fields=10, important=5, embed_dim=16, seed=0,
+               train_steps=800) -> BenchSetup:
+    ds = CriteoSynth(CriteoConfig(num_fields=num_fields,
+                                  important_fields=important,
+                                  num_dense=4, noise=0.3, seed=seed))
+    cfg = R.DLRMConfig(cardinalities=tuple(int(c) for c in ds.cards),
+                       embed_dim=embed_dim, num_dense=4, bot_mlp=(32, 16),
+                       top_mlp=(64, 1))
+    cfg = dataclasses.replace(cfg, bot_mlp=(32, embed_dim))
+    model = R.make_dlrm(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return BenchSetup(ds=ds, model=model, params=params,
+                      train_steps=train_steps)
+
+
+def eval_auc(setup: BenchSetup, params, field_mask=None,
+             start_step=10_000) -> float:
+    scores, labels = [], []
+    fwd = jax.jit(lambda p, b: setup.model.forward(p, b, field_mask))
+    for i in range(setup.eval_batches):
+        b = {k: jnp.asarray(v) for k, v in
+             setup.ds.batch(setup.eval_batch_size, start_step + i).items()}
+        scores.append(fwd(params, b))
+        labels.append(b["labels"])
+    return float(auc(jnp.concatenate(scores), jnp.concatenate(labels)))
+
+
+# ------------------------------------------------------- training drivers
+
+def train_fp32(setup: BenchSetup, field_mask=None, steps=None,
+               params=None, seed=1) -> dict:
+    model = setup.model
+    params = params if params is not None else model.init(
+        jax.random.PRNGKey(seed))
+    opt = rowwise_adagrad(0.05)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        def loss(p):
+            emb = model.embed(p, batch, field_mask)
+            return model.loss_from_emb(p, emb, batch).mean()
+        g = jax.grad(loss)(params)
+        upd, state2 = opt.update(g, state, params)
+        return apply_updates(params, upd), state2
+
+    for i in range(steps or setup.train_steps):
+        b = {k: jnp.asarray(v)
+             for k, v in setup.ds.batch(setup.batch_size, i).items()}
+        params, state = step(params, state, b)
+    return params
+
+
+def train_fquant(setup: BenchSetup, fq_cfg: FQuantConfig, steps=None,
+                 seed=1) -> tuple[dict, jnp.ndarray]:
+    """F-Quantization QAT: per-step Eq.7 priority + Eq.8 snap."""
+    model = setup.model
+    spec = model.spec
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = rowwise_adagrad(0.05)
+    state = opt.init(params)
+    priority = jnp.zeros((spec.total_rows,), jnp.float32)
+    key = jax.random.PRNGKey(seed + 99)
+
+    @jax.jit
+    def step(params, state, priority, batch, key):
+        def loss(p):
+            emb = model.embed(p, batch)
+            return model.loss_from_emb(p, emb, batch).mean()
+        g = jax.grad(loss)(params)
+        upd, state2 = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+        store = qs.QATStore(table=params["embed_table"], priority=priority)
+        key, sub = jax.random.split(key)
+        store = qs.post_step(store, E.globalize(batch["indices"], spec),
+                             batch["labels"], fq_cfg, key=sub)
+        params = dict(params)
+        params["embed_table"] = store.table
+        return params, state2, store.priority, key
+
+    for i in range(steps or setup.train_steps):
+        b = {k: jnp.asarray(v)
+             for k, v in setup.ds.batch(setup.batch_size, i).items()}
+        params, state, priority, key = step(params, state, priority, b,
+                                            key)
+    return params, priority
+
+
+def train_mpe(setup: BenchSetup, capacity_frac=0.18, policy="lfu",
+              steps=None, seed=1) -> tuple[dict, mpe_lib.MPEState]:
+    """MPE baseline: fp32 cache (LFU/LRU) + int8 backing store."""
+    model = setup.model
+    spec = model.spec
+    params = model.init(jax.random.PRNGKey(seed))
+    cfg = mpe_lib.MPEConfig(capacity=int(spec.total_rows * capacity_frac),
+                            policy=policy, refresh_every=4)
+    mstate = mpe_lib.MPEState(
+        table=params["embed_table"],
+        priority=jnp.zeros((spec.total_rows,), jnp.float32),
+        in_cache=jnp.zeros((spec.total_rows,), bool
+                           ).at[:cfg.capacity].set(True),
+        step=jnp.zeros((), jnp.int32))
+    opt = rowwise_adagrad(0.05)
+    state = opt.init(params)
+    key = jax.random.PRNGKey(seed + 7)
+
+    @jax.jit
+    def step(params, state, mstate, batch, key):
+        def loss(p):
+            emb = model.embed(p, batch)
+            return model.loss_from_emb(p, emb, batch).mean()
+        g = jax.grad(loss)(params)
+        upd, state2 = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+        key, sub = jax.random.split(key)
+        mstate = mstate._replace(table=params["embed_table"])
+        mstate = mpe_lib.post_step(
+            mstate, E.globalize(batch["indices"], spec), cfg, key=sub)
+        params = dict(params)
+        params["embed_table"] = mstate.table
+        return params, state2, mstate, key
+
+    for i in range(steps or setup.train_steps):
+        b = {k: jnp.asarray(v)
+             for k, v in setup.ds.batch(setup.batch_size, i).items()}
+        params, state, mstate, key = step(params, state, mstate, b, key)
+    return params, mstate
+
+
+def train_alpt(setup: BenchSetup, steps=None, seed=1) -> dict:
+    """ALPT baseline: int8 storage with learned per-row scales."""
+    model = setup.model
+    spec = model.spec
+    params = model.init(jax.random.PRNGKey(seed))
+    acfg = alpt_lib.ALPTConfig(scale_lr=1e-4, init_scale=1e-2)
+    astate = alpt_lib.init(jax.random.PRNGKey(seed + 1), spec.total_rows,
+                           spec.dim, acfg)
+    opt = rowwise_adagrad(0.05)
+    # dense params trained normally; table handled by ALPT
+    state = opt.init(params)
+    key = jax.random.PRNGKey(seed + 13)
+
+    @jax.jit
+    def step(params, state, astate, batch, key):
+        table = alpt_lib.dequant(astate)
+        p_full = dict(params)
+        p_full["embed_table"] = table
+
+        def loss(p):
+            emb = model.embed(p, batch)
+            return model.loss_from_emb(p, emb, batch).mean()
+
+        g = jax.grad(loss)(p_full)
+        upd, state2 = opt.update(g, state, p_full)
+        params2 = apply_updates(p_full, upd)
+        # ALPT re-quantizes the table rows with SR + scale update
+        gidx = E.globalize(batch["indices"], spec)
+        grad_rows = jnp.take(g["embed_table"], gidx.reshape(-1), axis=0)
+        key, sub = jax.random.split(key)
+        astate2 = alpt_lib.apply_grads(astate, grad_rows[None],
+                                       gidx.reshape(1, -1), 0.05, acfg,
+                                       sub)
+        params2 = dict(params2)
+        params2.pop("embed_table")
+        return params2, state2, astate2, key
+
+    for i in range(steps or setup.train_steps):
+        b = {k: jnp.asarray(v)
+             for k, v in setup.ds.batch(setup.batch_size, i).items()}
+        params, state, astate, key = step(params, state, astate, b, key)
+    out = dict(params)
+    out["embed_table"] = alpt_lib.dequant(astate)
+    return out
+
+
+def timed(fn: Callable, *args, repeats=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        r = fn(*args, **kw)
+    jax.block_until_ready(r)
+    return r, (time.perf_counter() - t0) / repeats

@@ -1,0 +1,129 @@
+"""Fig. 2: AUC vs number of remaining fields, per selection method.
+
+Methods: F-Permutation (1st-order Taylor), original Permutation, group
+LASSO, Gumbel (FSCD/AutoField-style), random pruning — each method ranks
+fields, then we prune to k fields (mask + finetune) and report AUC.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchSetup, eval_auc, make_setup, train_fp32
+from repro.core import permutation, taylor
+from repro.core.baselines import gumbel as gumbel_lib
+from repro.core.baselines import lasso as lasso_lib
+from repro.optim.optimizers import apply_updates
+
+
+def _eval_batches(setup: BenchSetup, n=6, start=3000):
+    return [{k: jnp.asarray(v) for k, v in
+             setup.ds.batch(512, start + i).items()} for i in range(n)]
+
+
+def rank_fperm(setup, params):
+    scores, _, _ = taylor.fperm_scores(
+        lambda p, b: setup.model.embed(p, b), setup.model.loss_from_emb,
+        params, _eval_batches(setup), order=1)
+    return np.argsort(np.asarray(scores))        # least important first
+
+
+def rank_permutation(setup, params, shuffles=3):
+    scores, _ = permutation.permutation_scores(
+        lambda p, b: setup.model.embed(p, b), setup.model.loss_from_emb,
+        params, _eval_batches(setup, n=2), setup.model.spec.num_fields,
+        num_shuffles=shuffles, key=jax.random.PRNGKey(0))
+    return np.argsort(np.asarray(scores))
+
+
+def rank_lasso(setup, params, steps=150):
+    """Train per-field gates with proximal SGD on top of the base model."""
+    model = setup.model
+    f = model.spec.num_fields
+    gates = lasso_lib.init_gates(f, model.spec.dim)
+    cfg = lasso_lib.LassoConfig(lam=3e-2, lr=0.05)
+
+    @jax.jit
+    def step(gates, batch):
+        def loss(g):
+            emb = lasso_lib.apply_gates(model.embed(params, batch), g)
+            return model.loss_from_emb(params, emb, batch).mean()
+        grad = jax.grad(loss)(gates)
+        return lasso_lib.proximal_step(gates, grad, cfg)
+
+    for i in range(steps):
+        b = {k: jnp.asarray(v)
+             for k, v in setup.ds.batch(setup.batch_size, i).items()}
+        gates = step(gates, b)
+    return np.argsort(np.asarray(lasso_lib.field_scores(gates)))
+
+
+def rank_gumbel(setup, params, steps=150):
+    model = setup.model
+    f = model.spec.num_fields
+    cfg = gumbel_lib.GumbelConfig(anneal_steps=steps, lr=0.05)
+    logits = gumbel_lib.init_logits(f, cfg)
+    key = jax.random.PRNGKey(0)
+
+    @jax.jit
+    def step(logits, batch, key, i):
+        tau = gumbel_lib.temperature(i, cfg)
+        key, sub = jax.random.split(key)
+
+        def loss(lg):
+            m = gumbel_lib.sample_mask(lg, sub, tau)
+            emb = gumbel_lib.apply_mask(model.embed(params, batch), m)
+            task = model.loss_from_emb(params, emb, batch).mean()
+            return task + 0.5 * gumbel_lib.sparsity_loss(lg, 0.6)
+
+        g = jax.grad(loss)(logits)
+        return logits - cfg.lr * g, key
+
+    for i in range(steps):
+        b = {k: jnp.asarray(v)
+             for k, v in setup.ds.batch(setup.batch_size, i).items()}
+        logits, key = step(logits, b, key, jnp.asarray(i))
+    return np.argsort(np.asarray(gumbel_lib.field_scores(logits)))
+
+
+def rank_random(setup, params, seed=123):
+    return np.random.default_rng(seed).permutation(
+        setup.model.spec.num_fields)
+
+
+METHODS = {
+    "f_permutation": rank_fperm,
+    "permutation": rank_permutation,
+    "lasso": rank_lasso,
+    "gumbel": rank_gumbel,
+    "random": rank_random,
+}
+
+
+def run(train_steps=800, keep_counts=(8, 6, 4), finetune_steps=150
+        ) -> list[dict]:
+    setup = make_setup(num_fields=10, important=5,
+                       train_steps=train_steps)
+    params = train_fp32(setup)
+    base_auc = eval_auc(setup, params)
+    rows = [{"method": "baseline", "fields": 10, "auc": base_auc}]
+
+    for name, ranker in METHODS.items():
+        order = ranker(setup, params)            # least important first
+        for keep in keep_counts:
+            mask = np.ones(10, bool)
+            mask[order[:10 - keep]] = False
+            jmask = jnp.asarray(mask.astype(np.float32))
+            tuned = train_fp32(setup, field_mask=jmask,
+                               steps=finetune_steps, params=params,
+                               seed=2)
+            a = eval_auc(setup, tuned, field_mask=jmask)
+            rows.append({"method": name, "fields": keep, "auc": a})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,49 @@
+"""Fig. 3: F-Quantization sensitivity to t8 / t16.
+
+Paper protocol: sweep t16 with t8=0 (all non-fp32 rows at fp16), and
+sweep t8 with t16=t8 (two tiers: int8 vs fp32).  Priorities here are the
+Eq. 7 steady state of the zipf stream, so thresholds translate to tier
+fractions deterministically.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import eval_auc, make_setup, train_fquant
+from repro.core import FQuantConfig, TierConfig, assign_tiers, memory_bytes
+from repro.core.tiers import fp32_bytes
+
+
+def run(train_steps=800,
+        t16_grid=(1e-2, 1e-1, 1e0, 1e1),
+        t8_grid=(1e-2, 1e-1, 1e0, 1e1)) -> list[dict]:
+    setup = make_setup(num_fields=8, important=4, train_steps=train_steps)
+    spec = setup.model.spec
+    rows = []
+    # note: priorities in this small setup are O(batch * zipf-rate); the
+    # paper's industrial thresholds (1e3/1e5) scale with its 8192 batch
+    for t16 in t16_grid:
+        cfg = FQuantConfig(tiers=TierConfig(t8=-np.inf, t16=t16))
+        params, pri = train_fquant(setup, cfg)
+        tiers = assign_tiers(pri, cfg.tiers)
+        mem = memory_bytes(tiers, spec.dim) / fp32_bytes(
+            spec.total_rows, spec.dim)
+        rows.append({"sweep": "t16", "threshold": t16,
+                     "auc": eval_auc(setup, params),
+                     "memory": round(float(mem), 3)})
+    for t8 in t8_grid:
+        cfg = FQuantConfig(tiers=TierConfig(t8=t8, t16=t8))
+        params, pri = train_fquant(setup, cfg)
+        tiers = assign_tiers(pri, cfg.tiers)
+        mem = memory_bytes(tiers, spec.dim) / fp32_bytes(
+            spec.total_rows, spec.dim)
+        rows.append({"sweep": "t8", "threshold": t8,
+                     "auc": eval_auc(setup, params),
+                     "memory": round(float(mem), 3)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,98 @@
+"""Serving QPS proxy: the +30% QPS claim.
+
+On this CPU container wall-clock TPU QPS can't be measured; what CAN be
+measured/derived:
+
+  1. bytes moved per lookup: fp32 table vs tier-packed store (the
+     serving path is HBM-bandwidth-bound, so bytes ~ 1/QPS) — this is the
+     mechanism behind the paper's QPS gain;
+  2. wall time of the jnp serving forward on fp32 vs packed storage at
+     the serve_p99 shape (CPU proxy, same code path XLA compiles for TPU);
+  3. the Pallas fused-kernel traffic model: exact bytes touched per bag.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import make_setup, train_fquant
+from repro.core import FQuantConfig, assign_tiers, pack
+from repro.core import qat_store as qs
+from repro.core.packed_store import lookup as packed_lookup
+from repro.core.tiers import plan_thresholds_for_ratio
+from repro.models import embedding as E
+
+
+def run(batch=512, iters=20) -> list[dict]:
+    setup = make_setup(num_fields=10, important=5, train_steps=60)
+    spec = setup.model.spec
+    model = setup.model
+
+    warm = FQuantConfig()
+    params, priority = train_fquant(setup, warm, steps=60)
+    planned = plan_thresholds_for_ratio(priority, spec.dim, 0.5)
+    cfg = FQuantConfig(tiers=planned, stochastic=False)
+    store = qs.QATStore(table=params["embed_table"], priority=priority)
+    store = store._replace(table=qs.snap(
+        store.table, qs.current_tiers(store, cfg), cfg))
+    packed = pack(store, cfg)
+
+    batch_data = {k: jnp.asarray(v)
+                  for k, v in setup.ds.batch(batch, 777).items()}
+    gidx = E.globalize(batch_data["indices"], spec)
+
+    # bytes per request (B*F rows of dim D)
+    n_rows = int(np.prod(gidx.shape))
+    fp32_bytes_req = n_rows * spec.dim * 4
+    tiers = assign_tiers(priority, planned)
+    touched = np.asarray(tiers)[np.asarray(gidx).reshape(-1)]
+    per_tier_bytes = {0: spec.dim + 4, 1: 2 * spec.dim + 4,
+                      2: 4 * spec.dim}
+    packed_bytes_req = int(sum(per_tier_bytes[int(t)] + 4
+                               for t in touched))
+
+    # wall time: fp32 forward vs packed forward (XLA path)
+    fwd32 = jax.jit(lambda p, b: model.forward(p, b))
+    p32 = dict(params)
+
+    def fwd_packed(net, packed, b):
+        emb = packed_lookup(packed, E.globalize(b["indices"], spec))
+        pp = dict(net)
+        pp["embed_table"] = params["embed_table"]  # unused by head
+        return model.head(pp, emb, b)
+
+    fwdq = jax.jit(fwd_packed)
+    fwd32(p32, batch_data).block_until_ready()
+    fwdq(params, packed, batch_data).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fwd32(p32, batch_data)
+    r.block_until_ready()
+    t_fp32 = (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fwdq(params, packed, batch_data)
+    r.block_until_ready()
+    t_packed = (time.perf_counter() - t0) / iters
+
+    ratio = fp32_bytes_req / packed_bytes_req
+    return [
+        {"metric": "bytes_per_request_fp32", "value": fp32_bytes_req},
+        {"metric": "bytes_per_request_packed", "value": packed_bytes_req},
+        {"metric": "hbm_bytes_ratio (QPS headroom on bw-bound serving)",
+         "value": round(ratio, 2)},
+        {"metric": "table_memory_ratio",
+         "value": round(packed.nbytes()
+                        / (spec.total_rows * spec.dim * 4), 3)},
+        {"metric": "cpu_forward_us_fp32", "value": round(t_fp32 * 1e6)},
+        {"metric": "cpu_forward_us_packed", "value": round(t_packed * 1e6)},
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,125 @@
+"""§Roofline: three-term analysis from the dry-run artifacts.
+
+Reads results/dryrun/*.json (written by launch/dryrun.py) and derives,
+per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs / peak_FLOPs          [s]
+    memory term     = HLO_bytes / HBM_bw              [s]
+    collective term = collective_bytes / ICI_bw       [s]
+
+HLO_FLOPs / bytes / collective_bytes are PER-DEVICE numbers (the SPMD
+module is one device's program, trip-count-corrected by
+launch/hlo_analysis).  Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s
+HBM, 4 ICI links x ~50 GB/s.
+
+MODEL_FLOPS uses 6*N*D (dense) / 6*N_active*D (MoE) for LM training,
+2*N*D for LM inference tokens, and analytic op counts for recsys/GNN.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 4 * 50e9            # bytes/s aggregate links per chip
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun")
+
+# analytic params (total, active) per LM arch
+LM_PARAMS = {
+    "smollm-135m": (135e6, 135e6),
+    "qwen3-8b": (8.2e9, 8.2e9),
+    "deepseek-coder-33b": (33.3e9, 33.3e9),
+    "mixtral-8x22b": (141e9, 39e9),
+    "deepseek-v2-lite-16b": (15.7e9, 2.8e9),
+}
+
+LM_TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,          # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(arch: str, shape: str, kind: str) -> float | None:
+    """Global useful FLOPs for the step (None where not meaningful)."""
+    if arch in LM_PARAMS:
+        total, active = LM_PARAMS[arch]
+        toks = LM_TOKENS[shape]
+        if kind == "train":
+            return 6.0 * active * toks
+        return 2.0 * active * toks
+    return None
+
+
+def load() -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def terms(rec: dict) -> dict:
+    compute = rec["flops"] / PEAK_FLOPS
+    memory = rec["hbm_bytes"] / HBM_BW
+    coll = rec["collective_total"] / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"], rec["kind"])
+    useful = None
+    if mf:
+        per_dev = mf / rec["num_devices"]
+        useful = per_dev / max(rec["flops"], 1.0)
+    bound = max(compute, memory, coll)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variant": rec.get("variant") or "baseline",
+        "kind": rec["kind"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant,
+        "model_flops_ratio": useful,
+        "roofline_fraction": compute / bound if bound else 0.0,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2 ** 30,
+    }
+
+
+def table(mesh: str = "single", variant: str = "baseline") -> list[dict]:
+    return [terms(r) for r in load()
+            if r["mesh"] == mesh
+            and (r.get("variant") or "baseline") == variant]
+
+
+def markdown(mesh: str = "single") -> str:
+    rows = table(mesh)
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful/HLO | roofline frac | peak GiB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        mfr = f"{r['model_flops_ratio']:.2f}" \
+            if r["model_flops_ratio"] else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | {mfr} | {r['roofline_fraction']:.2f} | "
+            f"{r['peak_gib']:.2f} |")
+    return "\n".join(out)
+
+
+def run() -> list[dict]:
+    rows = table("single")
+    return [{"arch": r["arch"], "shape": r["shape"],
+             "dominant": r["dominant"],
+             "roofline_fraction": round(r["roofline_fraction"], 3)}
+            for r in rows]
+
+
+if __name__ == "__main__":
+    print(markdown("single"))
+    print()
+    print(markdown("multi"))

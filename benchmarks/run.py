@@ -1,0 +1,70 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived carries the
+table-specific payload as key=value pairs).
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(name: str, t0: float, rows) -> None:
+    us = (time.perf_counter() - t0) * 1e6
+    for row in rows:
+        payload = ";".join(f"{k}={v}" for k, v in row.items())
+        print(f"{name},{us:.0f},{payload}")
+    sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced budgets (CI)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    fast = args.fast
+
+    from benchmarks import (fig2_fperm, fig3_thresholds, freq_error,
+                            qps, roofline, table2_time, table3_fquant,
+                            table4_combined)
+
+    jobs = {
+        "table2_time": lambda: table2_time.run(
+            eval_batches=2 if fast else 4, shuffles=1 if fast else 2),
+        "table3_fquant": lambda: table3_fquant.run(
+            train_steps=150 if fast else 800),
+        "fig3_thresholds": lambda: fig3_thresholds.run(
+            train_steps=150 if fast else 800,
+            t16_grid=(1e-1, 1e1) if fast else (1e-2, 1e-1, 1e0, 1e1),
+            t8_grid=(1e-1, 1e1) if fast else (1e-2, 1e-1, 1e0, 1e1)),
+        "table4_combined": lambda: table4_combined.run(
+            train_steps=150 if fast else 800),
+        "fig2_fperm": lambda: fig2_fperm.run(
+            train_steps=150 if fast else 800,
+            keep_counts=(6,) if fast else (8, 6, 4),
+            finetune_steps=40 if fast else 150),
+        "qps": lambda: qps.run(iters=5 if fast else 20),
+        "freq_error": lambda: freq_error.run(
+            train_steps=100 if fast else 400),
+        "roofline": roofline.run,
+    }
+    if args.only:
+        jobs = {k: v for k, v in jobs.items() if k == args.only}
+
+    for name, job in jobs.items():
+        t0 = time.perf_counter()
+        try:
+            rows = job()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0,error={type(e).__name__}:{e}")
+            continue
+        _emit(name, t0, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Table 2: score-producing cost — F-Permutation vs Permutation (+ the
+training-based methods' cost model).
+
+Measured: wall time of one full scoring pass over the same eval stream,
+on this container.  Extrapolated: the complexity model the paper gives —
+F-P is O(3|DATA|) passes; Permutation is O(|DATA| * N * T); FSCD/LASSO
+need full retraining (|DATA| * epochs).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import make_setup, train_fp32
+from repro.core import permutation, taylor
+
+
+def run(num_fields=10, eval_batches=4, shuffles=2) -> list[dict]:
+    setup = make_setup(num_fields=num_fields, important=5,
+                       train_steps=120)
+    params = train_fp32(setup)
+    batches = [{k: jnp.asarray(v) for k, v in
+                setup.ds.batch(512, 4000 + i).items()}
+               for i in range(eval_batches)]
+
+    # F-Permutation: one moments pass + one fwd/bwd pass
+    t0 = time.perf_counter()
+    scores_fp, _, _ = taylor.fperm_scores(
+        lambda p, b: setup.model.embed(p, b), setup.model.loss_from_emb,
+        params, batches, order=1)
+    jax.block_until_ready(scores_fp)
+    t_fp = time.perf_counter() - t0
+
+    # Permutation: N fields x T shuffles forward passes
+    t0 = time.perf_counter()
+    scores_perm, _ = permutation.permutation_scores(
+        lambda p, b: setup.model.embed(p, b), setup.model.loss_from_emb,
+        params, batches, num_fields, num_shuffles=shuffles,
+        key=jax.random.PRNGKey(0))
+    jax.block_until_ready(scores_perm)
+    t_perm = time.perf_counter() - t0
+
+    # complexity model at paper scale (industrial: N=180 fields, T=10)
+    n_ind, t_ind = 180, 10
+    rows = [
+        {"method": "f_permutation", "measured_s": round(t_fp, 3),
+         "passes": 3,
+         "paper_scale_passes": 3},
+        {"method": "permutation", "measured_s": round(t_perm, 3),
+         "passes": num_fields * shuffles + 1,
+         "paper_scale_passes": n_ind * t_ind + 1},
+        {"method": "fscd/lasso (training-based)", "measured_s": None,
+         "passes": None,
+         "paper_scale_passes": "full retrain (days, Table 2)"},
+    ]
+    rows.append({"method": "speedup f_p vs permutation (measured)",
+                 "measured_s": round(t_perm / max(t_fp, 1e-9), 1),
+                 "passes": None, "paper_scale_passes":
+                 round((n_ind * t_ind + 1) / 3, 1)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

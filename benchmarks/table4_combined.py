@@ -1,0 +1,113 @@
+"""Table 4: combined F-Permutation + F-Quantization.
+
+Pipeline: train fp32 -> F-P prune to ~60% memory -> F-Q quantize the
+surviving tables to ~50% -> combined ~30% of baseline embedding bytes
+with competitive AUC (the paper's 50% x 60% composition).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import eval_auc, make_setup, train_fp32, \
+    train_fquant
+from benchmarks.fig2_fperm import rank_fperm
+from repro.core import FQuantConfig, assign_tiers, memory_bytes
+from repro.core.tiers import fp32_bytes, plan_thresholds_for_ratio
+from repro.core.qat_store import FQuantConfig as FQ
+
+
+def run(train_steps=800, keep=6) -> list[dict]:
+    setup = make_setup(num_fields=10, important=5,
+                       train_steps=train_steps)
+    spec = setup.model.spec
+    table_bytes = np.asarray(spec.table_bytes(), float)
+    rows = []
+
+    params = train_fp32(setup)
+    rows.append({"method": "baseline", "auc": eval_auc(setup, params),
+                 "memory": 1.0})
+
+    # F-P alone: prune to `keep` fields
+    order = rank_fperm(setup, params)
+    mask = np.ones(10, bool)
+    mask[order[:10 - keep]] = False
+    jmask = jnp.asarray(mask.astype(np.float32))
+    params_fp = train_fp32(setup, field_mask=jmask, steps=200,
+                           params=params, seed=3)
+    mem_fp = table_bytes[mask].sum() / table_bytes.sum()
+    rows.append({"method": "f_permutation",
+                 "auc": eval_auc(setup, params_fp, field_mask=jmask),
+                 "memory": round(float(mem_fp), 3)})
+
+    # F-Q alone at ~50%
+    warm = FQuantConfig(tiers=plan_thresholds_for_ratio(
+        jnp.ones(spec.total_rows), spec.dim, 1.0))
+    _, warm_pri = train_fquant(setup, warm, steps=100)
+    fq_cfg = FQ(tiers=plan_thresholds_for_ratio(warm_pri, spec.dim, 0.5))
+    params_fq, pri = train_fquant(setup, fq_cfg)
+    tiers = assign_tiers(pri, fq_cfg.tiers)
+    mem_fq = memory_bytes(tiers, spec.dim) / fp32_bytes(spec.total_rows,
+                                                        spec.dim)
+    rows.append({"method": "f_quantization",
+                 "auc": eval_auc(setup, params_fq),
+                 "memory": round(float(mem_fq), 3)})
+
+    # combined: quantized training on the pruned field set
+    params_both, pri_b = train_fquant_masked(setup, fq_cfg, jmask)
+    tiers_b = assign_tiers(pri_b, fq_cfg.tiers)
+    # memory: only surviving fields' rows, at tiered precision
+    mem_rows = memory_bytes(tiers_b, spec.dim) / fp32_bytes(
+        spec.total_rows, spec.dim)
+    mem_comb = float(mem_rows) * float(mem_fp)
+    rows.append({"method": "f_p + f_q",
+                 "auc": eval_auc(setup, params_both, field_mask=jmask),
+                 "memory": round(mem_comb, 3)})
+    return rows
+
+
+def train_fquant_masked(setup, fq_cfg, field_mask, steps=None, seed=4):
+    """F-Q training with the F-P field mask applied."""
+    import jax
+
+    from repro.core import qat_store as qs
+    from repro.models import embedding as E
+    from repro.optim import rowwise_adagrad
+    from repro.optim.optimizers import apply_updates
+    model = setup.model
+    spec = model.spec
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = rowwise_adagrad(0.05)
+    state = opt.init(params)
+    priority = jnp.zeros((spec.total_rows,), jnp.float32)
+    key = jax.random.PRNGKey(seed + 5)
+
+    @jax.jit
+    def step(params, state, priority, batch, key):
+        def loss(p):
+            emb = model.embed(p, batch, field_mask)
+            return model.loss_from_emb(p, emb, batch).mean()
+        g = jax.grad(loss)(params)
+        upd, state2 = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+        store = qs.QATStore(table=params["embed_table"],
+                            priority=priority)
+        key, sub = jax.random.split(key)
+        store = qs.post_step(store, E.globalize(batch["indices"], spec),
+                             batch["labels"], fq_cfg, key=sub)
+        params = dict(params)
+        params["embed_table"] = store.table
+        return params, state2, store.priority, key
+
+    for i in range(steps or setup.train_steps):
+        b = {k: jnp.asarray(v)
+             for k, v in setup.ds.batch(setup.batch_size, i).items()}
+        params, state, priority, key = step(params, state, priority, b,
+                                            key)
+    return params, priority
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,117 @@
+"""Quickstart: SHARK end to end in ~60 seconds on CPU.
+
+  1. train a small DLRM on synthetic click logs with F-Quantization
+     (priorities + tier snapping in the train step),
+  2. score feature fields with F-Permutation (first-order Taylor),
+  3. prune the weakest fields, finetune,
+  4. pack the table into the tier-partitioned serving store and serve.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FQuantConfig,
+    assign_tiers,
+    auc,
+    compression_ratio,
+    pack,
+    taylor,
+)
+from repro.core import qat_store as qs
+from repro.core.packed_store import lookup as packed_lookup
+from repro.core.tiers import plan_thresholds_for_ratio
+from repro.data.criteo import CriteoConfig, CriteoSynth
+from repro.models import embedding as E
+from repro.models import recsys as R
+from repro.optim import rowwise_adagrad
+from repro.optim.optimizers import apply_updates
+
+
+def main():
+    # ----- data + model -------------------------------------------------
+    ds = CriteoSynth(CriteoConfig(num_fields=10, important_fields=5,
+                                  num_dense=4, noise=0.3))
+    model = R.make_dlrm(R.DLRMConfig(
+        cardinalities=tuple(int(c) for c in ds.cards), embed_dim=16,
+        num_dense=4, bot_mlp=(32, 16), top_mlp=(64, 1)))
+    spec = model.spec
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"model: DLRM, {spec.num_fields} fields, "
+          f"{spec.total_rows:,} embedding rows x {spec.dim}")
+
+    # ----- F-Quantization training (Eq. 5-8) ----------------------------
+    fq = FQuantConfig()           # paper defaults; thresholds planned below
+    opt = rowwise_adagrad(0.05)
+    state = opt.init(params)
+    priority = jnp.zeros((spec.total_rows,), jnp.float32)
+    key = jax.random.PRNGKey(42)
+
+    @jax.jit
+    def train_step(params, state, priority, batch, key, t8, t16):
+        def loss(p):
+            emb = model.embed(p, batch)
+            return model.loss_from_emb(p, emb, batch).mean()
+        l, g = jax.value_and_grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+        cfg = fq._replace(tiers=fq.tiers._replace(t8=t8, t16=t16))
+        store = qs.QATStore(params["embed_table"], priority)
+        key, sub = jax.random.split(key)
+        store = qs.post_step(store, E.globalize(batch["indices"], spec),
+                             batch["labels"], cfg, key=sub)
+        params = dict(params, embed_table=store.table)
+        return params, state, store.priority, key, l
+
+    t8, t16 = -np.inf, -np.inf    # warmup: pure fp32 while priorities form
+    for i in range(600):
+        if i == 100:              # plan thresholds for a 50% memory budget
+            planned = plan_thresholds_for_ratio(priority, spec.dim, 0.5)
+            t8, t16 = planned.t8, planned.t16
+            print(f"planned thresholds t8={t8:.3g} t16={t16:.3g}")
+        b = {k: jnp.asarray(v) for k, v in ds.batch(512, i).items()}
+        params, state, priority, key, l = train_step(
+            params, state, priority, b, key, t8, t16)
+    tiers = assign_tiers(priority, planned)
+    print(f"train loss {float(l):.4f}; memory at "
+          f"{compression_ratio(tiers, spec.dim):.1%} of fp32")
+
+    # ----- F-Permutation field scores (Eq. 4) ---------------------------
+    eval_batches = [{k: jnp.asarray(v) for k, v in
+                     ds.batch(512, 9000 + i).items()} for i in range(4)]
+    scores, _, _ = taylor.fperm_scores(
+        lambda p, b: model.embed(p, b), model.loss_from_emb, params,
+        eval_batches)
+    order = np.argsort(np.asarray(scores))
+    print("field importance (least->most):", order.tolist())
+    print("planted-dead fields          :",
+          sorted(ds.lossless_fields().tolist()))
+
+    # prune the 3 weakest, finetune briefly
+    mask = np.ones(10, np.float32)
+    mask[order[:3]] = 0.0
+    jmask = jnp.asarray(mask)
+    for i in range(150):
+        b = {k: jnp.asarray(v) for k, v in ds.batch(512, 700 + i).items()}
+        params, state, priority, key, l = train_step(
+            params, state, priority, b, key, t8, t16)
+
+    # ----- pack + serve ---------------------------------------------------
+    store = qs.QATStore(params["embed_table"], priority)
+    packed = pack(store, fq._replace(tiers=planned, stochastic=False))
+    print(f"packed store: {packed.nbytes() / 2**20:.1f} MiB "
+          f"(fp32 would be {spec.total_rows * spec.dim * 4 / 2**20:.1f})")
+
+    test = {k: jnp.asarray(v) for k, v in ds.batch(4096, 12345).items()}
+    emb = packed_lookup(packed, E.globalize(test["indices"], spec))
+    emb = emb * jmask[None, :, None]
+    logits = model.head(params, emb, test)
+    print(f"serving AUC from the packed store: "
+          f"{float(auc(logits, test['labels'])):.4f}")
+
+
+if __name__ == "__main__":
+    main()

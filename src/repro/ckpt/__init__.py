@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing (atomic, versioned, async)."""
+
+from repro.ckpt.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,37 @@
+"""One config per assigned architecture.  ``get(name)`` returns an Arch.
+
+    from repro import configs
+    arch = configs.get("dlrm-rm2")
+    for shape in arch.cells():
+        fn, args, specs = arch.lowerable(shape)
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    # LM family
+    "smollm-135m": "repro.configs.smollm_135m",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    # GNN
+    "pna": "repro.configs.pna",
+    # recsys
+    "wide-deep": "repro.configs.wide_deep",
+    "bert4rec": "repro.configs.bert4rec",
+    "xdeepfm": "repro.configs.xdeepfm",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+}
+
+
+def get(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name]).arch()
+
+
+def names() -> list[str]:
+    return list(ARCHS)

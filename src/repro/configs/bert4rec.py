@@ -1,0 +1,26 @@
+"""bert4rec [recsys]: embed_dim=64 n_blocks=2 n_heads=2 seq_len=200
+interaction=bidir-seq [arXiv:1904.06690].
+
+Item vocabulary sized for an industrial catalogue (5M items).  Field
+pruning is degenerate here (fields = {item table, position table});
+F-Quantization applies to the zipf-accessed item rows — the ideal case.
+"""
+
+from repro.configs.common import RecsysArch
+from repro.models import recsys as R
+
+NUM_ITEMS = 5_000_002          # + [MASK] + [PAD]
+SEQ_LEN = 200
+
+FULL_CFG = R.Bert4RecConfig(num_items=NUM_ITEMS, embed_dim=64,
+                            n_blocks=2, n_heads=2, seq_len=SEQ_LEN)
+
+SMOKE_CFG = R.Bert4RecConfig(num_items=502, embed_dim=32, n_blocks=2,
+                             n_heads=2, seq_len=32)
+
+
+def arch() -> RecsysArch:
+    return RecsysArch(name="bert4rec",
+                      model=R.make_bert4rec(FULL_CFG),
+                      smoke_model=R.make_bert4rec(SMOKE_CFG),
+                      seq_model=True, seq_len=SEQ_LEN)

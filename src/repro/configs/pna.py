@@ -1,0 +1,15 @@
+"""pna [gnn]: n_layers=4 d_hidden=75 aggregators=mean-max-min-std
+scalers=id-amp-atten [arXiv:2004.05718].
+
+Shapes: full_graph_sm (Cora-like), minibatch_lg (Reddit-like, sampled,
+with a 232k-row learned node-embedding table — the F-Quantization
+surface), ogb_products (full-batch large), molecule (batched small
+graphs).  F-Permutation is inapplicable (no feature fields) — DESIGN.md
+§Arch-applicability.
+"""
+
+from repro.configs.common import GNNArch
+
+
+def arch() -> GNNArch:
+    return GNNArch(name="pna", d_hidden=75, n_layers=4)

@@ -1,0 +1,24 @@
+"""qwen3-8b [dense]: 36L d_model=4096 32H (GQA kv=8) d_ff=12288
+vocab=151936 — qk_norm, GQA [hf:Qwen/Qwen3-8B].
+
+Pure full attention -> long_500k skipped (DESIGN.md §Arch-applicability).
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.common import LMArch
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="qwen3-8b", n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    head_dim=128, d_ff=12288, vocab=151936, qk_norm=True,
+    rope_theta=1e6, compute_dtype=jnp.bfloat16, max_seq=32768)
+
+SMOKE = LMConfig(
+    name="qwen3-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    head_dim=16, d_ff=128, vocab=512, qk_norm=True, max_seq=64)
+
+
+def arch() -> LMArch:
+    return LMArch(name="qwen3-8b", lm_cfg=FULL, smoke_cfg=SMOKE,
+                  supports_long=False)

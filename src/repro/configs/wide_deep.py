@@ -1,0 +1,25 @@
+"""wide-deep [recsys]: n_sparse=40 embed_dim=32 mlp=1024-512-256
+interaction=concat [arXiv:1606.07792]."""
+
+from repro.configs.common import RecsysArch
+from repro.data.criteo import CriteoConfig, CriteoSynth
+from repro.models import recsys as R
+
+# 40 sparse fields: app-store-like id spaces (the paper's domain) —
+# a few large id fields + many small categorical ones
+CARDS = tuple([10_000_000, 10_000_000, 1_000_000, 1_000_000, 100_000]
+              + [10_000] * 10 + [1_000] * 15 + [100] * 10)
+assert len(CARDS) == 40
+
+FULL_CFG = R.WideDeepConfig(cardinalities=CARDS, embed_dim=32,
+                            mlp=(1024, 512, 256))
+
+_smoke_ds = CriteoSynth(CriteoConfig(num_fields=8, important_fields=4))
+SMOKE_CFG = R.WideDeepConfig(
+    cardinalities=tuple(int(c) for c in _smoke_ds.cards), embed_dim=8,
+    mlp=(32, 16))
+
+
+def arch() -> RecsysArch:
+    return RecsysArch(name="wide-deep", model=R.make_wide_deep(FULL_CFG),
+                      smoke_model=R.make_wide_deep(SMOKE_CFG))

@@ -1,0 +1,28 @@
+"""xdeepfm [recsys]: n_sparse=39 embed_dim=10 cin_layers=200-200-200
+mlp=400-400 interaction=cin [arXiv:1803.05170].
+
+39 fields = Criteo 26 categorical + 13 bucketized-dense (the paper's
+setup).  The CIN layer is the compute hot spot -> repro/kernels/cin.
+"""
+
+from repro.configs.common import RecsysArch
+from repro.data.criteo import CriteoConfig, CriteoSynth
+from repro.models import recsys as R
+
+CARDS = tuple([40_000_000, 40_000_000, 5_000_000, 1_000_000, 500_000,
+               100_000, 50_000, 20_000, 10_000, 5_000]
+              + [2_000] * 10 + [500] * 6 + [100] * 10 + [50] * 3)
+assert len(CARDS) == 39
+
+FULL_CFG = R.XDeepFMConfig(cardinalities=CARDS, embed_dim=10,
+                           cin_layers=(200, 200, 200), mlp=(400, 400))
+
+_smoke_ds = CriteoSynth(CriteoConfig(num_fields=8, important_fields=4))
+SMOKE_CFG = R.XDeepFMConfig(
+    cardinalities=tuple(int(c) for c in _smoke_ds.cards), embed_dim=6,
+    cin_layers=(16, 16), mlp=(32,))
+
+
+def arch() -> RecsysArch:
+    return RecsysArch(name="xdeepfm", model=R.make_xdeepfm(FULL_CFG),
+                      smoke_model=R.make_xdeepfm(SMOKE_CFG))

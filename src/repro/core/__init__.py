@@ -1,0 +1,51 @@
+"""SHARK core: F-Permutation (Eq. 1-4, Alg. 1) + F-Quantization (Eq. 5-8).
+
+Public API re-exported here; submodules hold the implementations:
+
+  rowwise_quant  Eq. 5-6 quant/dequant + stochastic rounding
+  priority       Eq. 7 frequency-based row priority EMA
+  tiers          Eq. 8 tier assignment + memory accounting
+  qat_store      training-side quantization-aware table store
+  packed_store   serving-side tier-partitioned physical store
+  taylor         Eq. 4 first/second-order field importance
+  permutation    the original Permutation baseline (Eq. 1-3)
+  pruning        Algorithm 1 iterative prune-finetune loop
+  metrics        exact AUC, BCE, cross-entropy
+  baselines      MPE / ALPT / uniform / LASSO / Gumbel competitors
+"""
+
+from repro.core.metrics import auc, bce_with_logits, softmax_xent  # noqa: F401
+from repro.core.packed_store import PackedStore, pack  # noqa: F401
+from repro.core.packed_store import bag_lookup as packed_bag_lookup  # noqa: F401
+from repro.core.packed_store import lookup as packed_lookup  # noqa: F401
+from repro.core.priority import (  # noqa: F401
+    PriorityConfig,
+    batch_counts,
+    priority_update,
+    priority_update_from_batch,
+)
+from repro.core.pruning import (  # noqa: F401
+    PruneConfig,
+    PruneResult,
+    prune_loop,
+    rank_correlation,
+)
+from repro.core.qat_store import FQuantConfig, QATStore  # noqa: F401
+from repro.core.rowwise_quant import (  # noqa: F401
+    dequantize_rowwise,
+    fake_quant_half,
+    fake_quant_rowwise,
+    quantize_half,
+    quantize_rowwise,
+    stochastic_round,
+)
+from repro.core.taylor import FieldMoments, field_moments, fperm_scores  # noqa: F401
+from repro.core.tiers import (  # noqa: F401
+    Tier,
+    TierConfig,
+    assign_tiers,
+    compression_ratio,
+    memory_bytes,
+    plan_thresholds_for_ratio,
+    tier_counts,
+)

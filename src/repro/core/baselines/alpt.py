@@ -1,0 +1,107 @@
+"""ALPT: Adaptive Low-Precision Training (Li et al. [9]).
+
+Learns the quantization scale by gradient descent.  The embedding table is
+stored int8; at lookup rows are dequantized with a learnable scale s, and s
+receives gradients through the straight-through estimator:
+
+    e_dq = s * clip(round_sr(e / s), Imin, Imax)
+    de_dq/ds ~= q  - (e/s) * 1[|e/s| <= Imax]   (STE through round)
+
+We keep a per-row scale (the paper's finest granularity) stored fp32.
+Value-space QAT representation like qat_store: the fp32 buffer always holds
+s * q exactly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rowwise_quant as rq
+
+Array = jax.Array
+
+
+class ALPTConfig(NamedTuple):
+    bits: int = 8
+    scale_lr: float = 1e-4
+    init_scale: float = 1e-2
+
+
+class ALPTState(NamedTuple):
+    q: Array        # int8[V, D] payload
+    scale: Array    # fp32[V, 1] learnable
+
+
+def init(key: Array, vocab: int, dim: int, cfg: ALPTConfig,
+         init_std: float = 0.01) -> ALPTState:
+    table = jax.random.normal(key, (vocab, dim), jnp.float32) * init_std
+    scale = jnp.full((vocab, 1), cfg.init_scale, jnp.float32)
+    imin, imax = rq.int_range(cfg.bits)
+    q = jnp.clip(jnp.round(table / scale), imin, imax).astype(jnp.int8)
+    return ALPTState(q=q, scale=scale)
+
+
+def dequant(state: ALPTState) -> Array:
+    return state.q.astype(jnp.float32) * state.scale
+
+
+def lookup(state: ALPTState, indices: Array) -> Array:
+    q = jnp.take(state.q, indices, axis=0).astype(jnp.float32)
+    s = jnp.take(state.scale, indices, axis=0)
+    return q * s
+
+
+@jax.custom_vjp
+def ste_quant(e: Array, scale: Array, bits: int = 8) -> Array:
+    imin, imax = rq.int_range(bits)
+    q = jnp.clip(jnp.round(e / scale), imin, imax)
+    return scale * q
+
+
+def _ste_fwd(e, scale, bits=8):
+    imin, imax = rq.int_range(bits)
+    x = e / scale
+    q = jnp.clip(jnp.round(x), imin, imax)
+    return scale * q, (x, q, scale, imin, imax)
+
+
+def _ste_bwd(res, g):
+    x, q, scale, imin, imax = res
+    inside = ((x >= imin) & (x <= imax)).astype(g.dtype)
+    de = g * inside                                  # STE through round
+    # d(s*q)/ds = q - x * 1[inside]  (ALPT Eq.; gradient w.r.t. scale)
+    ds = (g * (q - x * inside)).sum(axis=-1, keepdims=True)
+    return de, ds, None
+
+
+ste_quant.defvjp(_ste_fwd, _ste_bwd)
+
+
+def apply_grads(state: ALPTState, grad_rows: Array, indices: Array,
+                lr: float, cfg: ALPTConfig, key: Array) -> ALPTState:
+    """SGD on touched rows with stochastic re-quantization + scale update."""
+    idx = indices.reshape(-1)
+    g = grad_rows.reshape(-1, grad_rows.shape[-1])
+    v = state.q.shape[0]
+    gsum = jax.ops.segment_sum(g, idx, num_segments=v)
+
+    e = dequant(state)
+    # scale gradient via the STE formula, accumulated over the batch
+    imin, imax = rq.int_range(cfg.bits)
+    x = e / state.scale
+    inside = ((x >= imin) & (x <= imax)).astype(jnp.float32)
+    ds = (gsum * (state.q.astype(jnp.float32) - x * inside)
+          ).sum(axis=-1, keepdims=True)
+    new_scale = jnp.maximum(state.scale - cfg.scale_lr * ds, 1e-8)
+
+    new_e = e - lr * gsum
+    xq = new_e / new_scale
+    q = jnp.clip(rq.stochastic_round(xq, key), imin, imax).astype(jnp.int8)
+    return ALPTState(q=q, scale=new_scale)
+
+
+def memory_bytes(vocab: int, dim: int, cfg: ALPTConfig) -> int:
+    return vocab * dim * cfg.bits // 8 + vocab * 4

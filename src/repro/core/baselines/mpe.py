@@ -1,0 +1,87 @@
+"""Mixed-Precision Embedding with a full-precision cache (Yang et al. [32]).
+
+The baseline SHARK's F-Quantization is compared against in Table 3.  The
+original keeps a host-side LFU/LRU cache of hot rows at fp32 and the
+backing table at low precision.  A hash-map cache has data-dependent
+shapes, so on TPU we realise the *same semantics* with static shapes:
+
+  * priority = LFU (cumulative access count) or LRU (last-access step) —
+    note: unlike SHARK Eq. 7, no positive/negative weighting, no decay.
+  * the C highest-priority rows are "in cache" -> fp32; all others int8.
+
+The cache membership is refreshed every ``refresh_every`` steps (top-C by
+priority), mirroring cache churn.  Memory accounting: C*4D + (V-C)*D bytes
+(+ scales), which at the paper's 55% memory point corresponds to C ~ 0.18V.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rowwise_quant as rq
+
+Array = jax.Array
+
+
+class MPEConfig(NamedTuple):
+    capacity: int              # C: rows kept at fp32
+    policy: str = "lfu"        # "lfu" | "lru"
+    bits: int = 8
+    refresh_every: int = 1
+
+
+class MPEState(NamedTuple):
+    table: Array       # fp32[V, D] value-space (tier-exact, like QATStore)
+    priority: Array    # fp32[V]  LFU count or LRU last-step
+    in_cache: Array    # bool[V]
+    step: Array        # ()
+
+
+def init(key: Array, vocab: int, dim: int, cfg: MPEConfig,
+         scale: float = 0.01) -> MPEState:
+    table = jax.random.normal(key, (vocab, dim), jnp.float32) * scale
+    pri = jnp.zeros((vocab,), jnp.float32)
+    in_cache = jnp.zeros((vocab,), bool).at[:cfg.capacity].set(True)
+    return MPEState(table, pri, in_cache, jnp.zeros((), jnp.int32))
+
+
+def _touch(state: MPEState, indices: Array, cfg: MPEConfig) -> Array:
+    idx = indices.reshape(-1)
+    if cfg.policy == "lfu":
+        hits = jax.ops.segment_sum(jnp.ones_like(idx, jnp.float32), idx,
+                                   num_segments=state.priority.shape[0])
+        return state.priority + hits
+    # lru: last access step
+    return state.priority.at[idx].set(state.step.astype(jnp.float32))
+
+
+def post_step(state: MPEState, indices: Array, cfg: MPEConfig,
+              key: Array | None = None) -> MPEState:
+    """Update priorities, refresh cache membership, snap non-cached rows."""
+    pri = _touch(state, indices, cfg)
+    step = state.step + 1
+
+    def refresh(_):
+        # top-C rows by priority are cached
+        thresh = -jnp.sort(-pri)[cfg.capacity - 1] if cfg.capacity > 0 \
+            else jnp.inf
+        return pri >= thresh
+
+    in_cache = jax.lax.cond(step % cfg.refresh_every == 0, refresh,
+                            lambda _: state.in_cache, operand=None)
+    snapped = rq.fake_quant_rowwise(state.table, cfg.bits, key=key)
+    table = jnp.where(in_cache[:, None], state.table, snapped)
+    return MPEState(table, pri, in_cache, step)
+
+
+def lookup(state: MPEState, indices: Array) -> Array:
+    return jnp.take(state.table, indices, axis=0)
+
+
+def memory_bytes(vocab: int, dim: int, cfg: MPEConfig) -> int:
+    cached = cfg.capacity * dim * 4
+    backing = (vocab - cfg.capacity) * (dim * cfg.bits // 8 + 4)
+    return cached + backing + vocab * 4  # + membership word

@@ -1,0 +1,35 @@
+"""Uniform-precision quantized training baselines (Table 3 context rows).
+
+"fp16 with stochastic rounding" and "int8 with stochastic rounding"
+(Zhang et al. [34] style): every row of every table at one precision.
+Realised as a degenerate F-Quantization tier config, which keeps the code
+path identical and is itself a consistency check on the tier machinery.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qat_store import FQuantConfig
+from repro.core.tiers import TierConfig
+
+Array = jax.Array
+
+
+def all_int8_config(**kw) -> FQuantConfig:
+    # t8 = +inf: every priority falls below it -> everything int8
+    return FQuantConfig(tiers=TierConfig(t8=jnp.inf, t16=jnp.inf), **kw)
+
+
+def all_half_config(**kw) -> FQuantConfig:
+    # t8 = -inf, t16 = +inf -> everything half
+    return FQuantConfig(tiers=TierConfig(t8=-jnp.inf, t16=jnp.inf), **kw)
+
+
+def all_fp32_config(**kw) -> FQuantConfig:
+    return FQuantConfig(tiers=TierConfig(t8=-jnp.inf, t16=-jnp.inf), **kw)
+
+
+def memory_fraction(config_name: str) -> float:
+    return {"int8": 0.25, "half": 0.5, "fp32": 1.0}[config_name]

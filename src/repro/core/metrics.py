@@ -1,0 +1,69 @@
+"""Loss and metric utilities (pure JAX, exact).
+
+AUC is the paper's quality metric (Tables 3-4).  We compute it exactly via
+the rank-sum (Mann-Whitney U) identity with average ranks for ties, instead
+of a binned approximation — eval sets here are small enough and exactness
+keeps the 0.15%-drop guard meaningful.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def bce_with_logits(logits: Array, labels: Array) -> Array:
+    """Per-sample binary cross entropy; logits/labels same shape."""
+    return (jnp.maximum(logits, 0.0) - logits * labels
+            + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def softmax_xent(logits: Array, labels: Array) -> Array:
+    """Per-position cross entropy.  logits (..., V), labels int (...)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def auc(scores: Array, labels: Array, valid: Array | None = None) -> Array:
+    """Exact ROC-AUC with tie correction.  scores/labels: (N,)."""
+    scores = scores.reshape(-1).astype(jnp.float32)
+    labels = labels.reshape(-1).astype(jnp.float32)
+    if valid is not None:
+        v = valid.reshape(-1).astype(bool)
+        # push invalid entries to -inf with label 0 weight 0 via masking
+        w = v.astype(jnp.float32)
+    else:
+        w = jnp.ones_like(labels)
+    order = jnp.argsort(scores)
+    s_sorted = scores[order]
+    l_sorted = labels[order] * w[order]
+    w_sorted = w[order]
+    n = scores.shape[0]
+    # dense 1-based ranks among valid entries, tie-averaged below
+    cum_w = jnp.cumsum(w_sorted)
+    rank = cum_w  # 1-based dense rank among valid
+    # tie-average: group equal scores
+    same_as_prev = jnp.concatenate(
+        [jnp.array([False]), s_sorted[1:] == s_sorted[:-1]])
+    # segment ids for tie groups
+    group = jnp.cumsum(~same_as_prev) - 1
+    num_groups = n
+    g_sum = jax.ops.segment_sum(rank * w_sorted, group, num_segments=num_groups)
+    g_cnt = jax.ops.segment_sum(w_sorted, group, num_segments=num_groups)
+    g_mean = jnp.where(g_cnt > 0, g_sum / jnp.maximum(g_cnt, 1.0), 0.0)
+    avg_rank = g_mean[group]
+    n_pos = jnp.sum(l_sorted)
+    n_tot = jnp.sum(w_sorted)
+    n_neg = n_tot - n_pos
+    rank_sum_pos = jnp.sum(avg_rank * l_sorted)
+    u = rank_sum_pos - n_pos * (n_pos + 1.0) / 2.0
+    denom = jnp.maximum(n_pos * n_neg, 1.0)
+    return (u / denom).astype(jnp.float32)
+
+
+def accuracy(scores: Array, labels: Array, threshold: float = 0.0) -> Array:
+    pred = (scores > threshold).astype(jnp.float32)
+    return jnp.mean((pred == labels).astype(jnp.float32))

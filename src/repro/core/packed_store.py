@@ -1,0 +1,142 @@
+"""Tier-partitioned serving store for F-Quantization (TPU adaptation).
+
+The paper prepends per-row "extra words" (precision tag, dim, scale —
+Table 1) and stores rows at heterogeneous widths in one buffer.  That
+layout needs per-row pointer chasing, which defeats the TPU's vectorised
+HBM->VMEM DMA.  We instead *partition rows by tier* into three dense
+arrays and keep a single int32 indirection word per row:
+
+    payload8   int8 [V8,  D]   + scale8  fp32[V8]
+    payload16  bf16 [V16, D]   + scale16 fp32[V16]   (fp16 if strict)
+    payload32  fp32 [V32, D]
+    indirect   int32[V]        code = tier << 28 | local_index
+
+Memory arithmetic matches tiers.memory_bytes().  Packing happens offline
+(numpy, data-dependent shapes); lookup is jitable with static shapes and is
+the hot path behind the paper's +30% QPS (fused Pallas kernel in
+repro/kernels/dequant_bag).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rowwise_quant as rq
+from repro.core.qat_store import FQuantConfig, QATStore, current_tiers
+from repro.core.tiers import Tier
+
+Array = jax.Array
+
+_TIER_SHIFT = 28
+_IDX_MASK = (1 << _TIER_SHIFT) - 1
+
+
+class PackedStore(NamedTuple):
+    payload8: Array    # int8 [V8, D]
+    scale8: Array      # fp32 [V8]
+    payload16: Array   # bf16/fp16 [V16, D]
+    scale16: Array     # fp32 [V16]
+    payload32: Array   # fp32 [V32, D]
+    indirect: Array    # int32 [V]
+
+    @property
+    def vocab(self) -> int:
+        return self.indirect.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.payload32.shape[-1]
+
+    def nbytes(self) -> int:
+        total = 0
+        for leaf in self:
+            total += leaf.size * leaf.dtype.itemsize
+        return int(total)
+
+
+def pack(store: QATStore, cfg: FQuantConfig) -> PackedStore:
+    """Offline pack (numpy): partition rows by tier, quantize payloads."""
+    table = np.asarray(store.table, np.float32)
+    tiers = np.asarray(current_tiers(store, cfg))
+    dim = table.shape[1]
+    half_dtype = np.float16 if cfg.strict_fp16 else jnp.bfloat16
+
+    idx8 = np.nonzero(tiers == Tier.INT8.value)[0]
+    idx16 = np.nonzero(tiers == Tier.HALF.value)[0]
+    idx32 = np.nonzero(tiers == Tier.FP32.value)[0]
+
+    # int8 tier: RTN at pack time (serving path; paper Eq. 5-6)
+    rows8 = table[idx8] if idx8.size else np.zeros((1, dim), np.float32)
+    q8, s8 = rq.quantize_rowwise(jnp.asarray(rows8), cfg.bits, mode=cfg.mode)
+    q8, s8 = np.asarray(q8), np.asarray(s8)[:, 0]
+
+    rows16 = table[idx16] if idx16.size else np.zeros((1, dim), np.float32)
+    q16, s16 = rq.quantize_half(jnp.asarray(rows16),
+                                strict_fp16=cfg.strict_fp16,
+                                scaled=cfg.scaled_half)
+    q16 = np.asarray(q16.astype(half_dtype))
+    s16 = np.asarray(s16)[:, 0]
+
+    rows32 = table[idx32] if idx32.size else np.zeros((1, dim), np.float32)
+
+    indirect = np.zeros(table.shape[0], np.int32)
+    for tier, idx in ((Tier.INT8, idx8), (Tier.HALF, idx16),
+                      (Tier.FP32, idx32)):
+        indirect[idx] = (int(tier.value) << _TIER_SHIFT) | np.arange(
+            idx.size, dtype=np.int32)
+
+    return PackedStore(
+        payload8=jnp.asarray(q8), scale8=jnp.asarray(s8, jnp.float32),
+        payload16=jnp.asarray(q16), scale16=jnp.asarray(s16, jnp.float32),
+        payload32=jnp.asarray(rows32, jnp.float32),
+        indirect=jnp.asarray(indirect))
+
+
+def lookup(packed: PackedStore, indices: Array) -> Array:
+    """Gather + inline dequant.  indices: int (...,) -> fp32 (..., D).
+
+    Three tier-local gathers + select.  The Pallas kernel in
+    repro/kernels/dequant_bag fuses this with the bag reduction; this jnp
+    version is its oracle and the XLA fallback.
+    """
+    code = jnp.take(packed.indirect, indices, axis=0)
+    tier = code >> _TIER_SHIFT
+    loc = code & _IDX_MASK
+
+    v8 = packed.payload8.shape[0]
+    v16 = packed.payload16.shape[0]
+    v32 = packed.payload32.shape[0]
+    l8 = jnp.clip(loc, 0, v8 - 1)
+    l16 = jnp.clip(loc, 0, v16 - 1)
+    l32 = jnp.clip(loc, 0, v32 - 1)
+
+    e8 = (jnp.take(packed.payload8, l8, axis=0).astype(jnp.float32)
+          * jnp.take(packed.scale8, l8, axis=0)[..., None])
+    e16 = (jnp.take(packed.payload16, l16, axis=0).astype(jnp.float32)
+           * jnp.take(packed.scale16, l16, axis=0)[..., None])
+    e32 = jnp.take(packed.payload32, l32, axis=0)
+
+    t = tier[..., None]
+    return jnp.where(t == Tier.INT8.value, e8,
+                     jnp.where(t == Tier.HALF.value, e16, e32))
+
+
+def unpack(packed: PackedStore) -> Array:
+    """Full dequantized table fp32[V, D] (round-trip check vs QAT snap)."""
+    return lookup(packed, jnp.arange(packed.vocab))
+
+
+def bag_lookup(packed: PackedStore, indices: Array, segment_ids: Array,
+               num_bags: int, weights: Array | None = None) -> Array:
+    """EmbeddingBag over the packed store: sum rows per bag.
+
+    indices, segment_ids: flat (L,); returns (num_bags, D).
+    """
+    rows = lookup(packed, indices)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)

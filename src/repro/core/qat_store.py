@@ -1,0 +1,165 @@
+"""Quantization-aware training store for F-Quantization.
+
+Training-side representation of a SHARK-compressed embedding table.  The
+physical buffer stays fp32[V, D] (uniform dtype keeps the row-wise adagrad
+update vectorised), but after every optimizer step each row is *snapped* to
+the representable set of its tier (int8 grid with stochastic rounding /
+half cast / identity), so the values the model ever sees are bit-identical
+to what the packed serving store would produce.  This is the paper's
+low-precision-training semantics: weights are stored low-precision and
+updated via stochastic rounding; there is no fp32 master copy for
+low-tier rows.
+
+State carried per table (a pytree, so it shards/jits/checkpoints like any
+other param):
+
+    table    fp32[V, D]   tier-exact values
+    priority fp32[V]      Eq. 7 EMA scores (non-differentiable)
+
+The per-batch update path is:
+
+    lookup -> model fwd/bwd -> optimizer delta on fp32 rows
+      -> priority_update (Eq. 7)  -> assign_tiers (Eq. 8)
+      -> snap(table, tiers, rng)  (Eq. 5-6 per tier)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rowwise_quant as rq
+from repro.core.priority import PriorityConfig, priority_update_from_batch
+from repro.core.tiers import Tier, TierConfig, assign_tiers
+
+Array = jax.Array
+
+
+class FQuantConfig(NamedTuple):
+    """Full F-Quantization hyper-parameter set (paper defaults)."""
+    tiers: TierConfig = TierConfig(t8=1e3, t16=1e5)
+    priority: PriorityConfig = PriorityConfig(alpha=2.0, beta=0.99)
+    bits: int = 8
+    mode: str = "narrow"        # idempotent; "full" = literal Eq. 6
+    strict_fp16: bool = False   # True -> IEEE fp16 half tier (paper parity)
+    scaled_half: bool = True    # row-normalised half tier
+    stochastic: bool = True     # stochastic rounding on the write path
+
+
+class QATStore(NamedTuple):
+    """One embedding table under F-Quantization training."""
+    table: Array      # fp32[V, D], tier-exact values
+    priority: Array   # fp32[V]
+
+    @property
+    def vocab(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.table.shape[1]
+
+
+def init(key: Array, vocab: int, dim: int, scale: float = 0.01,
+         init_priority: float = 0.0) -> QATStore:
+    table = jax.random.normal(key, (vocab, dim), jnp.float32) * scale
+    pri = jnp.full((vocab,), init_priority, jnp.float32)
+    return QATStore(table=table, priority=pri)
+
+
+def snap(table: Array, tiers: Array, cfg: FQuantConfig,
+         key: Array | None = None) -> Array:
+    """Project each row onto its tier's representable value set."""
+    sr_key = key if (cfg.stochastic and key is not None) else None
+    q8 = rq.fake_quant_rowwise(table, cfg.bits, key=sr_key, mode=cfg.mode)
+    qh = rq.fake_quant_half(table, strict_fp16=cfg.strict_fp16,
+                            scaled=cfg.scaled_half)
+    t = tiers[:, None]
+    return jnp.where(t == Tier.INT8.value, q8,
+                     jnp.where(t == Tier.HALF.value, qh, table))
+
+
+def post_step(store: QATStore, indices: Array, labels: Array,
+              cfg: FQuantConfig, key: Array | None = None,
+              valid: Array | None = None) -> QATStore:
+    """Priority EMA + tier re-assignment + snap, after an optimizer step."""
+    pri = priority_update_from_batch(store.priority, indices, labels,
+                                     cfg.priority, valid=valid)
+    tiers = assign_tiers(pri, cfg.tiers)
+    table = snap(store.table, tiers, cfg, key)
+    return QATStore(table=table, priority=pri)
+
+
+def _hash_uniform(idx: Array, seed: Array, dim: int) -> Array:
+    """Deterministic per-(row, seed) uniforms for sparse stochastic
+    rounding: duplicate row indices in a batch produce identical noise, so
+    scattering the same snapped row twice is write-order independent."""
+    i = idx.astype(jnp.uint32)[:, None]
+    j = jnp.arange(dim, dtype=jnp.uint32)[None, :]
+    h = (i * jnp.uint32(2654435761) ^ (j * jnp.uint32(40503))
+         ^ seed.astype(jnp.uint32))
+    h = (h ^ (h >> 15)) * jnp.uint32(0x2C1B3C6D)
+    h = (h ^ (h >> 12)) * jnp.uint32(0x297A2D39)
+    h = h ^ (h >> 15)
+    return h.astype(jnp.float32) / jnp.float32(2 ** 32)
+
+
+def post_step_sparse(store: QATStore, indices: Array, labels: Array,
+                     cfg: FQuantConfig, seed: Array,
+                     valid: Array | None = None) -> QATStore:
+    """Touched-rows-only write path (beyond-paper memory optimisation).
+
+    Eq. 7 decays every row's priority (an O(V) vector op — kept), but the
+    Eq. 5-6 snap only rewrites rows the batch actually touched: the batch
+    touches <=B*F rows of a ~1e8-row table, so HBM write traffic drops by
+    ~V/(B*F) (~100x at the dlrm-rm2 train_batch shape).  Untouched rows
+    keep their previous (possibly higher-precision) values until next
+    touch or serving-time pack — steady-state semantics are identical;
+    transiently the table is only *more* accurate.
+    """
+    pri = priority_update_from_batch(store.priority, indices, labels,
+                                     cfg.priority, valid=valid)
+    tiers = assign_tiers(pri, cfg.tiers)
+    flat = indices.reshape(-1)
+    rows = jnp.take(store.table, flat, axis=0)
+    row_tiers = jnp.take(tiers, flat, axis=0)
+    if cfg.stochastic:
+        noise = _hash_uniform(flat, seed, store.dim)
+        q8 = rq.dequantize_rowwise(*_sr_quant(rows, noise, cfg))
+    else:
+        q8 = rq.fake_quant_rowwise(rows, cfg.bits, mode=cfg.mode)
+    qh = rq.fake_quant_half(rows, strict_fp16=cfg.strict_fp16,
+                            scaled=cfg.scaled_half)
+    t = row_tiers[:, None]
+    snapped = jnp.where(t == Tier.INT8.value, q8,
+                        jnp.where(t == Tier.HALF.value, qh, rows))
+    table = store.table.at[flat].set(snapped.astype(store.table.dtype))
+    return QATStore(table=table, priority=pri)
+
+
+def _sr_quant(rows: Array, noise: Array, cfg: FQuantConfig):
+    imin, imax = rq.int_range(cfg.bits)
+    scale = rq.rowwise_scale(rows, cfg.bits, cfg.mode).astype(jnp.float32)
+    y = rows.astype(jnp.float32) / scale
+    lo = jnp.floor(y)
+    r = jnp.clip(lo + (noise < (y - lo)), imin, imax)
+    return r.astype(jnp.int8), scale
+
+
+def lookup(store: QATStore, indices: Array) -> Array:
+    """Plain gather; rows are already tier-exact."""
+    return jnp.take(store.table, indices, axis=0)
+
+
+def current_tiers(store: QATStore, cfg: FQuantConfig) -> Array:
+    return assign_tiers(store.priority, cfg.tiers)
+
+
+def quantization_error(store: QATStore, cfg: FQuantConfig) -> Array:
+    """Row-wise |snap(x) - x| with RTN — diagnostic for Fig. 3-style sweeps."""
+    tiers = current_tiers(store, cfg)
+    rtn_cfg = cfg._replace(stochastic=False)
+    snapped = snap(store.table, tiers, rtn_cfg, key=None)
+    return jnp.abs(snapped - store.table).max(axis=-1)

@@ -1,0 +1,164 @@
+"""F-Permutation table-wise importance scores (SHARK Eq. 4).
+
+The Permutation test (Fisher et al. 2019) scores field i by the expected
+loss increase when its value is resampled from the dataset marginal.  SHARK
+approximates it with the first-order Taylor expansion around the sample's
+own embedding e_i(x):
+
+    error(i, x) = dLoss/de_i(x) . (E[e_i] - e_i(x))             (Eq. 4)
+    score(i)    = mean_x error(i, x)                            (Eq. 2-3)
+
+Complexity O(3|DATA|): one pass for the field means E[e_i] (lookup only),
+one forward+backward for the gradients.  The model is *not* modified — no
+new parameters, no new structure (the paper's key operational advantage
+over FSCD / AutoField / LASSO).
+
+Interface contract (satisfied by every recsys model in repro.models):
+
+    embed_fn(params, batch)            -> emb (B, F, D)
+    loss_fn(params, emb, batch)        -> per-sample loss (B,)
+
+The second-order variant the paper mentions ("performance similar, cost
+higher") is also provided: it adds  1/2 E[(v'-v)^T H (v'-v)]  estimated as
+the mean-shift curvature term plus a Hutchinson trace of H against the
+field covariance.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+EmbedFn = Callable[..., Array]
+LossFn = Callable[..., Array]
+
+
+class FieldMoments(NamedTuple):
+    mean: Array      # (F, D)  E[e_i]
+    sq_mean: Array   # (F, D)  E[e_i^2]  (second-order variant only)
+    count: Array     # ()      samples seen
+
+    def var(self) -> Array:
+        return jnp.maximum(self.sq_mean - self.mean ** 2, 0.0)
+
+
+def init_moments(num_fields: int, dim: int) -> FieldMoments:
+    z = jnp.zeros((num_fields, dim), jnp.float32)
+    return FieldMoments(mean=z, sq_mean=z, count=jnp.zeros((), jnp.float32))
+
+
+def update_moments(m: FieldMoments, emb: Array) -> FieldMoments:
+    """Streaming mean/sq-mean update with one batch of (B, F, D) embs."""
+    b = emb.shape[0]
+    new_count = m.count + b
+    w_old = m.count / new_count
+    w_new = b / new_count
+    return FieldMoments(
+        mean=w_old * m.mean + w_new * emb.mean(axis=0),
+        sq_mean=w_old * m.sq_mean + w_new * (emb ** 2).mean(axis=0),
+        count=new_count)
+
+
+def field_moments(embed_fn: EmbedFn, params, batches: Iterable) -> FieldMoments:
+    """Pass 1 of F-Permutation: frequency-weighted field means, O(|DATA|)."""
+    m = None
+    embed_jit = jax.jit(embed_fn)
+    for batch in batches:
+        emb = embed_jit(params, batch)
+        if m is None:
+            m = init_moments(emb.shape[1], emb.shape[2])
+        m = update_moments(m, emb)
+    assert m is not None, "empty eval stream"
+    return m
+
+
+def _batch_scores_first(params, batch, mean: Array,
+                        embed_fn: EmbedFn, loss_fn: LossFn
+                        ) -> tuple[Array, Array]:
+    """Per-batch Eq. 4 scores (summed, not averaged) + summed loss."""
+    emb = embed_fn(params, batch)
+
+    def total_loss(e):
+        return loss_fn(params, e, batch).sum()
+
+    loss, grad = jax.value_and_grad(total_loss)(emb)
+    # grad: (B, F, D); sum over batch of g_i(x) . (E_i - e_i(x))
+    delta = mean[None, :, :] - emb
+    scores = jnp.einsum("bfd,bfd->f", grad, delta)
+    return scores, loss
+
+
+def _batch_scores_second(params, batch, moments: FieldMoments,
+                         embed_fn: EmbedFn, loss_fn: LossFn,
+                         key: Array, probes: int = 2
+                         ) -> tuple[Array, Array]:
+    """Second-order variant: adds 1/2 [dT H d + tr(H diag(var))] per field."""
+    emb = embed_fn(params, batch)
+
+    def total_loss(e):
+        return loss_fn(params, e, batch).sum()
+
+    loss, grad = jax.value_and_grad(total_loss)(emb)
+    grad_fn = jax.grad(total_loss)
+    delta = moments.mean[None, :, :] - emb
+
+    # mean-shift curvature: d^T H d via one hvp along d
+    _, hvp_d = jax.jvp(grad_fn, (emb,), (delta,))
+    quad_mean = jnp.einsum("bfd,bfd->f", delta, hvp_d)
+
+    # trace term: E_z [ (z*s)^T H (z*s) ] with Rademacher z, s = sqrt(var)
+    std = jnp.sqrt(moments.var())[None, :, :]
+    trace = jnp.zeros(emb.shape[1], jnp.float32)
+    for p in range(probes):
+        z = jax.random.rademacher(
+            jax.random.fold_in(key, p), emb.shape, jnp.float32)
+        v = z * std
+        _, hvp_v = jax.jvp(grad_fn, (emb,), (v,))
+        trace = trace + jnp.einsum("bfd,bfd->f", v, hvp_v)
+    trace = trace / probes
+
+    first = jnp.einsum("bfd,bfd->f", grad, delta)
+    return first + 0.5 * (quad_mean + trace), loss
+
+
+def fperm_scores(embed_fn: EmbedFn, loss_fn: LossFn, params,
+                 batches: Iterable, moments: FieldMoments | None = None,
+                 order: int = 1, key: Array | None = None,
+                 ) -> tuple[Array, Array, FieldMoments]:
+    """Full F-Permutation scoring pass.
+
+    Returns (scores (F,), mean_loss (), moments).  If ``moments`` is None a
+    first pass over ``batches`` computes it (batches must then be
+    re-iterable, e.g. a list or a factory-produced stream).
+    """
+    batches = list(batches)
+    if moments is None:
+        moments = field_moments(embed_fn, params, batches)
+
+    if order == 1:
+        step = jax.jit(lambda p, b: _batch_scores_first(
+            p, b, moments.mean, embed_fn, loss_fn))
+    else:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        step = jax.jit(lambda p, b: _batch_scores_second(
+            p, b, moments, embed_fn, loss_fn, key))
+
+    scores = None
+    loss_sum = 0.0
+    count = 0
+    for batch in batches:
+        s, l = step(params, batch)
+        scores = s if scores is None else scores + s
+        loss_sum += l
+        count += _batch_size(batch)
+    scores = scores / count
+    return scores, loss_sum / count, moments
+
+
+def _batch_size(batch) -> int:
+    leaf = jax.tree_util.tree_leaves(batch)[0]
+    return leaf.shape[0]

@@ -1,0 +1,109 @@
+"""Tier assignment and memory accounting (SHARK Eq. 8 + Table 1 adaptation).
+
+Rows are assigned one of three precision tiers by their priority score w_r:
+
+    tier(r) = INT8  if w_r <  t8
+            = HALF  if t8 <= w_r < t16          ("fp16" in the paper)
+            = FP32  if t16 <= w_r
+
+Paper hyper-parameters: t8 = 1e3, t16 = 1e5 (Fig. 3 / Table 3).
+
+The paper's per-row "extra words" byte layout (Table 1: 8-bit precision tag
++ 16-bit dim + 32-bit scale per row) does not vectorise on TPU; we instead
+account memory for the tier-partitioned layout of packed_store.py:
+
+    int8 row : D bytes payload + 4 bytes scale + 4 bytes indirection
+    half row : 2D bytes payload + 4 bytes scale + 4 bytes indirection
+    fp32 row : 4D bytes payload            + 4 bytes indirection
+
+which is strictly *less* overhead than the paper's 7 extra bytes/row (their
+dim word is constant per table; our indirection word subsumes tag+location).
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Tier(enum.IntEnum):
+    INT8 = 0
+    HALF = 1   # fp16 in the paper; bf16 on TPU (see rowwise_quant.py)
+    FP32 = 2
+
+
+class TierConfig(NamedTuple):
+    t8: float = 1e3    # rows with w < t8 -> int8
+    t16: float = 1e5   # rows with t8 <= w < t16 -> half
+
+
+def assign_tiers(w: Array, cfg: TierConfig = TierConfig()) -> Array:
+    """Eq. 8 selector.  w: (V,) priority -> tiers: (V,) int8 in {0,1,2}."""
+    t = jnp.where(w < cfg.t8, Tier.INT8.value,
+                  jnp.where(w < cfg.t16, Tier.HALF.value, Tier.FP32.value))
+    return t.astype(jnp.int8)
+
+
+def tier_counts(tiers: Array):
+    """(3,) int64 numpy histogram of tiers (host-side: counts can be huge)."""
+    import numpy as np
+    t = np.asarray(tiers).astype(np.int64)
+    return np.bincount(t, minlength=3)[:3]
+
+
+def memory_bytes(tiers: Array, dim: int, include_overhead: bool = True) -> int:
+    """Total embedding-table bytes under the tier-partitioned layout."""
+    counts = tier_counts(tiers)
+    payload = int(counts[0]) * dim + int(counts[1]) * 2 * dim \
+        + int(counts[2]) * 4 * dim
+    if not include_overhead:
+        return payload
+    scales = (int(counts[0]) + int(counts[1])) * 4
+    indirection = int(counts.sum()) * 4
+    return payload + scales + indirection
+
+
+def fp32_bytes(vocab: int, dim: int) -> int:
+    return vocab * dim * 4
+
+
+def compression_ratio(tiers: Array, dim: int) -> float:
+    """bytes(tiered) / bytes(fp32) — the paper reports e.g. 50%."""
+    v = tiers.shape[0]
+    return memory_bytes(tiers, dim) / fp32_bytes(v, dim)
+
+
+def plan_thresholds_for_ratio(w: Array, dim: int, target_ratio: float,
+                              half_fraction: float = 0.5) -> TierConfig:
+    """Pick (t8, t16) so the table compresses to ~target_ratio of fp32.
+
+    Beyond-paper helper: the paper hand-searches t8/t16 (Fig. 3); industrial
+    deployment wants a memory budget instead.  Given the priority
+    distribution we place quantile cuts so that expected bytes match the
+    budget, splitting the quantized mass ``half_fraction`` into the half
+    tier.  Solved in closed form: with fractions (p8, p16, p32),
+    bytes/row/dim = p8*1 + p16*2 + p32*4 and p8+p16+p32 = 1.
+    """
+    # target bytes per element
+    t = max(0.25, min(4.0, target_ratio * 4.0))
+    # p32 from: p8 + 2 p16 + 4 p32 = t with p16 = hf*(p8+p16) parametrised:
+    # let q = p8 + p16 (quantized mass), p16 = hf*q, p8 = (1-hf)*q
+    # bytes: (1-hf)q + 2 hf q + 4 (1-q) = t  =>  q (1 + hf - 4) = t - 4
+    hf = half_fraction
+    q = (t - 4.0) / (1.0 + hf - 4.0)
+    q = float(jnp.clip(q, 0.0, 1.0))
+    p8 = (1.0 - hf) * q
+    p16 = hf * q
+    # Eq. 8 uses strict w < t: nudge thresholds above the quantile so the
+    # (often huge) mass of rows tied AT the quantile — e.g. never-touched
+    # rows with w == 0 — falls below it into the cheaper tier.
+    eps = 1e-9 + 1e-6 * float(jnp.abs(w).max())
+    t8 = float(jnp.quantile(w, p8)) + eps if p8 > 0 \
+        else float(jnp.min(w)) - 1.0
+    t16 = float(jnp.quantile(w, min(p8 + p16, 1.0))) + eps
+    return TierConfig(t8=t8, t16=max(t16, t8))

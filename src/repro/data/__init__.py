@@ -1,0 +1,13 @@
+"""Synthetic data pipelines (deterministic, seeded).
+
+The paper's industrial dataset is proprietary and the 4.4B-sample Criteo
+terabyte log is not available offline, so every family gets a generator
+with *known ground truth* planted in it:
+
+  criteo    click logs with planted field importance + zipf row access
+  sequences session item sequences (BERT4Rec)
+  graphs    power-law graphs + neighbor sampler (PNA)
+  lm        zipf token streams (LM smoke tests)
+"""
+
+from repro.data.criteo import CriteoSynth, CriteoConfig  # noqa: F401

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for SHARK's compute hot spots.
+
+  dequant_bag    fused gather + int8/bf16 dequant + embedding-bag reduce
+                 (the serving path behind the paper's +30% QPS)
+  rowwise_quant  fused per-row max-abs -> scale -> round -> int8 pack
+                 (the training write path + gradient compression)
+  cin            xDeepFM Compressed Interaction Network layer
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper + interpret/XLA fallback switch), ref.py (pure-jnp oracle).
+TPU is the target; correctness is validated with interpret=True on CPU.
+"""
+
+INTERPRET = True  # CPU container: run kernels in interpret mode

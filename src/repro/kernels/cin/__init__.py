@@ -1,0 +1,1 @@
+from repro.kernels.cin.ops import cin_layer_tpu  # noqa: F401

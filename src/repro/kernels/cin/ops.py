@@ -1,0 +1,18 @@
+"""Public op: CIN layer, Pallas-fused on TPU / oracle fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from repro import kernels
+from repro.kernels.cin.kernel import cin_layer_pallas
+from repro.kernels.cin.ref import cin_layer_ref
+
+Array = jax.Array
+
+
+def cin_layer_tpu(w: Array, x_k: Array, x_0: Array,
+                  use_pallas: bool = True) -> Array:
+    if not use_pallas:
+        return cin_layer_ref(w, x_k, x_0)
+    return cin_layer_pallas(w, x_k, x_0, interpret=kernels.INTERPRET)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the CIN layer (== models.recsys.cin_layer)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def cin_layer_ref(w: Array, x_k: Array, x_0: Array) -> Array:
+    """(O,H,M), (B,H,D), (B,M,D) -> (B,O,D).
+
+    X^{k+1}_{o,d} = sum_{h,m} W_{o,h,m} * X^k_{h,d} * X^0_{m,d}
+    """
+    outer = jnp.einsum("bhd,bmd->bhmd", x_k, x_0,
+                       preferred_element_type=jnp.float32)
+    return jnp.einsum("bhmd,ohm->bod", outer, w,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,1 @@
+from repro.kernels.dequant_bag.ops import dequant_bag_tpu  # noqa: F401

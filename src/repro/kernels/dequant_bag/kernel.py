@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused gather + row-wise dequant + bag reduction.
+
+The SHARK serving hot path.  XLA lowers packed-store lookup to
+gather(int8) -> convert -> gather(scale) -> multiply -> segment-sum: four
+HBM-bound ops materialising the (B*K, D) dequantized rows.  This kernel
+streams each needed row HBM->VMEM exactly once via the scalar-prefetch
+pipeline, dequantizes on the VPU in fp32, and accumulates straight into
+the (B_block, D) output bag tile — the (L, D) intermediate never exists.
+
+Layout:
+  grid = (B, K)     one row DMA per step; output tile revisited K times
+  payload row block (1, D) indexed by the prefetched indices[b, k]
+  scale   block     (1, 1) same indirection
+  weights block     (1, 1) per-slot weight (0 masks padded slots)
+  out     block     (1, D) accumulate; zeroed at k == 0
+
+B*K DMAs of D bytes each pipeline across grid steps (double-buffered by
+the Pallas pipeline), which is the roofline-optimal traffic: exactly the
+bytes of the touched rows.  On the 819 GB/s HBM of v5e this is
+~4x fewer bytes than the fp32 path — the kernel-level realisation of the
+paper's +30% QPS.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _bag_kernel(idx_ref, payload_ref, scale_ref, weight_ref, out_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    row = payload_ref[...].astype(jnp.float32)      # (1, D)
+    s = scale_ref[0, 0]
+    w = weight_ref[0, 0]
+    out_ref[...] += row * (s * w)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_bag_pallas(payload: Array, scales: Array, indices: Array,
+                       weights: Array | None = None,
+                       interpret: bool = True) -> Array:
+    """payload (V, D), scales (V,), indices (B, K) -> (B, D) fp32 bags."""
+    v, d = payload.shape
+    b, k = indices.shape
+    if weights is None:
+        weights = jnp.ones((b, k), jnp.float32)
+    scales2 = scales.reshape(v, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, idx: (idx[i, j], 0)),
+            pl.BlockSpec((1, 1), lambda i, j, idx: (idx[i, j], 0)),
+            pl.BlockSpec((1, 1), lambda i, j, idx: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(indices, payload, scales2, weights)

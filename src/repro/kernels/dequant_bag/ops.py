@@ -1,0 +1,51 @@
+"""Public op: fused dequant embedding-bag over the tier-partitioned store.
+
+``packed_bag_lookup`` runs one fused kernel per tier (tier-local indices
+come straight from the PackedStore indirection) and sums the three
+partial bags — rows of padded slots are masked by zero weights.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.core.packed_store import _IDX_MASK, _TIER_SHIFT, PackedStore
+from repro.kernels.dequant_bag.kernel import dequant_bag_pallas
+from repro.kernels.dequant_bag.ref import dequant_bag_ref
+
+Array = jax.Array
+
+
+def dequant_bag_tpu(payload: Array, scales: Array, indices: Array,
+                    weights: Array | None = None,
+                    use_pallas: bool = True) -> Array:
+    if not use_pallas:
+        return dequant_bag_ref(payload, scales, indices, weights)
+    return dequant_bag_pallas(payload, scales, indices, weights,
+                              interpret=kernels.INTERPRET)
+
+
+def packed_bag_lookup(packed: PackedStore, indices: Array,
+                      use_pallas: bool = True) -> Array:
+    """Bag-sum lookup over a PackedStore.  indices (B, K) -> (B, D) fp32.
+
+    Each tier's rows are gathered by its own fused kernel call with
+    tier-local indices; slots belonging to other tiers get weight 0.
+    """
+    code = jnp.take(packed.indirect, indices, axis=0)
+    tier = code >> _TIER_SHIFT
+    loc = code & _IDX_MASK
+
+    ones32 = jnp.ones((packed.payload32.shape[0],), jnp.float32)
+    out = jnp.zeros((indices.shape[0], packed.dim), jnp.float32)
+    for t, payload, scales in (
+            (0, packed.payload8, packed.scale8),
+            (1, packed.payload16, packed.scale16),
+            (2, packed.payload32, ones32)):
+        w = (tier == t).astype(jnp.float32)
+        li = jnp.clip(loc, 0, payload.shape[0] - 1)
+        out = out + dequant_bag_tpu(payload, scales, li, w,
+                                    use_pallas=use_pallas)
+    return out

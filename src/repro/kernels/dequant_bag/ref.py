@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused dequant embedding-bag lookup."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dequant_bag_ref(payload: Array, scales: Array, indices: Array,
+                    weights: Array | None = None) -> Array:
+    """payload (V, D) int8|bf16|fp32, scales (V,) fp32, indices (B, K)
+    -> bags (B, D) fp32:  out[b] = sum_k scale[i_bk] * payload[i_bk].
+
+    weights: optional (B, K) per-slot weights (0 masks padding slots).
+    """
+    rows = jnp.take(payload, indices, axis=0).astype(jnp.float32)
+    s = jnp.take(scales, indices, axis=0)[..., None]
+    rows = rows * s
+    if weights is not None:
+        rows = rows * weights[..., None]
+    return rows.sum(axis=1)

@@ -1,0 +1,1 @@
+from repro.kernels.rowwise_quant.ops import quantize_rowwise_tpu  # noqa: F401

@@ -1,0 +1,21 @@
+"""Public op: row-wise int8 quantization, Pallas on TPU / oracle on CPU."""
+
+from __future__ import annotations
+
+import jax
+
+from repro import kernels
+from repro.kernels.rowwise_quant.kernel import quantize_rowwise_pallas
+from repro.kernels.rowwise_quant.ref import quantize_rowwise_ref
+
+Array = jax.Array
+
+
+def quantize_rowwise_tpu(x: Array, noise: Array | None = None,
+                         mode: str = "narrow",
+                         use_pallas: bool = True) -> tuple[Array, Array]:
+    """Fused row-wise quantization.  See kernel.py for the TPU layout."""
+    if not use_pallas:
+        return quantize_rowwise_ref(x, noise, mode)
+    return quantize_rowwise_pallas(x, noise, mode,
+                                   interpret=kernels.INTERPRET)

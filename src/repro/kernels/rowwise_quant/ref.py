@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the rowwise_quant kernel (== core implementation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rowwise_quant as rq
+
+Array = jax.Array
+
+
+def quantize_rowwise_ref(x: Array, noise: Array | None = None,
+                         mode: str = "narrow") -> tuple[Array, Array]:
+    """x (V, D) fp32 -> (q int8 (V, D), scale fp32 (V, 1)).
+
+    noise (V, D) in [0,1) selects stochastic rounding (floor + bernoulli);
+    None = round-to-nearest.  Matches core.rowwise_quant semantics.
+    """
+    imin, imax = rq.int_range(8)
+    scale = rq.rowwise_scale(x, 8, mode).astype(jnp.float32)
+    y = x.astype(jnp.float32) / scale
+    if noise is None:
+        r = jnp.round(y)
+    else:
+        lo = jnp.floor(y)
+        r = lo + (noise < (y - lo)).astype(jnp.float32)
+    return jnp.clip(r, imin, imax).astype(jnp.int8), scale

@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); 512 host devices stand in for 2 TPU v5e pods.
+
+For every cell this script:
+  1. builds the Cell (fn, ShapeDtypeStruct args, PartitionSpecs),
+  2. jax.jit(fn, in_shardings=...).lower(*args).compile(),
+  3. records compiled.memory_analysis() (proves per-device fit) and
+     compiled.cost_analysis() (raw XLA numbers, kept for reference),
+  4. runs repro.launch.hlo_analysis over the optimized HLO for the
+     §Roofline terms: dot FLOPs, HBM-traffic proxy bytes, and collective
+     bytes per kind — all with while-loop trip-count multipliers, which
+     cost_analysis lacks (it visits scan bodies once; verified 10x-off on
+     a known scan matmul in this environment).
+
+Output: one JSON per cell under results/dryrun/, consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dlrm-rm2 [--shape X]
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi    # 512-chip
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+def run_cell(arch, shape: str, mesh, mesh_name: str,
+             results_dir: str, variant: str = "baseline") -> dict:
+    from repro.dist import ctx
+    from repro.launch.hlo_analysis import analyze
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ctx.configure(mesh, batch=batch_axes if len(batch_axes) > 1
+                  else batch_axes[0], tp="model")
+    cell = arch.lowerable(shape, mesh.axis_names, variant=variant)
+    shardings = jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), cell.in_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    out_shardings = None
+    if cell.out_specs is not None:
+        out_shardings = jax.tree_util.tree_map(
+            lambda spec: NamedSharding(mesh, spec), cell.out_specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    t0 = time.time()
+    jitted = jax.jit(cell.fn, in_shardings=shardings,
+                     out_shardings=out_shardings,
+                     donate_argnums=cell.donate)
+    lowered = jitted.lower(*cell.args)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    stats = analyze(hlo)
+
+    rec = {
+        "arch": arch.name,
+        "shape": shape,
+        "mesh": mesh_name,
+        "variant": variant,
+        "kind": cell.kind,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        # per-device numbers (SPMD module = one device's program)
+        "flops": stats.flops,
+        "hbm_bytes": stats.hbm_bytes,
+        "collective_bytes": dict(stats.collective),
+        "collective_total": stats.collective_total(),
+        "unknown_trip_whiles": stats.unknown_trip_whiles,
+        # raw XLA numbers for reference (loop bodies counted once)
+        "xla_flops_raw": cost.get("flops", 0.0),
+        "xla_bytes_raw": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "num_devices": mesh.devices.size,
+    }
+    os.makedirs(results_dir, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    fname = f"{arch.name}__{shape}__{mesh_name}{suffix}.json"
+    with open(os.path.join(results_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--results", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.launch.mesh import make_production_mesh
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    names = [args.arch] if args.arch else configs.names()
+    failures = []
+    for mesh_name, mesh in meshes:
+        for name in names:
+            arch = configs.get(name)
+            shapes = ([args.shape] if args.shape in arch.cells() else []) \
+                if args.shape else arch.cells()
+            for shape in shapes:
+                tag = f"{name} x {shape} x {mesh_name}"
+                try:
+                    rec = run_cell(arch, shape, mesh, mesh_name,
+                                   args.results, args.variant)
+                    print(f"[ok]   {tag}: compile {rec['compile_s']}s  "
+                          f"peak/dev {rec['memory']['peak_bytes']/2**30:.2f}"
+                          f" GiB  flops {rec['flops']:.3e}  "
+                          f"coll {rec['collective_total']/2**30:.2f} GiB")
+                except Exception as e:  # noqa: BLE001
+                    failures.append(tag)
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc(limit=3)
+    print(f"\n{len(failures)} failures" + (": " + "; ".join(failures)
+                                           if failures else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,195 @@
+"""Static analysis of optimized HLO: FLOPs / HBM bytes / collective bytes
+with while-loop trip-count multipliers.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis visits a while
+body ONCE — for scan-over-layers models that undercounts a 30-layer
+transformer 30x (verified in this environment).  The compiled HLO text,
+however, carries ``backend_config={"known_trip_count":{"n":...}}`` on each
+while op, so we parse the module into its computation call graph and
+accumulate:
+
+  * dot FLOPs       2 * prod(result dims) * prod(contracting dims),
+  * result bytes    sum of op-result bytes (HBM-traffic proxy: each value
+                    is written once and read ~once downstream; fusion
+                    internals are skipped — fused intermediates never
+                    touch HBM),
+  * collective bytes per kind (all-gather / all-reduce / reduce-scatter /
+                    all-to-all / collective-permute), result-shape bytes,
+
+each multiplied by the product of enclosing trip counts.  This is the
+input to the §Roofline compute/memory/collective terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+SHAPE_RE = re.compile(r"(%s)\[([\d,]*)\]" % "|".join(DTYPE_BYTES))
+OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\(")
+# computation headers start at column 0: "%name (args) -> type {"
+COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+CALL_ATTRS = ("to_apply", "body", "condition", "calls")
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+            "bitcast", "after-all", "iota",
+            # layout/elementwise ops the TPU compiler fuses into their
+            # consumers — the CPU backend materialises them, which would
+            # inflate the HBM-traffic proxy 3-5x if counted
+            "copy", "transpose", "convert", "broadcast", "reshape",
+            "copy-start", "copy-done", "add", "multiply", "subtract",
+            "select", "compare", "exponential", "negate", "divide",
+            "maximum", "minimum", "rsqrt", "tanh", "and", "or", "not"}
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(segment: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in SHAPE_RE.findall(segment):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_seg: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    # edges: (callee_name, trip_multiplier, is_fusion_call)
+    edges: list
+
+
+def parse_module(hlo: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    entry = None
+    symbols: dict[str, str] = {}      # op name -> result segment
+
+    for line in hlo.splitlines():
+        if line[:1] not in (" ", "\t"):
+            header = COMP_RE.match(line)
+            if header and "=" not in line.split("(")[0]:
+                current = Computation(header.group(2), [], [])
+                comps[current.name] = current
+                if header.group(1):
+                    entry = current.name
+                continue
+        m = OP_RE.match(line)
+        if not m or current is None:
+            continue
+        name, result_seg, opcode = m.groups()
+        op = Op(name, opcode, result_seg, line)
+        current.ops.append(op)
+        symbols[name] = result_seg
+        # call edges
+        trip = 1
+        tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+        if tm:
+            trip = int(tm.group(1))
+        for attr in CALL_ATTRS:
+            for callee in re.findall(attr + r"=%?([\w\.\-]+)", line):
+                mult = trip if (opcode == "while"
+                                and attr in ("body", "condition")) else 1
+                current.edges.append((callee, mult,
+                                      opcode == "fusion"))
+    return comps, entry, symbols
+
+
+def _dot_flops(op: Op, symbols: dict) -> float:
+    """2 * prod(result) * prod(contracting dims of lhs)."""
+    shapes = _shape_dims(op.result_seg)
+    if not shapes:
+        return 0.0
+    result_elems = 1
+    for d in shapes[0][1]:
+        result_elems *= d
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    operands = re.findall(r"\(%([\w\.\-]+)[,)]", op.line) or \
+        re.findall(r"dot\(%([\w\.\-]+)", op.line)
+    # first operand of the dot
+    args = re.search(r"dot\(([^)]*)\)", op.line)
+    k = 1
+    if cm and args:
+        lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
+        lhs_seg = symbols.get(lhs_name, "")
+        lhs_shapes = _shape_dims(lhs_seg)
+        if lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for i in (int(x) for x in cm.group(1).split(",") if x):
+                if i < len(dims):
+                    k *= dims[i]
+    del operands
+    return 2.0 * result_elems * k
+
+
+@dataclasses.dataclass
+class ModuleStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    unknown_trip_whiles: int = 0
+
+    def collective_total(self) -> float:
+        return float(sum(v for k, v in self.collective.items()))
+
+
+def analyze(hlo: str) -> ModuleStats:
+    comps, entry, symbols = parse_module(hlo)
+    stats = ModuleStats()
+    visiting: list[tuple[str, float, bool]] = [(entry, 1.0, True)]
+    # memoization is unsafe with different multipliers; call graph is a
+    # DAG of modest size, so walk it directly
+    max_steps = 200_000
+    steps = 0
+
+    def walk(comp_name: str, mult: float, count_bytes: bool):
+        nonlocal steps
+        steps += 1
+        if steps > max_steps:
+            return
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.opcode == "dot":
+                stats.flops += mult * _dot_flops(op, symbols)
+            if op.opcode in COLLECTIVES or \
+                    any(op.opcode == c + "-start" for c in COLLECTIVES):
+                base = op.opcode.replace("-start", "")
+                stats.collective[base] += mult * _shape_bytes(op.result_seg)
+            if count_bytes and op.opcode not in FREE_OPS:
+                stats.hbm_bytes += mult * _shape_bytes(op.result_seg)
+            if op.opcode == "while" and "known_trip_count" not in op.line:
+                stats.unknown_trip_whiles += 1
+        for callee, m, is_fusion in comp.edges:
+            walk(callee, mult * m, count_bytes and not is_fusion)
+
+    walk(entry, 1.0, True)
+    return stats

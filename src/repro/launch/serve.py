@@ -1,0 +1,81 @@
+"""Serving driver: ``python -m repro.launch.serve --arch dlrm-rm2``.
+
+Builds the packed tier-partitioned store for a (smoke-sized) recsys model
+and serves a batched request stream, reporting latency percentiles and
+the memory/bytes ratios behind the paper's QPS claim.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dlrm-rm2")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=256)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.core import FQuantConfig, pack
+    from repro.core import qat_store as qs
+    from repro.core.packed_store import lookup as packed_lookup
+    from repro.core.tiers import plan_thresholds_for_ratio
+    from repro.models import embedding as E
+
+    arch = configs.get(args.arch)
+    if arch.family != "recsys" or arch.seq_model:
+        raise SystemExit("serve driver supports field-based recsys archs")
+    model = arch.smoke_model
+    spec = model.spec
+    params = model.init(jax.random.PRNGKey(0))
+
+    # fabricate a zipf priority profile and pack at a 50% budget
+    rng = np.random.default_rng(0)
+    pri = jnp.asarray((rng.pareto(1.2, spec.total_rows) * 10)
+                      .astype(np.float32))
+    cfg = FQuantConfig(
+        tiers=plan_thresholds_for_ratio(pri, spec.dim, 0.5),
+        stochastic=False)
+    store = qs.QATStore(params["embed_table"], pri)
+    store = store._replace(table=qs.snap(
+        store.table, qs.current_tiers(store, cfg), cfg))
+    packed = pack(store, cfg)
+    fp32 = spec.total_rows * spec.dim * 4
+    print(f"packed {packed.nbytes()/2**20:.2f} MiB "
+          f"({packed.nbytes()/fp32:.1%} of fp32)")
+
+    @jax.jit
+    def serve(packed, params, batch):
+        emb = packed_lookup(packed, E.globalize(batch["indices"], spec))
+        return model.head(params, emb, batch)
+
+    lat = []
+    f = spec.num_fields
+    for r in range(args.requests):
+        rr = np.random.default_rng(r)
+        batch = {"indices": jnp.asarray(
+            rr.integers(0, min(spec.cardinalities),
+                        (args.batch, f)).astype(np.int32)),
+            "labels": jnp.zeros((args.batch,))}
+        if "dense" in [k for k in ("dense",) if arch.has_dense]:
+            batch["dense"] = jnp.asarray(rr.standard_normal(
+                (args.batch, arch.smoke_num_dense)).astype(np.float32))
+        t0 = time.perf_counter()
+        serve(packed, params, batch).block_until_ready()
+        lat.append(time.perf_counter() - t0)
+    lat_us = np.asarray(lat[1:]) * 1e6
+    print(f"{args.requests} requests x{args.batch}: "
+          f"p50 {np.percentile(lat_us, 50):.0f}us "
+          f"p99 {np.percentile(lat_us, 99):.0f}us (host CPU)")
+
+
+if __name__ == "__main__":
+    main()

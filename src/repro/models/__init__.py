@@ -1,0 +1,3 @@
+"""Model zoo: recsys (DLRM / Wide&Deep / xDeepFM / BERT4Rec), LM
+transformers (SmolLM / Qwen3 / DeepSeek-Coder / Mixtral / DeepSeek-V2-lite),
+and the PNA GNN.  Pure JAX; params are nested dicts of jnp arrays."""

@@ -1,0 +1,328 @@
+"""Attention: GQA / MLA / sliding-window, chunked (flash-style) softmax.
+
+One implementation covers training, prefill and decode:
+
+  * ``chunked_attention`` scans over KV chunks with a running
+    (max, denominator, accumulator) triple — the FlashAttention recurrence
+    expressed in jax.lax.scan, so the T_q x T_kv score matrix never
+    materialises beyond (T_q, chunk).  This is the memory-safe path for
+    prefill_32k and the TPU-native adaptation of the paper-era GPU kernels
+    (VMEM-bounded tiles instead of SRAM tiles).
+  * GQA: n_q heads grouped onto n_kv heads (Hq = G * Hkv).
+  * SWA: sliding-window masking (Mixtral); window W bounds the live KV.
+  * MLA (DeepSeek-V2): queries/keys split into nope+rope parts, KV
+    compressed into a per-token latent c_kv (kv_lora_rank) + shared k_rope;
+    the decode cache stores only (c_kv, k_rope) — 576 dims/token for the
+    -lite config — which is what makes the long_500k cell feasible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import ctx
+from repro.models import layers as L
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q: Array, k: Array) -> Array:
+    """q (B,Tq,Hkv,G,Dh) . k (B,Tk,Hkv,Dh) -> (B,Hkv,G,Tq,Tk) fp32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *,
+                      q_positions: Array, kv_positions: Array,
+                      causal: bool = True, window: int | None = None,
+                      chunk: int = 1024, kv_valid: Array | None = None,
+                      scale: float | None = None,
+                      pin_heads: bool = False) -> Array:
+    """Flash-style attention with GQA grouping.
+
+    q: (B, Tq, Hq, Dh) with Hq = G * Hkv
+    k, v: (B, Tk, Hkv, Dh)
+    q_positions: (Tq,) absolute positions of queries
+    kv_positions: (Tk,) absolute positions of keys
+    kv_valid: optional (B, Tk) mask for cache slots beyond current length
+    Returns (B, Tq, Hq, Dh) in q.dtype.
+    """
+    b, tq, hq, dh = q.shape
+    _, tk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    # training/prefill: PIN head/dim axes replicated — leaving them
+    # unconstrained lets the partitioner pick Dh-sharding, whose QK^T
+    # contraction psums the full (Tq, chunk) score tensor every chunk
+    # (measured 2.2 TB/device on smollm prefill_32k).  decode keeps them
+    # unconstrained to honor the cache's head/Dh input sharding.
+    hd = (None, None) if pin_heads else (ctx.UNC, ctx.UNC)
+    q = ctx.constrain(q, "batch", None, *hd)
+    k = ctx.constrain(k, "batch", None, *hd)
+    v = ctx.constrain(v, "batch", None, *hd)
+    qg = q.reshape(b, tq, hkv, g, dh).astype(jnp.float32) * scale
+
+    n_chunks = -(-tk // chunk)
+    pad = n_chunks * chunk - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad),
+                               constant_values=2 ** 30)
+        if kv_valid is not None:
+            kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
+    pad_valid = jnp.arange(n_chunks * chunk) < tk
+    kc = ctx.constrain(
+        k.reshape(b, n_chunks, chunk, hkv, dh).swapaxes(0, 1),
+        None, "batch", None, *hd)
+    vc = ctx.constrain(
+        v.reshape(b, n_chunks, chunk, hkv, dv).swapaxes(0, 1),
+        None, "batch", None, *hd)
+    pc = kv_positions.reshape(n_chunks, chunk)
+    pvc = pad_valid.reshape(n_chunks, chunk)
+    if kv_valid is not None:
+        kvc = kv_valid.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    else:
+        kvc = jnp.ones((n_chunks, b, chunk), bool)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, p_i, pv_i, kv_i = xs
+        s = _gqa_scores(qg, k_i.astype(jnp.float32))  # (B,Hkv,G,Tq,C)
+        mask = pv_i[None, :] & kv_i[:, :]             # (B, C) valid slots
+        mask = mask[:, None, None, None, :]
+        if causal:
+            cm = q_positions[:, None] >= p_i[None, :]   # (Tq, C)
+            mask = mask & cm[None, None, None, :, :]
+        if window is not None:
+            wm = (q_positions[:, None] - p_i[None, :]) < window
+            mask = mask & wm[None, None, None, :, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_i = jnp.max(s, axis=-1)                     # (B,Hkv,G,Tq)
+        m_new = jnp.maximum(m, m_i)
+        # guard: fully-masked rows keep m_new finite via maximum with m
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, v_i.astype(jnp.float32))
+        acc_new = ctx.constrain(acc_new, "batch", *hd, None,
+                                ctx.UNC if not pin_heads else None)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, tq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, tq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, pc, pvc, kvc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,Hkv,G,Tq,Dv)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, tq, hq, dv)
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------- GQA
+
+@dataclasses.dataclass(frozen=True)
+class GQAConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False          # Qwen3
+    window: int | None = None      # Mixtral SWA
+    rope_theta: float = 10000.0
+    chunk: int = 1024
+    # pin attention head/Dh dims replicated (see chunked_attention):
+    # required for archs where the partitioner's Dh-sharding choice
+    # psums full score tensors (smollm, kv=3); harmful where its choice
+    # was already good (kv=8 archs) — set per arch config.
+    pin: bool = False
+
+
+def gqa_init(key: Array, cfg: GQAConfig, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(kq, cfg.d_model, cfg.n_heads * cfg.head_dim,
+                           dtype),
+        "wk": L.dense_init(kk, cfg.d_model, cfg.n_kv_heads * cfg.head_dim,
+                           dtype),
+        "wv": L.dense_init(kv, cfg.d_model, cfg.n_kv_heads * cfg.head_dim,
+                           dtype),
+        "wo": L.dense_init(ko, cfg.n_heads * cfg.head_dim, cfg.d_model,
+                           dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = L.rmsnorm_init(cfg.head_dim, dtype)
+        p["knorm"] = L.rmsnorm_init(cfg.head_dim, dtype)
+    return p
+
+
+def gqa_qkv(params: dict, cfg: GQAConfig, x: Array, rope: Array,
+            positions: Array) -> tuple[Array, Array, Array]:
+    b, t, _ = x.shape
+    q = L.dense(params["wq"], x).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = L.dense(params["wk"], x).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(params["wv"], x).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rmsnorm(params["qnorm"], q)
+        k = L.rmsnorm(params["knorm"], k)
+    q = L.apply_rope(q, rope, positions)
+    k = L.apply_rope(k, rope, positions)
+    return q, k, v
+
+
+def gqa_attend(params: dict, cfg: GQAConfig, x: Array,
+               rope: Array, positions: Array,
+               causal: bool = True) -> tuple[Array, tuple[Array, Array]]:
+    """Training / prefill path.  Returns (out, (k, v)) for cache building."""
+    q, k, v = gqa_qkv(params, cfg, x, rope, positions)
+    out = chunked_attention(q, k, v, q_positions=positions,
+                            kv_positions=positions, causal=causal,
+                            window=cfg.window, chunk=cfg.chunk,
+                            pin_heads=cfg.pin)
+    b, t = x.shape[:2]
+    out = L.dense(params["wo"], out.reshape(b, t, -1))
+    return out, (k, v)
+
+
+def gqa_decode(params: dict, cfg: GQAConfig, x: Array,
+               cache_k: Array, cache_v: Array, cache_len: Array,
+               rope: tuple[Array, Array],
+               kv_positions: Array | None = None,
+               write_slot: Array | None = None
+               ) -> tuple[Array, Array, Array]:
+    """One decode step.  x: (B, 1, D); cache_{k,v}: (B, S, Hkv, Dh).
+
+    Linear cache (default): writes at slot ``cache_len``; slots beyond
+    cache_len are masked.  Rolling cache (SWA serving, S == window): pass
+    ``write_slot = cache_len % S`` and the per-slot absolute positions
+    ``kv_positions (S,)`` (slots holding future/unwritten data must carry
+    position > cache_len or < cache_len - window + 1 and are masked by the
+    window/causal tests).  Returns (out (B,1,D), new_k, new_v).
+    """
+    b, s = cache_k.shape[0], cache_k.shape[1]
+    positions = jnp.full((1,), cache_len, jnp.int32)
+    q, k, v = gqa_qkv(params, cfg, x, rope, positions)
+    slot = cache_len if write_slot is None else write_slot
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    if kv_positions is None:
+        kv_positions = jnp.arange(s, dtype=jnp.int32)
+    else:
+        kv_positions = kv_positions.at[slot].set(cache_len)
+    kv_valid = (kv_positions <= cache_len)[None, :].repeat(b, 0)
+    out = chunked_attention(q, cache_k, cache_v,
+                            q_positions=positions,
+                            kv_positions=kv_positions,
+                            causal=True, window=cfg.window, chunk=cfg.chunk,
+                            kv_valid=kv_valid, pin_heads=False)
+    out = L.dense(params["wo"], out.reshape(b, 1, -1))
+    return out, cache_k, cache_v
+
+
+# ------------------------------------------------------------------- MLA
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    chunk: int = 1024
+    pin: bool = False
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def mla_init(key: Array, cfg: MLAConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    return {
+        "wq": L.dense_init(ks[0], cfg.d_model, h * (dn + dr), dtype),
+        "wdkv": L.dense_init(ks[1], cfg.d_model, cfg.kv_lora_rank, dtype),
+        "kv_norm": L.rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wkr": L.dense_init(ks[2], cfg.d_model, dr, dtype),
+        "wuk": L.dense_init(ks[3], cfg.kv_lora_rank, h * dn, dtype),
+        "wuv": L.dense_init(ks[4], cfg.kv_lora_rank, h * dv, dtype),
+        "wo": L.dense_init(ks[5], h * dv, cfg.d_model, dtype),
+    }
+
+
+def _mla_qk(params, cfg: MLAConfig, x: Array, c_kv: Array, k_rope: Array,
+            rope, q_positions: Array, kv_positions: Array):
+    """Build q (B,Tq,H,Dq) and k (B,Tk,H,Dq), v (B,Tk,H,Dv) from latents."""
+    b, tq, _ = x.shape
+    tk = c_kv.shape[1]
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = L.dense(params["wq"], x).reshape(b, tq, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, rope, q_positions)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    k_nope = L.dense(params["wuk"], c_kv).reshape(b, tk, h, dn)
+    kr = L.apply_rope(k_rope[:, :, None, :], rope, kv_positions)
+    kr = jnp.broadcast_to(kr, (b, tk, h, dr))
+    k = jnp.concatenate([k_nope, kr], axis=-1)
+    v = L.dense(params["wuv"], c_kv).reshape(b, tk, h, cfg.v_head_dim)
+    return q, k, v
+
+
+def mla_latents(params, cfg: MLAConfig, x: Array) -> tuple[Array, Array]:
+    c_kv = L.rmsnorm(params["kv_norm"], L.dense(params["wdkv"], x))
+    k_rope = L.dense(params["wkr"], x)      # (B, T, dr), pre-RoPE
+    return c_kv, k_rope
+
+
+def mla_attend(params: dict, cfg: MLAConfig, x: Array, rope, positions,
+               causal: bool = True) -> tuple[Array, tuple[Array, Array]]:
+    c_kv, k_rope = mla_latents(params, cfg, x)
+    q, k, v = _mla_qk(params, cfg, x, c_kv, k_rope, rope, positions,
+                      positions)
+    scale = 1.0 / math.sqrt(cfg.qk_dim)
+    out = chunked_attention(q, k, v, q_positions=positions,
+                            kv_positions=positions, causal=causal,
+                            chunk=cfg.chunk, scale=scale,
+                            pin_heads=cfg.pin)
+    b, t = x.shape[:2]
+    out = L.dense(params["wo"], out.reshape(b, t, -1))
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(params: dict, cfg: MLAConfig, x: Array, cache_ckv: Array,
+               cache_kr: Array, cache_len: Array, rope
+               ) -> tuple[Array, Array, Array]:
+    """Decode with the compressed cache (B, S, kv_lora) + (B, S, dr)."""
+    b, s = cache_ckv.shape[0], cache_ckv.shape[1]
+    positions = jnp.full((1,), cache_len, jnp.int32)
+    c_new, kr_new = mla_latents(params, cfg, x)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_new.astype(cache_ckv.dtype), cache_len, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, kr_new.astype(cache_kr.dtype), cache_len, axis=1)
+    kv_pos = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _mla_qk(params, cfg, x, cache_ckv.astype(x.dtype),
+                      cache_kr.astype(x.dtype), rope, positions, kv_pos)
+    kv_valid = (kv_pos <= cache_len)[None, :].repeat(b, 0)
+    scale = 1.0 / math.sqrt(cfg.qk_dim)
+    out = chunked_attention(q, k, v, q_positions=positions,
+                            kv_positions=kv_pos, causal=True,
+                            chunk=cfg.chunk, kv_valid=kv_valid, scale=scale,
+                            pin_heads=False)
+    out = L.dense(params["wo"], out.reshape(b, 1, -1))
+    return out, cache_ckv, cache_kr

@@ -1,0 +1,137 @@
+"""Embedding substrate: field-stacked tables, EmbeddingBag, hashing.
+
+JAX has no native nn.EmbeddingBag and only BCOO sparse — the lookup stack
+here is built from ``jnp.take`` + ``jax.ops.segment_sum`` as first-class
+system code (see kernel_taxonomy §RecSys).
+
+Industrial layout: all feature fields of a model share ONE physical
+(sum_f V_f, D) table; field-local indices are shifted by per-field offsets.
+That is exactly what SHARK needs — F-Quantization's priority/tier state is
+global across tables (one score per physical row), and F-Permutation
+deletes whole field slices.  It also gives one contiguous row-sharded
+array for the `model` mesh axis instead of N tiny ones.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class FieldSpec(NamedTuple):
+    """Static metadata for a stacked multi-field embedding.
+
+    ``total_rows`` is padded up to a multiple of ``pad_to`` so the stacked
+    table's row dim divides every mesh factorisation (16/256/512); the pad
+    rows sit after the last field and are never indexed.
+    """
+    cardinalities: tuple[int, ...]   # V_f per field
+    dim: int
+    pad_to: int = 512
+
+    @property
+    def num_fields(self) -> int:
+        return len(self.cardinalities)
+
+    @property
+    def total_rows(self) -> int:
+        raw = int(sum(self.cardinalities))
+        return -(-raw // self.pad_to) * self.pad_to
+
+    def offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.cardinalities)[:-1]]
+                              ).astype(np.int32)
+
+    def table_bytes(self, bytes_per_elem: int = 4) -> list[int]:
+        return [int(v) * self.dim * bytes_per_elem
+                for v in self.cardinalities]
+
+
+def init_table(key: Array, spec: FieldSpec, scale: float = 0.01,
+               dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (spec.total_rows, spec.dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def globalize(indices: Array, spec: FieldSpec) -> Array:
+    """Field-local (B, F) indices -> global row ids in the stacked table."""
+    offsets = jnp.asarray(spec.offsets())
+    return indices + offsets[None, :]
+
+
+def field_lookup(table: Array, indices: Array, spec: FieldSpec,
+                 field_mask: Array | None = None) -> Array:
+    """(B, F) field-local indices -> (B, F, D) embeddings.
+
+    ``field_mask`` (F,) zeroes pruned fields (F-Permutation masking).
+    """
+    emb = jnp.take(table, globalize(indices, spec), axis=0)
+    if field_mask is not None:
+        emb = emb * field_mask.astype(emb.dtype)[None, :, None]
+    return emb
+
+
+def embedding_bag(table: Array, indices: Array, segment_ids: Array,
+                  num_bags: int, mode: str = "sum",
+                  weights: Array | None = None) -> Array:
+    """EmbeddingBag: flat (L,) indices reduced into (num_bags, D).
+
+    mode in {"sum", "mean", "max"}.  ``weights`` (L,) for weighted sum.
+    """
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+        c = jax.ops.segment_sum(jnp.ones_like(segment_ids, jnp.float32),
+                                segment_ids, num_segments=num_bags)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=num_bags)
+    raise ValueError(mode)
+
+
+def multi_hot_lookup(table: Array, indices: Array, spec: FieldSpec,
+                     valid: Array | None = None) -> Array:
+    """(B, F, K) multi-hot field indices -> (B, F, D) bag-summed embeddings."""
+    b, f, k = indices.shape
+    offsets = jnp.asarray(spec.offsets())
+    gidx = indices + offsets[None, :, None]
+    rows = jnp.take(table, gidx.reshape(-1), axis=0).reshape(b, f, k, -1)
+    if valid is not None:
+        rows = rows * valid.astype(rows.dtype)[..., None]
+    return rows.sum(axis=2)
+
+
+def hash_indices(raw_ids: Array, vocab: int, salt: int = 0x9E3779B9) -> Array:
+    """Multiplicative hashing of open-vocabulary ids into [0, vocab)."""
+    h = (raw_ids.astype(jnp.uint32) * jnp.uint32(salt)) ^ (
+        raw_ids.astype(jnp.uint32) >> 16)
+    return (h % jnp.uint32(vocab)).astype(jnp.int32)
+
+
+def qr_lookup(q_table: Array, r_table: Array, raw_ids: Array,
+              num_buckets: int) -> Array:
+    """Quotient-remainder trick (Shi et al. 2019): V rows from 2*sqrt(V)."""
+    q = jnp.take(q_table, raw_ids // num_buckets, axis=0)
+    r = jnp.take(r_table, raw_ids % num_buckets, axis=0)
+    return q * r
+
+
+def one_hot_matmul_lookup(table: Array, indices: Array) -> Array:
+    """Lookup as onehot(idx) @ table — the MXU-friendly alternative.
+
+    On TPU a gather of many rows from a sharded table lowers to dynamic
+    slices + collectives; for *small vocab* tables a one-hot matmul keeps
+    everything on the MXU and lets the partitioner emit a single
+    reduce-scatter.  Perf-pass lever; numerically identical.
+    """
+    oh = jax.nn.one_hot(indices, table.shape[0], dtype=table.dtype)
+    return oh @ table

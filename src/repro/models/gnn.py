@@ -1,0 +1,135 @@
+"""PNA: Principal Neighbourhood Aggregation (Corso et al. 2020).
+
+Message passing via jax.ops.segment_* over an edge list — JAX has no
+sparse-matmul path for this (BCOO only), so the scatter/gather pipeline IS
+the system (kernel_taxonomy §GNN, SpMM regime).
+
+Per layer:  m_ij = MLP_msg([h_i, h_j])
+            agg  = [mean, max, min, std]  over incoming edges (4 aggregators)
+            scal = [1, log(d+1)/delta, delta/log(d+1)]  (3 degree scalers)
+            h_i' = MLP_upd([h_i, concat(agg x scal)])   (12 * d_hidden in)
+
+Shapes: node features (N, F_in); edges (src, dst) int32 (E,).
+Supports an optional learned node-id embedding table (the minibatch_lg
+cell: 232k-row table — the SHARK F-Quantization surface for GNNs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+_NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    d_in: int
+    d_hidden: int = 75
+    n_layers: int = 4
+    num_classes: int = 16
+    delta: float = 2.5            # avg log-degree normaliser (dataset stat)
+    node_vocab: int = 0           # >0: learned id-embedding table
+    graph_readout: bool = False   # molecule cell: per-graph regression
+    param_dtype: object = jnp.float32
+
+
+def init_params(key: Array, cfg: PNAConfig) -> dict:
+    keys = jax.random.split(key, cfg.n_layers * 2 + 3)
+    d = cfg.d_hidden
+    p: dict = {"enc": L.dense_bias_init(keys[0], max(cfg.d_in, 1), d,
+                                        cfg.param_dtype)}
+    if cfg.node_vocab:
+        p["embed_table"] = (jax.random.normal(
+            keys[1], (cfg.node_vocab, d), jnp.float32) * 0.02
+        ).astype(cfg.param_dtype)
+    for i in range(cfg.n_layers):
+        p[f"layer_{i}"] = {
+            "msg": L.mlp_init(keys[2 + 2 * i], (2 * d, d, d),
+                              cfg.param_dtype),
+            "upd": L.mlp_init(keys[3 + 2 * i], (d + 12 * d, d, d),
+                              cfg.param_dtype),
+            "ln": L.layernorm_init(d, cfg.param_dtype),
+        }
+    p["out"] = L.dense_bias_init(keys[-1], d,
+                                 1 if cfg.graph_readout else cfg.num_classes,
+                                 cfg.param_dtype)
+    return p
+
+
+def _aggregate(msg: Array, dst: Array, n: int) -> tuple[Array, Array]:
+    """4 PNA aggregators + in-degree.  msg (E, D) -> (N, 4D), deg (N,)."""
+    ones = jnp.ones((msg.shape[0],), jnp.float32)
+    deg = jax.ops.segment_sum(ones, dst, num_segments=n)
+    s = jax.ops.segment_sum(msg, dst, num_segments=n)
+    mean = s / jnp.maximum(deg, 1.0)[:, None]
+    sq = jax.ops.segment_sum(jnp.square(msg), dst, num_segments=n)
+    var = jnp.maximum(sq / jnp.maximum(deg, 1.0)[:, None] - mean ** 2, 0.0)
+    std = jnp.sqrt(var + 1e-8)
+    mx = jax.ops.segment_max(msg, dst, num_segments=n)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    mn = -jax.ops.segment_max(-msg, dst, num_segments=n)
+    mn = jnp.where(jnp.isfinite(mn), mn, 0.0)
+    return jnp.concatenate([mean, mx, mn, std], axis=-1), deg
+
+
+def pna_layer(params: dict, cfg: PNAConfig, h: Array, src: Array,
+              dst: Array) -> Array:
+    n = h.shape[0]
+    m_in = jnp.concatenate([h[dst], h[src]], axis=-1)       # (E, 2D)
+    msg = L.mlp(params["msg"], m_in, act=jax.nn.relu, final_act=True)
+    agg, deg = _aggregate(msg, dst, n)                      # (N, 4D)
+    logd = jnp.log(deg + 1.0)[:, None]
+    amp = logd / cfg.delta
+    att = cfg.delta / jnp.maximum(logd, 1e-6)
+    scaled = jnp.concatenate([agg, agg * amp, agg * att], axis=-1)  # 12D
+    upd_in = jnp.concatenate([h, scaled.astype(h.dtype)], axis=-1)
+    out = L.mlp(params["upd"], upd_in, act=jax.nn.relu, final_act=True)
+    return L.layernorm(params["ln"], h + out)
+
+
+def forward(params: dict, cfg: PNAConfig, batch: dict) -> Array:
+    """batch: features (N, F), src/dst (E,), optional node_ids (N,),
+    optional graph_ids (N,) for graph readout.  Returns node logits
+    (N, C) or graph predictions (G,)."""
+    feats = batch["features"]
+    if feats.shape[-1] > 0:
+        h = L.dense_bias(params["enc"], feats)
+    else:
+        h = jnp.zeros((feats.shape[0], cfg.d_hidden), cfg.param_dtype)
+    if cfg.node_vocab and "node_ids" in batch:
+        h = h + jnp.take(params["embed_table"], batch["node_ids"], axis=0)
+    h = jax.nn.relu(h)
+    for i in range(cfg.n_layers):
+        h = pna_layer(params[f"layer_{i}"], cfg, h, batch["src"],
+                      batch["dst"])
+    if cfg.graph_readout:
+        g = batch["graph_ids"]
+        ngraphs = int(batch["labels"].shape[0])
+        pooled = jax.ops.segment_sum(h, g, num_segments=ngraphs)
+        cnt = jax.ops.segment_sum(jnp.ones_like(g, jnp.float32), g,
+                                  num_segments=ngraphs)
+        pooled = pooled / jnp.maximum(cnt, 1.0)[:, None]
+        return L.dense_bias(params["out"], pooled)[:, 0]
+    return L.dense_bias(params["out"], h)
+
+
+def node_loss(params: dict, cfg: PNAConfig, batch: dict) -> Array:
+    """Cross entropy on seed nodes (or all nodes for full-batch)."""
+    logits = forward(params, cfg, batch)
+    if "seed_local" in batch:
+        logits = logits[batch["seed_local"]]
+    labels = batch["labels"]
+    from repro.core.metrics import softmax_xent
+    return softmax_xent(logits, labels).mean()
+
+
+def graph_loss(params: dict, cfg: PNAConfig, batch: dict) -> Array:
+    pred = forward(params, cfg, batch)
+    return jnp.mean(jnp.square(pred - batch["labels"]))

@@ -1,0 +1,123 @@
+"""Shared neural-net layers (pure JAX, dict-pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take a PRNG key and
+    return the dict; apply fns take (params, x, ...).
+  * compute dtype is configurable (bf16 for the big LM configs); params
+    are stored in ``param_dtype`` and accumulated in fp32 inside matmuls
+    via preferred_element_type.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> dict:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def dense(params: dict, x: Array) -> Array:
+    return jnp.dot(x, params["w"], preferred_element_type=jnp.float32
+                   ).astype(x.dtype)
+
+
+def dense_bias_init(key: Array, d_in: int, d_out: int, dtype=jnp.float32,
+                    scale: float | None = None) -> dict:
+    p = dense_init(key, d_in, d_out, dtype, scale)
+    p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_bias(params: dict, x: Array) -> Array:
+    y = jnp.dot(x, params["w"], preferred_element_type=jnp.float32)
+    return (y + params["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_init(key: Array, dims: Sequence[int], dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": dense_bias_init(keys[i], dims[i], dims[i + 1], dtype)
+            for i in range(len(dims) - 1)}
+
+
+def mlp(params: dict, x: Array, act=jax.nn.relu,
+        final_act: bool = False) -> Array:
+    n = len(params)
+    for i in range(n):
+        x = dense_bias(params[f"l{i}"], x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["g"].astype(jnp.float32)
+            + params["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+# Frequencies are computed directly from positions (no (max_pos, Dh/2)
+# table): at 512k-token decode a materialised table would cost hundreds of
+# MB replicated per device; position-wise computation is O(T * Dh/2).
+
+def rope_inv_freq(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, inv_freq: Array, positions: Array) -> Array:
+    """x: (B, T, H, Dh); inv_freq: (Dh/2,); positions: (T,) or (B, T)."""
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., T, d/2)
+    if ang.ndim == 2:       # (T, d/2) -> broadcast over batch
+        ang = ang[None]
+    c = jnp.cos(ang)[..., None, :]    # (B|1, T, 1, d/2)
+    s = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_init(key: Array, d_model: int, d_ff: int, dtype=jnp.float32
+                ) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": dense_init(k1, d_model, d_ff, dtype),
+            "up": dense_init(k2, d_model, d_ff, dtype),
+            "down": dense_init(k3, d_ff, d_model, dtype)}
+
+
+def swiglu(params: dict, x: Array) -> Array:
+    g = dense(params["gate"], x)
+    u = dense(params["up"], x)
+    return dense(params["down"], jax.nn.silu(g) * u)
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))

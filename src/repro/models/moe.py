@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based dispatch.
+
+TPU-native dispatch (static shapes, no per-token pointer chasing):
+
+  1. router logits -> top-k expert ids + normalised weights per token
+  2. flatten (T*k) assignments, argsort by expert id
+  3. position-within-expert = rank in the sorted order minus the expert's
+     group start (computed from a cumulative histogram)
+  4. scatter tokens into an (E, C, D) capacity buffer; assignments beyond
+     capacity C are dropped (GShard-style), C = ceil(T*k/E) * capacity_factor
+  5. batched expert GEMM (E, C, D) x (E, D, F) — the MXU-friendly shape
+  6. scatter-add back with routing weights
+
+Supports shared experts (DeepSeek-V2) that bypass routing.  Router z-loss
+and load-balance aux loss included (Switch/ST-MoE style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import ctx
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                   # per-expert hidden dim
+    num_experts: int
+    top_k: int
+    num_shared: int = 0         # DeepSeek shared experts
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    # dispatch locality: tokens are dispatched into per-block capacity
+    # buffers whose leading block dim stays sharded over the data axis.
+    # With a single global buffer every data shard's scatter forces an
+    # (E, C_global, D) all-reduce — measured 4.5 TB/device/step on the
+    # mixtral train_4k cell.  Set to the data-parallel degree in
+    # production configs; 1 recovers the naive global dispatch.
+    dispatch_blocks: int = 1
+
+
+def moe_init(key: Array, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(ke, 3)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+    p = {
+        "router": L.dense_init(kr, d, e, jnp.float32),  # router kept fp32
+        "gate": (jax.random.normal(k1, (e, d, f), jnp.float32)
+                 * scale_in).astype(dtype),
+        "up": (jax.random.normal(k2, (e, d, f), jnp.float32)
+               * scale_in).astype(dtype),
+        "down": (jax.random.normal(k3, (e, f, d), jnp.float32)
+                 * scale_out).astype(dtype),
+    }
+    if cfg.num_shared:
+        p["shared"] = L.swiglu_init(ks, d, f * cfg.num_shared, dtype)
+    return p
+
+
+def _routing(router_logits: Array, cfg: MoEConfig):
+    """(T, E) logits -> (T, k) expert ids, (T, k) weights, aux losses."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.maximum(
+        weights.sum(axis=-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch eq. 4): E * sum_e f_e * p_e
+    t = probs.shape[0]
+    me = probs.mean(axis=0)
+    one_hot = jax.nn.one_hot(experts[:, 0], cfg.num_experts,
+                             dtype=jnp.float32)
+    fe = one_hot.mean(axis=0)
+    aux = cfg.num_experts * jnp.sum(fe * me) * cfg.router_aux_coef
+    z = jnp.mean(jax.nn.logsumexp(router_logits, axis=-1) ** 2) \
+        * cfg.router_z_coef
+    return experts, weights, aux + z
+
+
+def moe_ffn(params: dict, cfg: MoEConfig, x: Array
+            ) -> tuple[Array, Array]:
+    """x: (B, T, D) -> (out (B, T, D), aux_loss scalar).
+
+    Block-local dispatch: tokens are split into ``dispatch_blocks``
+    groups; routing/sort/scatter/combine happen independently per block
+    (block dim sharded over data), so no collective touches the capacity
+    buffers — only the expert GEMMs' TP reduction crosses the mesh.
+    """
+    b, t, d = x.shape
+    n = b * t
+    nb = max(1, min(cfg.dispatch_blocks, n))
+    nloc = n // nb
+    assert n % nb == 0, (n, nb)
+    tokens = ctx.constrain(x.reshape(nb, nloc, d), "batch", None, None)
+    logits = jnp.einsum("gnd,de->gne", tokens.astype(jnp.float32),
+                        params["router"]["w"])
+    experts, weights, aux = _routing(logits.reshape(n, -1), cfg)
+
+    k = cfg.top_k
+    e = cfg.num_experts
+    cap = int(max(1, round(nloc * k / e * cfg.capacity_factor)))
+    L_blk = nloc * k
+
+    blk_expert = experts.reshape(nb, L_blk)        # (nb, nloc*k)
+    blk_weight = weights.reshape(nb, L_blk)
+    blk_token = jnp.tile(jnp.repeat(jnp.arange(nloc), k)[None], (nb, 1))
+
+    order = jnp.argsort(blk_expert, axis=-1, stable=True)
+    sorted_expert = jnp.take_along_axis(blk_expert, order, axis=-1)
+    sorted_token = jnp.take_along_axis(blk_token, order, axis=-1)
+    sorted_weight = jnp.take_along_axis(blk_weight, order, axis=-1)
+
+    # per-block group starts via searchsorted on the sorted expert ids
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_expert)
+    pos_in_expert = jnp.arange(L_blk)[None, :] \
+        - jnp.take_along_axis(starts, sorted_expert, axis=-1)
+    keep = pos_in_expert < cap
+    slot = sorted_expert * cap + jnp.where(keep, pos_in_expert, 0)
+
+    # block-local scatter into (nb, E*C, D); block dim stays sharded
+    gathered = jnp.take_along_axis(tokens, sorted_token[..., None],
+                                   axis=1) * keep[..., None].astype(x.dtype)
+    buf = jax.vmap(
+        lambda s, g: jnp.zeros((e * cap, d), x.dtype
+                               ).at[s].add(g, mode="drop"))(slot, gathered)
+    buf = ctx.constrain(buf.reshape(nb, e, cap, d), "batch", None, None,
+                        None)
+
+    # batched expert SwiGLU (block dim rides along as a batch dim)
+    g = jnp.einsum("gecd,edf->gecf", buf, params["gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("gecd,edf->gecf", buf, params["up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    y = jnp.einsum("gecf,efd->gecd", h, params["down"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # block-local combine
+    y_flat = y.reshape(nb, e * cap, d)
+    per_assign = jnp.take_along_axis(y_flat, slot[..., None], axis=1) \
+        * (sorted_weight * keep)[..., None].astype(x.dtype)
+    out = jax.vmap(
+        lambda tkn, pa: jnp.zeros((nloc, d), x.dtype).at[tkn].add(pa)
+    )(sorted_token, per_assign)
+
+    if cfg.num_shared:
+        out = out + L.swiglu(params["shared"], tokens)
+    out = ctx.constrain(out, "batch", None, None)
+    return out.reshape(b, t, d), aux

@@ -1,0 +1,341 @@
+"""Decoder-only LM family: SmolLM / Qwen3 / DeepSeek-Coder / Mixtral /
+DeepSeek-V2-lite as one configurable architecture.
+
+Structure choices that matter at pod scale:
+
+  * **scan-over-layers** with stacked (L, ...) params — one compiled layer
+    body regardless of depth (62-layer DeepSeek-Coder compiles as fast as
+    2-layer smoke configs) and the standard MaxText-style remat unit.
+  * configurable remat policy ("full" recompute, "dots" to save matmul
+    outputs, "none").
+  * logits stay sharded over the model axis (vocab dim) — the (T, 152k)
+    logits tensor is never replicated; the CE loss reduces it with a psum
+    inserted by the partitioner.
+  * MoE layers (Mixtral / DeepSeek-V2-lite) via repro.models.moe;
+    DeepSeek's ``first_k_dense`` layers use a plain SwiGLU.
+  * token embedding is ONE row-sharded table — the SHARK F-Quantization
+    surface for the LM family (token frequency == row priority).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics
+from repro.dist import ctx
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    attn: str = "gqa"                 # "gqa" | "mla"
+    qk_norm: bool = False             # Qwen3
+    window: int | None = None         # Mixtral SWA
+    moe: M.MoEConfig | None = None
+    first_dense: int = 0              # DeepSeek first_k_dense_replace
+    kv_lora_rank: int = 512           # MLA
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    max_seq: int = 4096
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: str = "full"               # "full" | "dots" | "none"
+    attn_chunk: int = 1024
+    attn_pin: bool = False         # see attention.GQAConfig.pin
+
+    def gqa(self) -> A.GQAConfig:
+        return A.GQAConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                           self.head_dim, self.qk_norm, self.window,
+                           self.rope_theta, self.attn_chunk,
+                           self.attn_pin)
+
+    def mla(self) -> A.MLAConfig:
+        return A.MLAConfig(self.d_model, self.n_heads, self.kv_lora_rank,
+                           self.qk_nope_dim, self.qk_rope_dim,
+                           self.v_head_dim, self.rope_theta,
+                           self.attn_chunk, self.attn_pin)
+
+
+# ------------------------------------------------------------------- init
+
+def _init_layer(key: Array, cfg: LMConfig, dense_ffn: bool) -> dict:
+    ka, kf = jax.random.split(key)
+    dt = cfg.param_dtype
+    if cfg.attn == "mla":
+        attn = A.mla_init(ka, cfg.mla(), dt)
+    else:
+        attn = A.gqa_init(ka, cfg.gqa(), dt)
+    p = {"attn": attn,
+         "ln1": L.rmsnorm_init(cfg.d_model, dt),
+         "ln2": L.rmsnorm_init(cfg.d_model, dt)}
+    if cfg.moe is not None and not dense_ffn:
+        p["moe"] = M.moe_init(kf, cfg.moe, dt)
+    else:
+        p["ffn"] = L.swiglu_init(kf, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key: Array, cfg: LMConfig) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    params: dict = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02
+                  ).astype(cfg.param_dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+    n_scan = cfg.n_layers - cfg.first_dense
+    keys = jax.random.split(kl, n_scan)
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, dense_ffn=False))(keys)
+    for i in range(cfg.first_dense):
+        params[f"dense_layer_{i}"] = _init_layer(
+            jax.random.fold_in(kl, 10_000 + i), cfg, dense_ffn=True)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab,
+                                         cfg.param_dtype, scale=0.02)
+    return params
+
+
+# ---------------------------------------------------------------- forward
+
+def _layer_fwd(layer: dict, cfg: LMConfig, x: Array, rope, positions: Array,
+               dense_ffn: bool) -> tuple[Array, Array, tuple]:
+    """Pre-norm block.  Returns (x, aux_loss, kv_cache_parts)."""
+    x = ctx.constrain(x, "batch", None, None)
+    h = L.rmsnorm(layer["ln1"], x)
+    if cfg.attn == "mla":
+        a, cache = A.mla_attend(layer["attn"], cfg.mla(), h, rope, positions)
+    else:
+        a, cache = A.gqa_attend(layer["attn"], cfg.gqa(), h, rope, positions)
+    x = ctx.constrain(x + a, "batch", None, None)
+    h = L.rmsnorm(layer["ln2"], x)
+    if cfg.moe is not None and not dense_ffn:
+        f, aux = M.moe_ffn(layer["moe"], cfg.moe, h)
+    else:
+        f, aux = L.swiglu(layer["ffn"], h), jnp.zeros((), jnp.float32)
+    return ctx.constrain(x + f, "batch", None, None), aux, cache
+
+
+def _remat_wrap(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def backbone(params: dict, cfg: LMConfig, tokens: Array,
+             return_caches: bool = False):
+    """tokens (B, T) -> hidden (B, T, D), aux_loss, caches (optional)."""
+    b, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    rope = L.rope_inv_freq(
+        cfg.head_dim if cfg.attn == "gqa" else cfg.qk_rope_dim,
+        cfg.rope_theta)
+    positions = jnp.arange(t, dtype=jnp.int32)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+
+    for i in range(cfg.first_dense):
+        x, aux, cache = _layer_fwd(params[f"dense_layer_{i}"], cfg, x, rope,
+                                   positions, dense_ffn=True)
+        aux_total += aux
+        caches.append(cache)
+
+    def body(carry, layer):
+        x, aux_acc = carry
+        x, aux, cache = _layer_fwd(layer, cfg, x, rope, positions,
+                                   dense_ffn=False)
+        out = cache if return_caches else ()
+        return (x, aux_acc + aux), out
+
+    body = _remat_wrap(body, cfg)
+    (x, aux_total), scan_caches = jax.lax.scan(body, (x, aux_total),
+                                               params["layers"])
+    x = L.rmsnorm(params["final_norm"], x)
+    if return_caches:
+        return x, aux_total, (caches, scan_caches)
+    return x, aux_total
+
+
+def logits_fn(params: dict, cfg: LMConfig, hidden: Array) -> Array:
+    head = params["embed"].T if cfg.tie_embeddings \
+        else params["lm_head"]["w"]
+    return jnp.dot(hidden, head.astype(cfg.compute_dtype),
+                   preferred_element_type=jnp.float32)
+
+
+def lm_loss(params: dict, cfg: LMConfig, tokens: Array) -> Array:
+    """Next-token cross entropy (mean over positions) + MoE aux."""
+    hidden, aux = backbone(params, cfg, tokens)
+    logits = logits_fn(params, cfg, hidden[:, :-1])
+    ce = metrics.softmax_xent(logits, tokens[:, 1:])
+    return ce.mean() + aux
+
+
+def prefill(params: dict, cfg: LMConfig, tokens: Array):
+    """Returns (last-position logits, caches) — the serving prefill step."""
+    hidden, _, caches = backbone(params, cfg, tokens, return_caches=True)
+    logits = logits_fn(params, cfg, hidden[:, -1:])
+    return logits, caches
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, rolling: bool = False) -> dict:
+    """Decode cache pytree (scan-stacked over layers).
+
+    rolling=True (SWA serving): ``max_len`` should be the window size; a
+    per-slot absolute-position array is carried for masking, and writes
+    wrap at ``cache_len % max_len``.
+    """
+    n_scan = cfg.n_layers - cfg.first_dense
+    if cfg.attn == "mla":
+        shape_a = (n_scan, batch, max_len, cfg.kv_lora_rank)
+        shape_b = (n_scan, batch, max_len, cfg.qk_rope_dim)
+        dense_a = (cfg.first_dense, batch, max_len, cfg.kv_lora_rank)
+        dense_b = (cfg.first_dense, batch, max_len, cfg.qk_rope_dim)
+    else:
+        shape_a = (n_scan, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        shape_b = shape_a
+        dense_a = (cfg.first_dense, batch, max_len, cfg.n_kv_heads,
+                   cfg.head_dim)
+        dense_b = dense_a
+    cache = {"k": jnp.zeros(shape_a, dtype), "v": jnp.zeros(shape_b, dtype)}
+    if cfg.first_dense:
+        cache["dense_k"] = jnp.zeros(dense_a, dtype)
+        cache["dense_v"] = jnp.zeros(dense_b, dtype)
+    if rolling:
+        # slot -> absolute position; 2**30 marks never-written (masked out)
+        cache["pos"] = jnp.full((max_len,), 2 ** 30, jnp.int32)
+    return cache
+
+
+def decode_step(params: dict, cfg: LMConfig, token: Array, cache: dict,
+                cache_len: Array) -> tuple[Array, dict]:
+    """One token for every sequence in the batch.
+
+    token: (B, 1) int32; cache: see init_cache; cache_len: () int32.
+    Returns (logits (B, 1, V), new_cache).
+    """
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.compute_dtype)
+    rope = L.rope_inv_freq(
+        cfg.head_dim if cfg.attn == "gqa" else cfg.qk_rope_dim,
+        cfg.rope_theta)
+
+    rolling = "pos" in cache
+    if rolling:
+        window = cache["pos"].shape[0]
+        write_slot = cache_len % window
+        kv_positions = cache["pos"]
+    else:
+        write_slot = None
+        kv_positions = None
+
+    new_cache = dict(cache)
+    # unscanned first-dense layers
+    for i in range(cfg.first_dense):
+        layer = params[f"dense_layer_{i}"]
+        h = L.rmsnorm(layer["ln1"], x)
+        if cfg.attn == "mla":
+            a, ck, kr = A.mla_decode(layer["attn"], cfg.mla(), h,
+                                     cache["dense_k"][i],
+                                     cache["dense_v"][i], cache_len, rope)
+        else:
+            a, ck, kr = A.gqa_decode(layer["attn"], cfg.gqa(), h,
+                                     cache["dense_k"][i],
+                                     cache["dense_v"][i], cache_len, rope,
+                                     kv_positions, write_slot)
+        new_cache["dense_k"] = new_cache["dense_k"].at[i].set(ck)
+        new_cache["dense_v"] = new_cache["dense_v"].at[i].set(kr)
+        x = x + a
+        h = L.rmsnorm(layer["ln2"], x)
+        x = x + L.swiglu(layer["ffn"], h)
+
+    def body(x, scanned):
+        layer, ck, cv = scanned
+        h = L.rmsnorm(layer["ln1"], x)
+        if cfg.attn == "mla":
+            a, ck, cv = A.mla_decode(layer["attn"], cfg.mla(), h, ck, cv,
+                                     cache_len, rope)
+        else:
+            a, ck, cv = A.gqa_decode(layer["attn"], cfg.gqa(), h, ck, cv,
+                                     cache_len, rope, kv_positions,
+                                     write_slot)
+        x = x + a
+        h = L.rmsnorm(layer["ln2"], x)
+        if cfg.moe is not None:
+            f, _ = M.moe_ffn(layer["moe"], cfg.moe, h)
+        else:
+            f = L.swiglu(layer["ffn"], h)
+        return x + f, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    new_cache["k"], new_cache["v"] = ks, vs
+    if rolling:
+        new_cache["pos"] = cache["pos"].at[write_slot].set(cache_len)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = logits_fn(params, cfg, x)
+    return logits, new_cache
+
+
+def param_count(cfg: LMConfig) -> int:
+    """Analytic parameter count (no allocation)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    if cfg.attn == "mla":
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        attn = (d * cfg.n_heads * qk               # wq
+                + d * cfg.kv_lora_rank + cfg.kv_lora_rank  # wdkv + norm
+                + d * cfg.qk_rope_dim              # wkr
+                + cfg.kv_lora_rank * cfg.n_heads * cfg.qk_nope_dim
+                + cfg.kv_lora_rank * cfg.n_heads * cfg.v_head_dim
+                + cfg.n_heads * cfg.v_head_dim * d)
+    else:
+        attn = d * cfg.head_dim * (cfg.n_heads * 2 + cfg.n_kv_heads * 2) \
+            + (2 * cfg.head_dim if cfg.qk_norm else 0)
+    dense_ffn = 3 * d * f
+    if cfg.moe is not None:
+        m = cfg.moe
+        moe_ffn_p = d * m.num_experts + 3 * m.num_experts * d * m.d_ff \
+            + (3 * d * m.d_ff * m.num_shared if m.num_shared else 0)
+    else:
+        moe_ffn_p = dense_ffn
+    per_layer = attn + 2 * d
+    total = cfg.first_dense * (per_layer + dense_ffn) \
+        + (cfg.n_layers - cfg.first_dense) * (per_layer + moe_ffn_p)
+    total += v * d + d
+    if not cfg.tie_embeddings:
+        total += v * d
+    return total
+
+
+def active_param_count(cfg: LMConfig) -> int:
+    """Active params per token (MoE: only top-k + shared experts)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    m = cfg.moe
+    full_moe = 3 * m.num_experts * cfg.d_model * m.d_ff
+    active_moe = 3 * (m.top_k + m.num_shared) * cfg.d_model * m.d_ff
+    n_moe_layers = cfg.n_layers - cfg.first_dense
+    return param_count(cfg) - n_moe_layers * (full_moe - active_moe)

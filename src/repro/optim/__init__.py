@@ -1,0 +1,20 @@
+"""Pure-JAX optimizers (no optax in this environment) + gradient compression."""
+
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adam,
+    adamw,
+    adagrad,
+    chain_clip,
+    cosine_warmup,
+    constant_lr,
+    momentum,
+    proximal_sgd,
+    rowwise_adagrad,
+    sgd,
+)
+from repro.optim.grad_compress import (  # noqa: F401
+    compress_int8,
+    decompress_int8,
+    error_feedback_allreduce,
+)

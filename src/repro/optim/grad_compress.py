@@ -1,0 +1,65 @@
+"""Int8 gradient compression with error feedback (beyond-paper).
+
+Reuses SHARK's row-wise quantizer (Eq. 5-6) to compress the *wire format*
+of the data-parallel gradient exchange: each device quantizes its local
+gradient block to int8 with per-block scales, all-gathers the int8 payload
+(4x fewer bytes on the ICI than an fp32 all-reduce), dequantizes and
+reduces locally.  The quantization error is fed back into the next step's
+gradient (error feedback), which keeps SGD convergence (Karimireddy et al.
+2019).  Used inside shard_map over the data axis; off by default.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rowwise_quant as rq
+
+Array = jax.Array
+
+_BLOCK = 256
+
+
+def _pad_to_blocks(x: Array) -> tuple[Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, _BLOCK), pad
+
+
+def compress_int8(g: Array) -> tuple[Array, Array, int]:
+    """g -> (int8 blocks (N,256), scales (N,1), pad)."""
+    blocks, pad = _pad_to_blocks(g.astype(jnp.float32))
+    q, scale = rq.quantize_rowwise(blocks, bits=8)
+    return q, scale, pad
+
+
+def decompress_int8(q: Array, scale: Array, pad: int, shape) -> Array:
+    deq = rq.dequantize_rowwise(q, scale).reshape(-1)
+    if pad:
+        deq = deq[:-pad]
+    return deq.reshape(shape)
+
+
+def error_feedback_allreduce(g: Array, residual: Array,
+                             axis_name: str) -> tuple[Array, Array]:
+    """Compressed mean-all-reduce of ``g`` over ``axis_name``.
+
+    Call inside shard_map.  Returns (reduced_mean_grad, new_residual).
+    Wire bytes: 1x int8 payload + fp32 scale per 256 elems ~ 0.26x of fp32.
+    """
+    corrected = g + residual
+    q, scale, pad = compress_int8(corrected)
+    local_deq = decompress_int8(q, scale, pad, g.shape)
+    new_residual = corrected - local_deq
+
+    # all-gather the compressed payload, reduce in fp32 locally
+    qs = jax.lax.all_gather(q, axis_name)          # (W, N, 256) int8
+    ss = jax.lax.all_gather(scale, axis_name)      # (W, N, 1) fp32
+    world = qs.shape[0]
+    deq = rq.dequantize_rowwise(qs, ss).sum(axis=0).reshape(-1)
+    if pad:
+        deq = deq[:-pad]
+    return deq.reshape(g.shape) / world, new_residual

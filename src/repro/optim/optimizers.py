@@ -1,0 +1,258 @@
+"""Optimizers as (init, update) pairs over parameter pytrees.
+
+API mirrors optax minimally:
+
+    opt = adam(lr=1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Included: sgd / momentum / adam / adamw / adagrad / rowwise_adagrad
+(the industry-standard embedding optimizer: one accumulator *per row*,
+4 bytes/row instead of 4 bytes/element — matters at 1e9-row tables) /
+proximal_sgd (group-LASSO baseline) and a global-norm clip wrapper.
+LR schedules are plain callables step -> lr.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]  # (grads, state, params)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+# ----------------------------------------------------------------- schedules
+
+def constant_lr(lr: float) -> Callable[[Array], Array]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.0) -> Callable[[Array], Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def _resolve_lr(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------- optimizers
+
+class ScaleState(NamedTuple):
+    step: Array
+
+
+def sgd(lr) -> Optimizer:
+    def init(params):
+        return ScaleState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        eta = _resolve_lr(lr, state.step)
+        upd = jax.tree_util.tree_map(lambda g: -eta * g, grads)
+        return upd, ScaleState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    step: Array
+    velocity: PyTree
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        v = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return MomentumState(step=jnp.zeros((), jnp.int32), velocity=v)
+
+    def update(grads, state, params=None):
+        eta = _resolve_lr(lr, state.step)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: beta * vv + g, state.velocity, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda vv, g: -eta * (beta * vv + g), v, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda vv: -eta * vv, v)
+        return upd, MomentumState(step=state.step + 1, velocity=v)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam; with weight_decay > 0 it is AdamW (decoupled decay)."""
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree_util.tree_map(z, params),
+                         nu=jax.tree_util.tree_map(z, params))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        eta = _resolve_lr(lr, state.step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd_fn(m, v, p):
+            u = -eta * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u - eta * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if weight_decay:
+            upd = jax.tree_util.tree_map(upd_fn, mu, nu, params)
+        else:
+            upd = jax.tree_util.tree_map(
+                lambda m, v: upd_fn(m, v, None), mu, nu)
+        return upd, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+class AdagradState(NamedTuple):
+    step: Array
+    accum: PyTree
+
+
+def adagrad(lr, eps: float = 1e-10, init_accum: float = 0.1) -> Optimizer:
+    def init(params):
+        return AdagradState(
+            step=jnp.zeros((), jnp.int32),
+            accum=jax.tree_util.tree_map(
+                lambda p: jnp.full(p.shape, init_accum, jnp.float32), params))
+
+    def update(grads, state, params=None):
+        eta = _resolve_lr(lr, state.step)
+        accum = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+            state.accum, grads)
+        upd = jax.tree_util.tree_map(
+            lambda g, a: -eta * g / (jnp.sqrt(a) + eps), grads, accum)
+        return upd, AdagradState(step=state.step + 1, accum=accum)
+
+    return Optimizer(init, update)
+
+
+def rowwise_adagrad(lr, eps: float = 1e-10, init_accum: float = 0.1,
+                    min_ndim: int = 2) -> Optimizer:
+    """Adagrad with one accumulator per *row* for >=min_ndim-dim params.
+
+    The standard embedding-table optimizer at industrial scale (FBGEMM /
+    Monolith): state is V floats instead of V*D.  1-D params (biases,
+    norms) fall back to dense adagrad.
+    """
+
+    def _rowwise(p: Array) -> bool:
+        return p.ndim >= min_ndim
+
+    def init(params):
+        def acc(p):
+            if _rowwise(p):
+                return jnp.full(p.shape[:1], init_accum, jnp.float32)
+            return jnp.full(p.shape, init_accum, jnp.float32)
+        return AdagradState(step=jnp.zeros((), jnp.int32),
+                            accum=jax.tree_util.tree_map(acc, params))
+
+    def update(grads, state, params):
+        eta = _resolve_lr(lr, state.step)
+
+        def upd_acc(g, a, p):
+            g = g.astype(jnp.float32)
+            if _rowwise(p):
+                red = tuple(range(1, g.ndim))
+                a2 = a + jnp.mean(jnp.square(g), axis=red)
+                shape = a2.shape + (1,) * (g.ndim - 1)
+                u = -eta * g / (jnp.sqrt(a2.reshape(shape)) + eps)
+            else:
+                a2 = a + jnp.square(g)
+                u = -eta * g / (jnp.sqrt(a2) + eps)
+            return u, a2
+
+        flat = jax.tree_util.tree_map(upd_acc, grads, state.accum, params)
+        upd = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+        accum = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return upd, AdagradState(step=state.step + 1, accum=accum)
+
+    return Optimizer(init, update)
+
+
+def proximal_sgd(lr, lam: float, group_axes: int = -1) -> Optimizer:
+    """SGD + block soft-threshold prox step (group LASSO, Li et al. [12])."""
+
+    def init(params):
+        return ScaleState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        eta = _resolve_lr(lr, state.step)
+
+        def upd(g, p):
+            stepped = p - eta * g
+            norms = jnp.linalg.norm(stepped, axis=group_axes, keepdims=True)
+            shrink = jnp.maximum(0.0, 1.0 - lam * eta
+                                 / jnp.maximum(norms, 1e-12))
+            return stepped * shrink - p
+
+        return (jax.tree_util.tree_map(upd, grads, params),
+                ScaleState(step=state.step + 1))
+
+    return Optimizer(init, update)
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Global-norm gradient clipping in front of ``opt``."""
+
+    def update(grads, state, params=None):
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+        clipped = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        return opt.update(clipped, state, params)
+
+    return Optimizer(opt.init, update)

@@ -1,0 +1,3 @@
+"""Train/serve steps and the fault-tolerant loop."""
+
+from repro.train.steps import TrainState, make_train_step  # noqa: F401

@@ -1,0 +1,116 @@
+"""Fault-tolerant training loop.
+
+Posture for 1000+-node fleets (single-process semantics here, the
+mechanisms are the real ones):
+
+  * **checkpoint/restart**: atomic versioned checkpoints every
+    ``ckpt_every`` steps (async — serialization overlaps compute); on
+    (re)start the loop restores the newest valid checkpoint and resumes
+    at its step.  Crash-during-save leaves a torn tmp dir that restore
+    skips (tested).
+  * **data determinism across restarts**: batches are a pure function of
+    the step index (data.batch(step)) — resume replays the exact stream.
+  * **straggler mitigation**: per-step deadline tracking; steps whose
+    host-side wall time exceeds ``straggler_factor`` x the trailing median
+    are counted and surfaced in metrics (on a real fleet this signal
+    triggers hot-spare swap-in; here it feeds the log so the policy is
+    testable).
+  * **elastic scaling**: the mesh is constructed from live devices at
+    launch (launch/mesh.make_elastic_mesh); params restore onto whatever
+    mesh the relaunch built because checkpoints store host arrays with
+    shardings reapplied at restore.
+  * **NaN/overflow guard**: non-finite loss skips the state update
+    (keeps the last good state) and is counted; repeated blowups abort.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.train.steps import TrainState
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_every: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 50
+    straggler_factor: float = 3.0
+    max_consecutive_nans: int = 5
+    async_ckpt: bool = True
+
+
+@dataclasses.dataclass
+class LoopResult:
+    state: TrainState
+    steps_run: int
+    resumed_from: int | None
+    losses: list
+    stragglers: int
+    nan_skips: int
+
+
+def run(state: TrainState, step_fn: Callable, batch_fn: Callable,
+        cfg: LoopConfig, metrics_cb: Callable | None = None) -> LoopResult:
+    """batch_fn(step:int) -> batch pytree.  step_fn(state, batch)."""
+    mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+    resumed_from = None
+    start = 0
+    try:
+        state, restored_step = mgr.restore(state)
+        start = restored_step
+        resumed_from = restored_step
+    except FileNotFoundError:
+        pass
+
+    losses = []
+    durations: list[float] = []
+    stragglers = 0
+    nan_skips = 0
+    consecutive_nans = 0
+
+    for step in range(start, cfg.total_steps):
+        batch = batch_fn(step)
+        t0 = time.perf_counter()
+        new_state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+
+        if np.isfinite(loss):
+            state = new_state
+            consecutive_nans = 0
+        else:
+            nan_skips += 1
+            consecutive_nans += 1
+            if consecutive_nans >= cfg.max_consecutive_nans:
+                raise FloatingPointError(
+                    f"{consecutive_nans} consecutive non-finite losses "
+                    f"at step {step}")
+
+        durations.append(dt)
+        if len(durations) > 20:
+            durations.pop(0)
+        med = float(np.median(durations))
+        if len(durations) >= 5 and dt > cfg.straggler_factor * med:
+            stragglers += 1
+
+        losses.append(loss)
+        if metrics_cb and step % cfg.log_every == 0:
+            metrics_cb(step, metrics)
+        if (step + 1) % cfg.ckpt_every == 0:
+            mgr.save(step + 1, state, blocking=not cfg.async_ckpt)
+
+    if mgr.latest_step() != cfg.total_steps:
+        mgr.save(cfg.total_steps, state, blocking=True)
+    mgr.wait()
+    return LoopResult(state=state, steps_run=cfg.total_steps - start,
+                      resumed_from=resumed_from, losses=losses,
+                      stragglers=stragglers, nan_skips=nan_skips)

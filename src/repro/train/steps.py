@@ -1,0 +1,190 @@
+"""Generic train-step factory with F-Quantization hooks.
+
+The step a pod actually runs:
+
+    grads  = grad(loss)(params, batch)           # remat per model config
+    params = optimizer(params, grads)
+    # F-Quantization write path (recsys / LM token tables):
+    priority = Eq.7(priority, batch indices, labels)
+    params[table] = snap(params[table], Eq.8(priority), rng)   # Eq.5-6
+
+Everything is a pure function of (state, batch) -> (state, metrics), so
+one jax.jit(..., in_shardings, out_shardings, donate_argnums=0) covers
+single-pod and multi-pod meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat_store
+from repro.core.qat_store import FQuantConfig
+from repro.optim.optimizers import Optimizer, apply_updates, global_norm
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: Array
+    priority: Any = None      # fquant row priorities (or None)
+    rng: Array | None = None
+
+
+class FQuantHook(NamedTuple):
+    """How F-Quantization attaches to a model's params."""
+    cfg: FQuantConfig
+    table_path: str                     # params key holding the table
+    indices_fn: Callable[[dict], Array]  # batch -> flat/2D row indices
+    labels_fn: Callable[[dict], Array]   # batch -> per-sample labels
+    sparse_snap: bool = False           # touched-rows-only write path
+
+
+def init_state(params: Any, optimizer: Optimizer,
+               fquant: FQuantHook | None = None,
+               seed: int = 0) -> TrainState:
+    pri = None
+    if fquant is not None:
+        vocab = params[fquant.table_path].shape[0]
+        pri = jnp.zeros((vocab,), jnp.float32)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32), priority=pri,
+                      rng=jax.random.PRNGKey(seed))
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    fquant: FQuantHook | None = None,
+                    with_metrics: bool = True) -> Callable:
+    """loss_fn(params, batch) -> scalar.  Returns step(state, batch)."""
+
+    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        updates, opt = optimizer.update(grads, state.opt, state.params)
+        params = apply_updates(state.params, updates)
+
+        priority = state.priority
+        rng = state.rng
+        if fquant is not None:
+            rng, sub = jax.random.split(rng)
+            store = qat_store.QATStore(table=params[fquant.table_path],
+                                       priority=priority)
+            if fquant.sparse_snap:
+                store = qat_store.post_step_sparse(
+                    store, fquant.indices_fn(batch),
+                    fquant.labels_fn(batch), fquant.cfg,
+                    seed=state.step.astype(jnp.uint32))
+            else:
+                store = qat_store.post_step(
+                    store, fquant.indices_fn(batch),
+                    fquant.labels_fn(batch), fquant.cfg, key=sub)
+            params = dict(params)
+            params[fquant.table_path] = store.table
+            priority = store.priority
+
+        metrics = {"loss": loss}
+        if with_metrics:
+            metrics["grad_norm"] = global_norm(grads)
+        new_state = TrainState(params=params, opt=opt,
+                               step=state.step + 1, priority=priority,
+                               rng=rng)
+        return new_state, metrics
+
+    return step
+
+
+def make_sparse_table_train_step(embed_fn: Callable, loss_from_emb: Callable,
+                                 indices_fn: Callable, labels_fn: Callable,
+                                 table_path: str, lr: float,
+                                 fq_cfg: FQuantConfig | None = None,
+                                 dense_optimizer: Optimizer | None = None,
+                                 eps: float = 1e-10) -> Callable:
+    """Recsys train step with a SPARSE embedding-table update path.
+
+    The dense path (make_train_step + rowwise_adagrad) reads and writes
+    the full (V, D) table every step even though a batch touches <=B*F
+    rows; at dlrm-rm2 scale that is ~20 GB/device/step of pure overhead.
+    This step differentiates w.r.t. the *gathered rows* instead:
+
+        emb = take(table, idx)                      (B, F, D)
+        d loss/d emb -> segment_sum over row ids    (touched rows only)
+        adagrad accum/table updated via .at[rows]   (touched rows only)
+        F-Quant priority decay (O(V) vector) + sparse snap
+
+    Dense-side params use ``dense_optimizer`` (adam by default).
+    State: TrainState with opt = (dense_opt_state, accum (V,)).
+    """
+    from repro.optim import optimizers as opt_lib
+    dense_optimizer = dense_optimizer or opt_lib.adam(lr)
+
+    def init_sparse_state(params) -> TrainState:
+        dense = {k: v for k, v in params.items() if k != table_path}
+        vocab = params[table_path].shape[0]
+        opt = (dense_optimizer.init(dense),
+               jnp.full((vocab,), 0.1, jnp.float32))
+        pri = jnp.zeros((vocab,), jnp.float32) if fq_cfg else None
+        return TrainState(params=params, opt=opt,
+                          step=jnp.zeros((), jnp.int32), priority=pri,
+                          rng=jax.random.PRNGKey(0))
+
+    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        params = state.params
+        table = params[table_path]
+        dense = {k: v for k, v in params.items() if k != table_path}
+        gidx = indices_fn(batch)
+        flat = gidx.reshape(-1)
+        rows = jnp.take(table, flat, axis=0
+                        ).reshape(gidx.shape + (table.shape[1],))
+
+        def loss_fn(dense_params, emb):
+            p = dict(dense_params)
+            p[table_path] = table      # heads must not touch the table
+            return loss_from_emb(p, emb, batch).mean()
+
+        loss, (g_dense, g_emb) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))(dense, rows)
+
+        # ---- sparse row-wise adagrad on the table -----------------------
+        dense_opt_state, accum = state.opt
+        g_rows = g_emb.reshape(-1, table.shape[1])
+        # de-duplicate: sum gradients of repeated rows via segment_sum
+        # onto the touched set (keep it simple: scatter-add onto V)
+        g_sq = (g_rows ** 2).mean(axis=-1)
+        accum = accum.at[flat].add(g_sq)
+        denom = jnp.sqrt(jnp.take(accum, flat, axis=0)) + eps
+        table = table.at[flat].add(-lr * g_rows / denom[:, None])
+
+        # ---- dense params ------------------------------------------------
+        upd, dense_opt_state = dense_optimizer.update(
+            g_dense, dense_opt_state, dense)
+        dense = apply_updates(dense, upd)
+
+        # ---- F-Quant sparse write path ----------------------------------
+        priority = state.priority
+        if fq_cfg is not None:
+            store = qat_store.QATStore(table=table, priority=priority)
+            store = qat_store.post_step_sparse(
+                store, gidx, labels_fn(batch), fq_cfg,
+                seed=state.step.astype(jnp.uint32))
+            table, priority = store.table, store.priority
+
+        params = dict(dense)
+        params[table_path] = table
+        new_state = TrainState(params=params,
+                               opt=(dense_opt_state, accum),
+                               step=state.step + 1, priority=priority,
+                               rng=state.rng)
+        return new_state, {"loss": loss,
+                           "grad_norm": global_norm(g_dense)}
+
+    step.init_state = init_sparse_state
+    return step
+
+
+def make_eval_step(loss_fn: Callable) -> Callable:
+    def eval_step(params, batch):
+        return loss_fn(params, batch)
+    return eval_step

@@ -1,0 +1,160 @@
+"""Chunked (flash-style) attention vs naive softmax oracle; decode paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+def naive_attention(q, k, v, causal=True, window=None, scale=None):
+    """Direct softmax reference.  q (B,T,Hq,D), k/v (B,S,Hkv,D[v])."""
+    b, tq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = scale or dh ** -0.5
+    qg = q.reshape(b, tq, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(tq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((tq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, tq, hq, v.shape[-1])
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (9, 3)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("chunk", [16, 64, 1000])
+def test_chunked_matches_naive(hq, hkv, causal, chunk):
+    b, t, dh = 2, 50, 16
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (b, t, hq, dh))
+    k = jax.random.normal(kk, (b, t, hkv, dh))
+    v = jax.random.normal(kv, (b, t, hkv, dh))
+    pos = jnp.arange(t)
+    out = A.chunked_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                              causal=causal, chunk=chunk)
+    ref = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [1, 8, 33])
+def test_sliding_window(window):
+    b, t, h, dh = 1, 40, 2, 8
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (b, t, h, dh)) for kk in keys)
+    pos = jnp.arange(t)
+    out = A.chunked_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                              causal=True, window=window, chunk=16)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_different_kv_value_dims():
+    """MLA shape: d_k != d_v."""
+    b, t = 2, 24
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, t, 4, 24))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, 4, 24))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, 4, 16))
+    pos = jnp.arange(t)
+    out = A.chunked_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                              chunk=8)
+    ref = naive_attention(q, k, v)
+    assert out.shape == (b, t, 4, 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_decode_matches_prefill():
+    """Decoding token t with a cache == position t of the full forward."""
+    cfg = A.GQAConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                      chunk=8)
+    params = A.gqa_init(jax.random.PRNGKey(0), cfg)
+    rope = L.rope_inv_freq(cfg.head_dim)
+    b, t = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, 32))
+    full, (k_full, v_full) = A.gqa_attend(params, cfg, x, rope,
+                                          jnp.arange(t))
+    # replay decode step by step
+    s_max = 16
+    ck = jnp.zeros((b, s_max, 2, 8))
+    cv = jnp.zeros((b, s_max, 2, 8))
+    for i in range(t):
+        out, ck, cv = A.gqa_decode(params, cfg, x[:, i:i + 1], ck, cv,
+                                   jnp.asarray(i), rope)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(full[:, i]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_decode_rolling_matches_linear_within_window():
+    """Rolling-buffer SWA decode == linear-cache decode once both see the
+    same window of history."""
+    w = 4
+    cfg = A.GQAConfig(d_model=16, n_heads=2, n_kv_heads=2, head_dim=8,
+                      window=w, chunk=4)
+    params = A.gqa_init(jax.random.PRNGKey(0), cfg)
+    rope = L.rope_inv_freq(cfg.head_dim)
+    b, t = 1, 10
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, t, 16))
+    # linear big cache
+    ck = jnp.zeros((b, 16, 2, 8))
+    cv = jnp.zeros((b, 16, 2, 8))
+    lin = []
+    for i in range(t):
+        o, ck, cv = A.gqa_decode(params, cfg, x[:, i:i + 1], ck, cv,
+                                 jnp.asarray(i), rope)
+        lin.append(o)
+    # rolling window cache
+    rk = jnp.zeros((b, w, 2, 8))
+    rv = jnp.zeros((b, w, 2, 8))
+    pos = jnp.full((w,), 2 ** 30, jnp.int32)
+    for i in range(t):
+        slot = jnp.asarray(i % w)
+        o, rk, rv = A.gqa_decode(params, cfg, x[:, i:i + 1], rk, rv,
+                                 jnp.asarray(i), rope,
+                                 kv_positions=pos, write_slot=slot)
+        pos = pos.at[slot].set(i)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(lin[i]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_mla_decode_matches_full():
+    cfg = A.MLAConfig(d_model=32, n_heads=2, kv_lora_rank=16,
+                      qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8, chunk=8)
+    params = A.mla_init(jax.random.PRNGKey(0), cfg)
+    rope = L.rope_inv_freq(cfg.qk_rope_dim)
+    b, t = 2, 9
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, 32))
+    full, _ = A.mla_attend(params, cfg, x, rope, jnp.arange(t))
+    ckv = jnp.zeros((b, 12, 16))
+    ckr = jnp.zeros((b, 12, 4))
+    for i in range(t):
+        out, ckv, ckr = A.mla_decode(params, cfg, x[:, i:i + 1], ckv, ckr,
+                                     jnp.asarray(i), rope)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(full[:, i]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_fully_masked_rows_are_finite():
+    """window smaller than gap -> all-masked rows must not NaN."""
+    b, t, h, dh = 1, 8, 1, 4
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, 1, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, h, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, h, dh))
+    out = A.chunked_attention(
+        q, k, v, q_positions=jnp.array([100]),
+        kv_positions=jnp.arange(t), causal=True, window=2, chunk=4)
+    assert bool(jnp.isfinite(out).all())

@@ -1,0 +1,147 @@
+"""Checkpoint manager + fault-tolerant loop: restart, corruption, resume."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.optim import adam
+from repro.train import TrainState, make_train_step
+from repro.train.loop import LoopConfig, run
+from repro.train.steps import init_state
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((2,)), "d": jnp.zeros((), jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    mgr.save(3, t)
+    restored, step = mgr.restore(t)
+    assert step == 3
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        t, restored)
+
+
+def test_async_save_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, t, blocking=False)
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_corrupt_checkpoint_skipped(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    t = _tree()
+    mgr.save(1, t)
+    mgr.save(2, t)
+    # corrupt the newest: manifest exists but npz destroyed
+    path = os.path.join(str(tmp_path), "step_0000000002", "host_0.npz")
+    with open(path, "w") as f:
+        f.write("garbage")
+    restored, step = mgr.restore(t)
+    assert step == 1   # fell back past the torn checkpoint
+
+
+def test_torn_save_invisible(tmp_path):
+    """A save that crashed before the manifest rename is not a version."""
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_step_9_123"))
+    assert mgr.all_steps() == []
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_tree())
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, {"a": jnp.ones((2, 2))})
+    with pytest.raises(FileNotFoundError):
+        mgr.restore({"a": jnp.ones((3, 3))})
+
+
+# ------------------------------------------------------------------ loop
+
+def _quadratic_problem(tmp_path, total=30, ckpt_every=10):
+    params = {"w": jnp.full((4,), 5.0)}
+    opt = adam(0.2)
+
+    def loss(p, batch):
+        return jnp.sum((p["w"] - batch["target"]) ** 2)
+
+    step = jax.jit(make_train_step(loss, opt))
+    state = init_state(params, opt)
+
+    def batch_fn(i):
+        return {"target": jnp.zeros((4,))}
+
+    cfg = LoopConfig(total_steps=total, ckpt_every=ckpt_every,
+                     ckpt_dir=str(tmp_path), log_every=1000)
+    return state, step, batch_fn, cfg
+
+
+def test_loop_trains_and_checkpoints(tmp_path):
+    state, step, batch_fn, cfg = _quadratic_problem(tmp_path)
+    res = run(state, step, batch_fn, cfg)
+    assert res.losses[-1] < res.losses[0] * 0.01
+    assert res.resumed_from is None
+    mgr = CheckpointManager(str(tmp_path))
+    assert 30 in mgr.all_steps()
+
+
+def test_loop_resumes_exactly(tmp_path):
+    """Run 30 steps in one shot vs 2 interrupted runs: same final state."""
+    d1, d2 = tmp_path / "a", tmp_path / "b"
+    state, step, batch_fn, cfg = _quadratic_problem(d1, total=30)
+    full = run(state, step, batch_fn, cfg)
+
+    state2, step2, batch_fn2, cfg2 = _quadratic_problem(d2, total=30)
+    cfg_first = LoopConfig(total_steps=20, ckpt_every=10,
+                           ckpt_dir=str(d2), log_every=1000)
+    run(state2, step2, batch_fn2, cfg_first)      # "crashes" after 20
+    resumed = run(state2, step2, batch_fn2, cfg2)  # restart from ckpt
+    assert resumed.resumed_from == 20
+    assert resumed.steps_run == 10
+    np.testing.assert_allclose(np.asarray(full.state.params["w"]),
+                               np.asarray(resumed.state.params["w"]),
+                               rtol=1e-6)
+
+
+def test_loop_nan_guard(tmp_path):
+    params = {"w": jnp.ones((2,))}
+    opt = adam(0.1)
+
+    def loss(p, batch):
+        return jnp.where(batch["bad"], jnp.nan, jnp.sum(p["w"] ** 2))
+
+    step = jax.jit(make_train_step(loss, opt))
+    state = init_state(params, opt)
+
+    def batch_fn(i):
+        return {"bad": jnp.asarray(i % 3 == 1)}  # every 3rd step NaNs
+
+    cfg = LoopConfig(total_steps=9, ckpt_every=100, ckpt_dir=str(tmp_path),
+                     max_consecutive_nans=2)
+    res = run(state, step, batch_fn, cfg)
+    assert res.nan_skips == 3
+    assert bool(jnp.isfinite(res.state.params["w"]).all())
+
+    def batch_fn_all_bad(i):
+        return {"bad": jnp.asarray(True)}
+
+    shutil.rmtree(str(tmp_path))
+    state = init_state({"w": jnp.ones((2,))}, opt)
+    with pytest.raises(FloatingPointError):
+        run(state, step, batch_fn_all_bad,
+            LoopConfig(total_steps=9, ckpt_every=100,
+                       ckpt_dir=str(tmp_path), max_consecutive_nans=2))

@@ -1,0 +1,113 @@
+"""Embedding substrate + data generators."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.data.criteo import CriteoConfig, CriteoSynth
+from repro.data.graphs import molecule_batch, padded_subgraph, random_graph
+from repro.models import embedding as E
+
+
+def test_field_spec_padding_and_offsets():
+    spec = E.FieldSpec((100, 200, 300), 8)
+    assert spec.total_rows % 512 == 0
+    assert spec.total_rows >= 600
+    np.testing.assert_array_equal(spec.offsets(), [0, 100, 300])
+
+
+def test_globalize_and_lookup_respect_fields():
+    spec = E.FieldSpec((10, 20), 4, pad_to=8)
+    table = jnp.arange(spec.total_rows * 4, dtype=jnp.float32
+                       ).reshape(-1, 4)
+    idx = jnp.array([[3, 5]])
+    emb = E.field_lookup(table, idx, spec)
+    np.testing.assert_array_equal(np.asarray(emb[0, 0]),
+                                  np.asarray(table[3]))
+    np.testing.assert_array_equal(np.asarray(emb[0, 1]),
+                                  np.asarray(table[10 + 5]))
+
+
+def test_field_mask_zeroes_pruned():
+    spec = E.FieldSpec((10, 10), 4, pad_to=8)
+    table = jnp.ones((spec.total_rows, 4))
+    emb = E.field_lookup(table, jnp.array([[1, 1]]), spec,
+                         field_mask=jnp.array([1.0, 0.0]))
+    assert float(emb[0, 0].sum()) == 4.0
+    assert float(emb[0, 1].sum()) == 0.0
+
+
+@given(st.integers(1, 50), st.integers(1, 8), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_embedding_bag_modes(n_idx, n_bags, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((32, 4)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 32, n_idx))
+    seg = jnp.asarray(np.sort(rng.integers(0, n_bags, n_idx)))
+    s = E.embedding_bag(table, idx, seg, n_bags, "sum")
+    m = E.embedding_bag(table, idx, seg, n_bags, "mean")
+    rows = np.asarray(table)[np.asarray(idx)]
+    segs = np.asarray(seg)
+    for b in range(n_bags):
+        expect = rows[segs == b].sum(axis=0) if (segs == b).any() \
+            else np.zeros(4)
+        np.testing.assert_allclose(np.asarray(s[b]), expect, rtol=1e-5,
+                                   atol=1e-6)
+        cnt = max((segs == b).sum(), 1)
+        np.testing.assert_allclose(np.asarray(m[b]), expect / cnt,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_one_hot_matmul_equals_take():
+    table = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    idx = jnp.array([3, 3, 7])
+    np.testing.assert_allclose(
+        np.asarray(E.one_hot_matmul_lookup(table, idx)),
+        np.asarray(jnp.take(table, idx, axis=0)), rtol=1e-6)
+
+
+def test_hash_indices_in_range_and_deterministic():
+    ids = jnp.arange(10000)
+    h1 = E.hash_indices(ids, 128)
+    h2 = E.hash_indices(ids, 128)
+    assert int(h1.min()) >= 0 and int(h1.max()) < 128
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    # roughly uniform occupancy
+    counts = np.bincount(np.asarray(h1), minlength=128)
+    assert counts.min() > 0
+
+
+def test_criteo_determinism_and_planted_truth():
+    ds1 = CriteoSynth(CriteoConfig(num_fields=6, important_fields=3,
+                                   seed=9))
+    ds2 = CriteoSynth(CriteoConfig(num_fields=6, important_fields=3,
+                                   seed=9))
+    b1, b2 = ds1.batch(128, 7), ds2.batch(128, 7)
+    np.testing.assert_array_equal(b1["indices"], b2["indices"])
+    np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    assert len(ds1.lossless_fields()) == 3
+    assert (np.abs(ds1.field_weight) > 0).sum() == 3
+    # zipf: row 0 is the most frequent
+    idx = np.concatenate([ds1.batch(1024, s)["indices"][:, 0]
+                          for s in range(5)])
+    counts = np.bincount(idx)
+    assert counts[0] == counts.max()
+
+
+def test_graph_block_indices_closed():
+    g = random_graph(300, 6, 8, seed=1)
+    blk = padded_subgraph(g, np.arange(16), (4, 2), seed=2)
+    n = blk["node_ids"].shape[0]
+    assert blk["src"].max() < n and blk["dst"].max() < n
+    assert blk["seed_local"].max() < n
+    assert blk["labels"].shape == (16,)
+
+
+def test_molecule_block_diagonal():
+    mb = molecule_batch(4, 10, 20, 8, seed=3)
+    for i in range(4):
+        sel = slice(i * 20, (i + 1) * 20)
+        assert (mb["src"][sel] >= i * 10).all()
+        assert (mb["src"][sel] < (i + 1) * 10).all()

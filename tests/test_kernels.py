@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FQuantConfig, pack
+from repro.core import qat_store as qs
+from repro.kernels.cin.kernel import cin_layer_pallas
+from repro.kernels.cin.ref import cin_layer_ref
+from repro.kernels.dequant_bag.kernel import dequant_bag_pallas
+from repro.kernels.dequant_bag.ops import packed_bag_lookup
+from repro.kernels.dequant_bag.ref import dequant_bag_ref
+from repro.kernels.rowwise_quant.kernel import quantize_rowwise_pallas
+from repro.kernels.rowwise_quant.ref import quantize_rowwise_ref
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (300, 128), (256, 64),
+                                   (1, 256), (1000, 32)])
+@pytest.mark.parametrize("mode", ["narrow", "full"])
+def test_rowwise_quant_rtn_sweep(shape, mode):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 0.05
+    q1, s1 = quantize_rowwise_pallas(x, mode=mode)
+    q2, s2 = quantize_rowwise_ref(x, mode=mode)
+    # values exactly on a .5 rounding boundary may land one level apart
+    # between the fused kernel and the oracle (1-ulp scale difference);
+    # allow <=1 level on <1% of entries, exact elsewhere.
+    dq = np.abs(np.asarray(q1, np.int32) - np.asarray(q2, np.int32))
+    assert dq.max() <= 1
+    assert (dq != 0).mean() < 0.03
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (129, 64)])
+def test_rowwise_quant_stochastic_sweep(shape):
+    x = jax.random.normal(jax.random.PRNGKey(1), shape) * 0.02
+    noise = jax.random.uniform(jax.random.PRNGKey(2), shape)
+    q1, _ = quantize_rowwise_pallas(x, noise)
+    q2, _ = quantize_rowwise_ref(x, noise)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@pytest.mark.parametrize("payload_dtype", [jnp.int8, jnp.bfloat16,
+                                           jnp.float32])
+@pytest.mark.parametrize("v,d,b,k", [(64, 128, 8, 5), (32, 64, 16, 1),
+                                     (128, 256, 4, 9)])
+def test_dequant_bag_sweep(payload_dtype, v, d, b, k):
+    key = jax.random.PRNGKey(0)
+    if payload_dtype == jnp.int8:
+        payload = jax.random.randint(key, (v, d), -128, 127, jnp.int8)
+    else:
+        payload = (jax.random.normal(key, (v, d)) * 0.1
+                   ).astype(payload_dtype)
+    scales = jax.random.uniform(jax.random.PRNGKey(1), (v,)) * 0.01
+    idx = jax.random.randint(jax.random.PRNGKey(2), (b, k), 0, v)
+    w = jax.random.uniform(jax.random.PRNGKey(3), (b, k))
+    out = dequant_bag_pallas(payload, scales, idx, w)
+    ref = dequant_bag_ref(payload, scales, idx, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_packed_bag_lookup_vs_jnp_path():
+    from repro.core.packed_store import bag_lookup as jnp_bag
+    cfg = FQuantConfig(stochastic=False)
+    st = qs.init(jax.random.PRNGKey(0), 96, 64, scale=0.05)
+    pri = jnp.concatenate([jnp.zeros(32), jnp.full(32, 1e4),
+                           jnp.full(32, 1e6)])
+    st = st._replace(priority=pri)
+    st = st._replace(table=qs.snap(st.table, qs.current_tiers(st, cfg),
+                                   cfg))
+    packed = pack(st, cfg)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (6, 4), 0, 96)
+    out = packed_bag_lookup(packed, idx)
+    seg = jnp.repeat(jnp.arange(6), 4)
+    ref = jnp_bag(packed, idx.reshape(-1), seg, 6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,h,m,d,o", [(17, 12, 10, 8, 24),
+                                       (64, 39, 39, 10, 200),
+                                       (3, 5, 7, 4, 2)])
+def test_cin_sweep(b, h, m, d, o):
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (o, h, m)) * 0.1
+    xk = jax.random.normal(jax.random.PRNGKey(1), (b, h, d))
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (b, m, d))
+    out = cin_layer_pallas(w, xk, x0)
+    ref = cin_layer_ref(w, xk, x0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_cin_block_invariance():
+    """Different block shapes give identical results."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (32, 8, 8)) * 0.1
+    xk = jax.random.normal(jax.random.PRNGKey(4), (40, 8, 16))
+    x0 = jax.random.normal(jax.random.PRNGKey(5), (40, 8, 16))
+    a = cin_layer_pallas(w, xk, x0, block_b=8, block_o=8)
+    b_ = cin_layer_pallas(w, xk, x0, block_b=64, block_o=32)
+    # block shape changes the fp32 accumulation order -> allclose not equal
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4,
+                               atol=1e-5)

@@ -1,0 +1,107 @@
+"""Optimizers + gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import optimizers as O
+from repro.optim.grad_compress import compress_int8, decompress_int8
+
+
+@pytest.mark.parametrize("make", [
+    lambda: O.sgd(0.1),
+    lambda: O.momentum(0.1),
+    lambda: O.adam(0.1),
+    lambda: O.adamw(0.1),
+    lambda: O.adagrad(0.5),
+    lambda: O.rowwise_adagrad(0.5),
+])
+def test_optimizers_descend_quadratic(make):
+    opt = make()
+    params = {"w": jnp.array([[3.0, -2.0], [1.0, 4.0]]),
+              "b": jnp.array([1.0, -1.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = O.apply_updates(params, upd)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_rowwise_adagrad_state_is_per_row():
+    opt = O.rowwise_adagrad(0.1)
+    params = {"table": jnp.ones((100, 16)), "bias": jnp.ones((4,))}
+    state = opt.init(params)
+    assert state.accum["table"].shape == (100,)   # V floats, not V*16
+    assert state.accum["bias"].shape == (4,)
+
+
+def test_clip_bounds_update_norm():
+    opt = O.chain_clip(O.sgd(1.0), max_norm=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    upd, _ = opt.update(g, state, params)
+    assert float(O.global_norm(upd)) <= 1.0 + 1e-5
+
+
+def test_cosine_warmup_schedule():
+    sched = O.cosine_warmup(1.0, warmup=10, total=110)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    assert abs(float(sched(jnp.asarray(10))) - 1.0) < 0.11
+    assert float(sched(jnp.asarray(110))) < 0.01
+
+
+def test_proximal_sgd_zeroes_dead_groups():
+    """Strong group-lasso drives rows with zero gradient signal to 0."""
+    opt = O.proximal_sgd(0.1, lam=5.0)
+    params = {"g": jnp.ones((4, 8))}
+    state = opt.init(params)
+    g = {"g": jnp.zeros((4, 8))}
+    for _ in range(50):
+        upd, state = opt.update(g, state, params)
+        params = O.apply_updates(params, upd)
+    assert float(jnp.abs(params["g"]).max()) < 1e-5
+
+
+def test_compress_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0
+    q, scale, pad = compress_int8(x)
+    y = decompress_int8(q, scale, pad, x.shape)
+    # error bounded by half a quantization step per 256-block
+    err = jnp.abs(y - x)
+    step = scale.max()
+    assert float(err.max()) <= float(step) * 0.51 + 1e-6
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the *accumulated* compressed sum tracks the
+    true sum much better than without."""
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(512, np.float32)
+    fed_sum = np.zeros(512, np.float32)
+    plain_sum = np.zeros(512, np.float32)
+    residual = jnp.zeros(512)
+    for i in range(50):
+        g = jnp.asarray(rng.standard_normal(512).astype(np.float32) * 0.01)
+        true_sum += np.asarray(g)
+        # with error feedback
+        corrected = g + residual
+        q, s, pad = compress_int8(corrected)
+        deq = decompress_int8(q, s, pad, g.shape)
+        residual = corrected - deq
+        fed_sum += np.asarray(deq)
+        # without
+        q2, s2, pad2 = compress_int8(g)
+        plain_sum += np.asarray(decompress_int8(q2, s2, pad2, g.shape))
+    err_fed = np.abs(fed_sum - true_sum).mean()
+    err_plain = np.abs(plain_sum - true_sum).mean()
+    assert err_fed <= err_plain * 1.05
+    # error feedback keeps total drift within ~2 quantization steps
+    assert err_fed < 0.02

@@ -1,0 +1,119 @@
+"""Algorithm 1: iterative prune -> finetune -> evaluate on planted data."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PruneConfig, prune_loop
+from repro.core.metrics import auc
+from repro.core.pruning import memory_fraction, rank_correlation
+from repro.data.criteo import CriteoConfig, CriteoSynth
+from repro.models import recsys as R
+from repro.optim import rowwise_adagrad
+from repro.optim.optimizers import apply_updates
+
+
+def test_memory_fraction():
+    mask = np.array([True, False, True])
+    assert memory_fraction(mask, [100, 300, 100]) == 0.4
+
+
+def test_rank_correlation_perfect_and_inverted():
+    assert rank_correlation([0, 1, 2, 3], [0, 1, 2, 3]) == 1.0
+    assert rank_correlation([0, 1, 2, 3], [3, 2, 1, 0]) == -1.0
+
+
+def _setup(seed=5):
+    ds = CriteoSynth(CriteoConfig(num_fields=6, important_fields=3,
+                                  num_dense=3, noise=0.2, seed=seed))
+    cfg = R.DLRMConfig(cardinalities=tuple(int(c) for c in ds.cards),
+                       embed_dim=8, num_dense=3, bot_mlp=(16, 8),
+                       top_mlp=(16, 1))
+    model = R.make_dlrm(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = rowwise_adagrad(0.1)
+
+    def make_step():
+        @jax.jit
+        def step(params, state, batch, mask):
+            def loss(p):
+                emb = model.embed(p, batch, mask)
+                return model.loss_from_emb(p, emb, batch).mean()
+            g = jax.grad(loss)(params)
+            upd, state2 = opt.update(g, state, params)
+            return apply_updates(params, upd), state2
+        return step
+
+    step = make_step()
+    state = opt.init(params)
+    full_mask = jnp.ones(6)
+    for i in range(80):
+        b = {k: jnp.asarray(v) for k, v in ds.batch(256, i).items()}
+        params, state = step(params, state, b, full_mask)
+
+    eval_batches = [
+        {k: jnp.asarray(v) for k, v in ds.batch(512, 5000 + i).items()}
+        for i in range(6)]
+
+    def eval_metric_fn(p, mask):
+        scores, labels = [], []
+        for b in eval_batches:
+            scores.append(model.forward(p, b, mask))
+            labels.append(b["labels"])
+        return float(auc(jnp.concatenate(scores), jnp.concatenate(labels)))
+
+    def finetune_fn(p, mask, steps):
+        st = opt.init(p)
+        for i in range(steps):
+            b = {k: jnp.asarray(v)
+                 for k, v in ds.batch(256, 9000 + i).items()}
+            p, st = step(p, st, b, mask)
+        return p
+
+    return ds, model, params, eval_metric_fn, finetune_fn, eval_batches
+
+
+def test_prune_loop_removes_dead_fields_first():
+    ds, model, params, eval_fn, ft_fn, eval_batches = _setup()
+    table_bytes = model.spec.table_bytes()
+    cfg = PruneConfig(rate_c=0.05, t_accuracy=0.985, fields_per_iter=1,
+                      finetune_steps=15)
+    res = prune_loop(
+        params,
+        embed_fn=model.embed,
+        loss_fn=model.loss_from_emb,
+        eval_metric_fn=eval_fn,
+        finetune_fn=ft_fn,
+        eval_batches_factory=lambda: eval_batches,
+        table_bytes=table_bytes,
+        cfg=cfg)
+    assert len(res.log) >= 1
+    # quality guard respected
+    assert res.final_metric >= cfg.t_accuracy * res.base_metric \
+        or res.remaining_memory > cfg.rate_c
+    # pruned-first fields should be dominated by planted-dead ones
+    dead = set(ds.lossless_fields().tolist())
+    if dead and len(res.log) >= len(dead):
+        first = set(int(e.pruned_field) for e in res.log[:len(dead)])
+        assert len(first & dead) >= max(1, len(dead) - 1), \
+            (sorted(first), sorted(dead))
+
+
+def test_prune_loop_stops_on_memory_target():
+    _, model, params, eval_fn, ft_fn, eval_batches = _setup(seed=6)
+    cfg = PruneConfig(rate_c=0.9, t_accuracy=0.5, fields_per_iter=1,
+                      finetune_steps=2)
+    res = prune_loop(params, model.embed, model.loss_from_emb, eval_fn,
+                     ft_fn, lambda: eval_batches,
+                     model.spec.table_bytes(), cfg)
+    assert res.remaining_memory <= 0.9 or res.final_metric < 0.5
+
+
+def test_protected_fields_never_pruned():
+    _, model, params, eval_fn, ft_fn, eval_batches = _setup(seed=7)
+    cfg = PruneConfig(rate_c=0.01, t_accuracy=0.0, fields_per_iter=1,
+                      finetune_steps=1, protected=(0, 1))
+    res = prune_loop(params, model.embed, model.loss_from_emb, eval_fn,
+                     ft_fn, lambda: eval_batches,
+                     model.spec.table_bytes(), cfg)
+    assert res.field_mask[0] and res.field_mask[1]

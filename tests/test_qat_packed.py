@@ -1,0 +1,151 @@
+"""QAT store <-> packed serving store: exactness and round trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FQuantConfig, TierConfig, pack
+from repro.core import packed_store as ps
+from repro.core import qat_store as qs
+
+
+def _store_with_tiers(v=96, d=32, seed=0):
+    st = qs.init(jax.random.PRNGKey(seed), v, d, scale=0.05)
+    third = v // 3
+    pri = jnp.concatenate([jnp.zeros(third), jnp.full(third, 1e4),
+                           jnp.full(v - 2 * third, 1e6)])
+    return st._replace(priority=pri)
+
+
+def test_snap_respects_tiers():
+    cfg = FQuantConfig(stochastic=False)
+    st = _store_with_tiers()
+    tiers = qs.current_tiers(st, cfg)
+    snapped = qs.snap(st.table, tiers, cfg)
+    v = st.vocab
+    third = v // 3
+    # fp32 rows unchanged
+    np.testing.assert_array_equal(np.asarray(snapped[2 * third:]),
+                                  np.asarray(st.table[2 * third:]))
+    # int8 rows changed but within scale/2
+    assert not np.array_equal(np.asarray(snapped[:third]),
+                              np.asarray(st.table[:third]))
+
+
+def test_pack_unpack_bit_exact_after_snap():
+    """The DESIGN.md guarantee: serving values == training values."""
+    cfg = FQuantConfig(stochastic=False)
+    st = _store_with_tiers()
+    tiers = qs.current_tiers(st, cfg)
+    st = st._replace(table=qs.snap(st.table, tiers, cfg))
+    packed = pack(st, cfg)
+    rt = ps.unpack(packed)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(st.table))
+
+
+def test_packed_nbytes_matches_accounting():
+    from repro.core import memory_bytes
+    cfg = FQuantConfig(stochastic=False)
+    st = _store_with_tiers()
+    tiers = qs.current_tiers(st, cfg)
+    packed = pack(st, cfg)
+    assert packed.nbytes() == memory_bytes(tiers, st.dim)
+
+
+@pytest.mark.parametrize("idx_shape", [(7,), (4, 3), (2, 2, 2)])
+def test_packed_lookup_shapes(idx_shape):
+    cfg = FQuantConfig(stochastic=False)
+    st = _store_with_tiers()
+    st = st._replace(table=qs.snap(
+        st.table, qs.current_tiers(st, cfg), cfg))
+    packed = pack(st, cfg)
+    idx = jax.random.randint(jax.random.PRNGKey(1), idx_shape, 0, st.vocab)
+    out = ps.lookup(packed, idx)
+    assert out.shape == idx_shape + (st.dim,)
+    ref = jnp.take(st.table, idx, axis=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=0)
+
+
+def test_bag_lookup_matches_manual():
+    cfg = FQuantConfig(stochastic=False)
+    st = _store_with_tiers()
+    st = st._replace(table=qs.snap(
+        st.table, qs.current_tiers(st, cfg), cfg))
+    packed = pack(st, cfg)
+    idx = jnp.array([0, 1, 2, 3, 4, 5])
+    seg = jnp.array([0, 0, 1, 1, 1, 2])
+    out = ps.bag_lookup(packed, idx, seg, num_bags=3)
+    ref0 = st.table[0] + st.table[1]
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref0),
+                               rtol=1e-6)
+
+
+def test_post_step_pipeline():
+    """Eq.7 update -> Eq.8 tiers -> snap, on a simulated batch."""
+    cfg = FQuantConfig(tiers=TierConfig(t8=0.5, t16=2.0), stochastic=False)
+    st = qs.init(jax.random.PRNGKey(0), 16, 8)
+    idx = jnp.array([[0, 1], [0, 2]])
+    lab = jnp.array([1.0, 0.0])
+    st2 = qs.post_step(st, idx, lab, cfg)
+    # row 0: hit by 1 pos + 1 neg -> w = .99*(2+1) ~ 2.97 -> fp32 tier
+    tiers = qs.current_tiers(st2, cfg)
+    assert int(tiers[0]) == 2
+    # row 3: never hit -> w 0 -> int8
+    assert int(tiers[3]) == 0
+    # fp32 row kept exact
+    np.testing.assert_array_equal(np.asarray(st2.table[0]),
+                                  np.asarray(st.table[0]))
+
+
+def test_quantization_error_ordering():
+    """Hot rows (fp32) must show zero error; cold (int8) the largest."""
+    cfg = FQuantConfig(stochastic=False)
+    st = _store_with_tiers()
+    err = qs.quantization_error(st, cfg)
+    v = st.vocab
+    third = v // 3
+    assert float(err[2 * third:].max()) == 0.0
+    assert float(err[:third].mean()) > float(err[third:2 * third].mean())
+
+
+def test_post_step_sparse_matches_dense_on_touched_rows():
+    """Touched rows get identical tier treatment as the dense path (RTN);
+    untouched rows keep their exact previous values."""
+    from repro.core.qat_store import post_step_sparse
+    import jax.numpy as jnp
+    cfg = FQuantConfig(tiers=TierConfig(t8=0.5, t16=2.0), stochastic=False)
+    st = qs.init(jax.random.PRNGKey(3), 32, 8)
+    idx = jnp.array([[1, 2], [1, 5]])
+    lab = jnp.array([1.0, 0.0])
+    dense = qs.post_step(st, idx, lab, cfg)
+    sparse = post_step_sparse(st, idx, lab, cfg,
+                              seed=jnp.asarray(0, jnp.uint32))
+    # priorities identical (same Eq. 7 math)
+    np.testing.assert_allclose(np.asarray(dense.priority),
+                               np.asarray(sparse.priority), rtol=1e-6)
+    # touched rows identical
+    for r in (1, 2, 5):
+        np.testing.assert_array_equal(np.asarray(dense.table[r]),
+                                      np.asarray(sparse.table[r]))
+    # untouched rows: sparse keeps originals (dense may have snapped them)
+    np.testing.assert_array_equal(np.asarray(sparse.table[10]),
+                                  np.asarray(st.table[10]))
+
+
+def test_post_step_sparse_duplicate_rows_deterministic():
+    """Duplicate indices in one batch must write identical values (the
+    per-row hashed stochastic rounding guarantees write-order safety)."""
+    from repro.core.qat_store import post_step_sparse
+    import jax.numpy as jnp
+    cfg = FQuantConfig(tiers=TierConfig(t8=1e9, t16=1e9))  # all int8
+    st = qs.init(jax.random.PRNGKey(4), 16, 8)
+    idx = jnp.array([[3, 3, 3, 3]])
+    lab = jnp.array([1.0])
+    out1 = post_step_sparse(st, idx, lab, cfg,
+                            seed=jnp.asarray(7, jnp.uint32))
+    out2 = post_step_sparse(st, idx, lab, cfg,
+                            seed=jnp.asarray(7, jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(out1.table),
+                                  np.asarray(out2.table))
+    assert bool(jnp.isfinite(out1.table).all())

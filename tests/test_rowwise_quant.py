@@ -1,0 +1,96 @@
+"""Core row-wise quantization (SHARK Eq. 5-6): bounds, idempotency,
+stochastic-rounding unbiasedness, tier snapping."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import rowwise_quant as rq
+
+hypothesis.settings.register_profile(
+    "fast", settings(max_examples=25, deadline=None,
+                     derandomize=True))
+hypothesis.settings.load_profile("fast")
+
+
+@pytest.mark.parametrize("mode", ["narrow", "full"])
+@pytest.mark.parametrize("shape", [(4, 8), (33, 128), (1, 1), (128, 257)])
+def test_rtn_error_bound(mode, shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 0.05
+    q, scale = rq.quantize_rowwise(x, 8, mode=mode)
+    err = jnp.abs(rq.dequantize_rowwise(q, scale) - x)
+    bound = rq.max_abs_error_bound(x, 8, mode)
+    assert bool((err.max(axis=-1) <= bound + 1e-7).all())
+
+
+def test_int_range():
+    assert rq.int_range(8) == (-128, 127)
+    assert rq.int_range(4) == (-8, 7)
+    assert rq.int_range(16) == (-32768, 32767)
+
+
+def test_narrow_mode_idempotent():
+    """Snap twice == snap once (the pack-equals-QAT guarantee)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32)) * 0.1
+    once = rq.fake_quant_rowwise(x, 8, mode="narrow")
+    twice = rq.fake_quant_rowwise(once, 8, mode="narrow")
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_full_mode_matches_eq6_scale():
+    """mode='full': scale = 2*max|e| / (I_max - I_min) (Eq. 6 reading)."""
+    x = jnp.array([[1.0, -0.5, 0.25]])
+    scale = rq.rowwise_scale(x, 8, "full")
+    assert np.isclose(float(scale[0, 0]), 2 * 1.0 / 255)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(-20, 20))
+def test_stochastic_round_unbiased(seed, val):
+    """E[sr(x)] == x (checked to ~3 sigma with 4096 draws)."""
+    key = jax.random.PRNGKey(seed)
+    x = jnp.full((4096,), val, jnp.float32)
+    r = rq.stochastic_round(x, key)
+    # every draw is floor or ceil
+    assert bool(jnp.all((r == jnp.floor(x)) | (r == jnp.ceil(x))))
+    frac = float(val - np.floor(val))
+    se = np.sqrt(max(frac * (1 - frac), 1e-12) / 4096)
+    assert abs(float(r.mean()) - val) <= max(5 * se, 1e-5)
+
+
+@given(st.integers(0, 1000))
+def test_quantize_values_in_range(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 16)) * 10.0
+    q, _ = rq.quantize_rowwise(x, 8, key=jax.random.PRNGKey(seed + 1))
+    assert int(q.min()) >= -128 and int(q.max()) <= 127
+
+
+def test_half_tier_roundtrip_precision():
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 64)) * 0.02
+    y = rq.fake_quant_half(x)                       # bf16, row-scaled
+    rel = jnp.abs(y - x) / jnp.maximum(jnp.abs(x), 1e-8)
+    # row-normalised bf16 keeps ~2-3 significant digits
+    assert float(jnp.median(rel)) < 1e-2
+    y16 = rq.fake_quant_half(x, strict_fp16=True)   # fp16 parity mode
+    rel16 = jnp.abs(y16 - x) / jnp.maximum(jnp.abs(x), 1e-8)
+    assert float(jnp.median(rel16)) < 1e-3
+
+
+def test_half_scaled_better_than_unscaled_for_tiny_rows():
+    """Row-normalisation rescues rows living near bf16's resolution."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 64)) * 1e-4
+    scaled = rq.fake_quant_half(x, scaled=True)
+    unscaled = rq.fake_quant_half(x, scaled=False)
+    err_s = float(jnp.abs(scaled - x).mean())
+    err_u = float(jnp.abs(unscaled - x).mean())
+    assert err_s <= err_u + 1e-12
+
+
+def test_zero_row_safe():
+    x = jnp.zeros((4, 16))
+    q, scale = rq.quantize_rowwise(x)
+    assert bool(jnp.isfinite(scale).all())
+    np.testing.assert_array_equal(np.asarray(q), 0)
