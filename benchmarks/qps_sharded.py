@@ -1,0 +1,55 @@
+"""Sharded serving QPS: the SHARK +30% QPS claim under distribution.
+
+Runs repro.launch.serve over 1/2/4-way row-sharded host meshes (each in
+its own subprocess — the XLA host-device count must be fixed before jax
+initialises) and records the JSON QPS trajectory.  On this CPU container
+the absolute numbers are a proxy; what the trajectory establishes is
+that the row-sharded PackedStore path works end-to-end at every mesh
+size and what the collective overhead per request looks like.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def serve_record(mesh: int, requests: int, batch: int,
+                 arch: str = "dlrm-rm2") -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+           "--requests", str(requests), "--batch", str(batch),
+           "--mesh", str(mesh)]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       cwd=REPO)
+    rec = None
+    for line in r.stdout.splitlines():
+        if line.startswith("{"):
+            rec = json.loads(line)
+    if rec is None:
+        raise RuntimeError(
+            f"serve --mesh {mesh} emitted no JSON record:\n"
+            f"{r.stderr[-2000:]}")
+    return rec
+
+
+def run(meshes=(1, 2, 4), requests=8, batch=256) -> list[dict]:
+    rows = []
+    for n in meshes:
+        rec = serve_record(n, requests, batch)
+        rows.append({"metric": f"qps_mesh{n}", "value": rec["qps"],
+                     "p50_us": rec["p50_us"], "p99_us": rec["p99_us"],
+                     "packed_mib": rec["packed_mib"]})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -30,8 +30,8 @@ def main() -> None:
     fast = args.fast
 
     from benchmarks import (fig2_fperm, fig3_thresholds, freq_error,
-                            qps, roofline, table2_time, table3_fquant,
-                            table4_combined)
+                            qps, qps_sharded, roofline, table2_time,
+                            table3_fquant, table4_combined)
 
     jobs = {
         "table2_time": lambda: table2_time.run(
@@ -49,6 +49,8 @@ def main() -> None:
             keep_counts=(6,) if fast else (8, 6, 4),
             finetune_steps=40 if fast else 150),
         "qps": lambda: qps.run(iters=5 if fast else 20),
+        "qps_sharded": lambda: qps_sharded.run(
+            requests=4 if fast else 8, batch=128 if fast else 256),
         "freq_error": lambda: freq_error.run(
             train_steps=100 if fast else 400),
         "roofline": roofline.run,

@@ -82,25 +82,53 @@ ste_quant.defvjp(_ste_fwd, _ste_bwd)
 
 def apply_grads(state: ALPTState, grad_rows: Array, indices: Array,
                 lr: float, cfg: ALPTConfig, key: Array) -> ALPTState:
-    """SGD on touched rows with stochastic re-quantization + scale update."""
+    """SGD on touched rows with stochastic re-quantization + scale update.
+
+    The STE scale gradient must be evaluated at the CONTINUOUS updated
+    weight (pre-quantization): the stored value-space table satisfies
+    e == s*q exactly, so at the stored point q - (e/s) == 0 identically
+    and the gradient never flows.  The transiently-continuous
+    ``new_e = e - lr*g`` is the only place the STE term is non-zero.
+
+    A gradient step alone cannot escape the dead zone where ``s`` is so
+    large that every entry rounds to zero (all gradients vanish — the
+    classic LSQ cold-start failure), so after the gradient step we apply
+    a Newton step on the row quantization error ||s*q - new_e||^2, which
+    for fixed q has the closed-form minimiser s* = <new_e, q>/<q, q>.
+    Rows whose stochastic re-quantization produced any non-zero code
+    jump straight to their optimal scale; all-zero rows keep the
+    gradient-updated scale and escape via stochastic rounding within a
+    few steps.
+    """
     idx = indices.reshape(-1)
     g = grad_rows.reshape(-1, grad_rows.shape[-1])
     v = state.q.shape[0]
     gsum = jax.ops.segment_sum(g, idx, num_segments=v)
 
-    e = dequant(state)
-    # scale gradient via the STE formula, accumulated over the batch
     imin, imax = rq.int_range(cfg.bits)
-    x = e / state.scale
-    inside = ((x >= imin) & (x <= imax)).astype(jnp.float32)
-    ds = (gsum * (state.q.astype(jnp.float32) - x * inside)
-          ).sum(axis=-1, keepdims=True)
-    new_scale = jnp.maximum(state.scale - cfg.scale_lr * ds, 1e-8)
-
+    e = dequant(state)
     new_e = e - lr * gsum
-    xq = new_e / new_scale
-    q = jnp.clip(rq.stochastic_round(xq, key), imin, imax).astype(jnp.int8)
-    return ALPTState(q=q, scale=new_scale)
+
+    # (1) STE scale gradient at the continuous updated weight
+    x = new_e / state.scale
+    inside = ((x >= imin) & (x <= imax)).astype(jnp.float32)
+    q_hat = jnp.clip(jnp.round(x), imin, imax)
+    ds = (gsum * (q_hat - x * inside)).sum(axis=-1, keepdims=True)
+    scale = jnp.maximum(state.scale - cfg.scale_lr * ds, 1e-8)
+
+    # (2) Newton step on the row quantization error at the stochastic
+    #     re-quantization codes (exact minimiser for fixed codes)
+    kq, kr = jax.random.split(key)
+    q_new = jnp.clip(rq.stochastic_round(new_e / scale, kq), imin, imax)
+    num = (new_e * q_new).sum(axis=-1, keepdims=True)
+    den = (q_new * q_new).sum(axis=-1, keepdims=True)
+    s_star = num / jnp.maximum(den, 1e-12)
+    scale = jnp.maximum(
+        jnp.where((den > 0) & (s_star > 0), s_star, scale), 1e-8)
+
+    q = jnp.clip(rq.stochastic_round(new_e / scale, kr),
+                 imin, imax).astype(jnp.int8)
+    return ALPTState(q=q, scale=scale)
 
 
 def memory_bytes(vocab: int, dim: int, cfg: ALPTConfig) -> int:

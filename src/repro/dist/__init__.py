@@ -1,0 +1,18 @@
+"""SPMD subsystem: sharding rules, SPMD context, collectives, and the
+row-sharded PackedStore serving path.
+
+Modules:
+  * ``ctx``        — process-global SPMD context; ``constrain`` maps
+                     logical axis names to sharding constraints and is a
+                     no-op until ``configure`` is called (single-device
+                     paths are untouched).
+  * ``sharding``   — ruleset engine turning a params pytree into
+                     PartitionSpecs ("lm", "lm_ep", "recsys", "gnn"),
+                     plus ZeRO-1 spec derivation and divisibility checks.
+  * ``collectives``— hand-written shard_map collectives (split-KV decode).
+  * ``packed``     — row-sharded tier-partitioned PackedStore serving.
+"""
+
+from repro.dist import collectives, ctx, packed, sharding
+
+__all__ = ["collectives", "ctx", "packed", "sharding"]

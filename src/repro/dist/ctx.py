@@ -1,0 +1,107 @@
+"""Process-global SPMD context.
+
+Model code annotates activations with LOGICAL axis names and this module
+translates them to mesh axes at trace time:
+
+    ctx.configure(mesh, batch=("pod", "data"), tp="model")
+    x = ctx.constrain(x, "batch", None, None)      # (B, T, D)
+
+``constrain`` is an exact no-op until ``configure`` is called, so every
+single-device path (unit tests, smoke configs, examples) runs the same
+code with zero sharding machinery.  Logical names:
+
+  * ``"batch"`` — the configured data-parallel axis (or axis tuple),
+  * ``None``    — replicated along this dimension,
+  * ``UNC``     — leave the dimension unconstrained (partitioner's pick),
+  * any other string — passed through as a mesh axis name (e.g. "model").
+
+Named axes that do not divide the dimension are dropped to ``None``
+rather than erroring: the same model code must lower on a 512-chip mesh
+and on a 4-device host smoke mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+class _Unconstrained:
+    """Sentinel: leave this dimension's sharding to the partitioner."""
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return "UNC"
+
+
+UNC = _Unconstrained()
+
+_mesh = None
+_batch = None
+_tp = "model"
+
+
+def configure(mesh, batch="data", tp: str = "model") -> None:
+    """Install the process-global mesh and logical-axis bindings.
+
+    batch: mesh axis name or tuple of names carrying data parallelism.
+    tp: mesh axis name carrying tensor parallelism.
+    """
+    global _mesh, _batch, _tp
+    _mesh, _batch, _tp = mesh, batch, tp
+
+
+def unconfigure() -> None:
+    """Return to the single-device no-op state (tests)."""
+    global _mesh, _batch
+    _mesh, _batch = None, None
+
+
+def configured() -> bool:
+    return _mesh is not None
+
+
+def mesh():
+    return _mesh
+
+
+def _axis_size(axis) -> int:
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    n = 1
+    for a in axes:
+        n *= _mesh.shape.get(a, 1)
+    return n
+
+
+def resolve(logical, dim: int | None = None):
+    """One logical entry -> PartitionSpec entry (with divisibility guard)."""
+    if logical is UNC:
+        return PartitionSpec.UNCONSTRAINED
+    if logical is None:
+        return None
+    axis = _batch if logical == "batch" else (
+        _tp if logical == "tp" else logical)
+    if axis is None:
+        return None
+    if dim is not None and dim % _axis_size(axis) != 0:
+        return None
+    return axis
+
+
+def spec(*logical_axes, shape=None) -> PartitionSpec:
+    """Resolve a full logical spec (shape enables the divisibility guard)."""
+    dims = shape if shape is not None else (None,) * len(logical_axes)
+    return PartitionSpec(*(resolve(ax, d)
+                           for ax, d in zip(logical_axes, dims)))
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint under the configured mesh; no-op when
+    unconfigured.  One logical entry per dimension of ``x``."""
+    if _mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"constrain: got {len(logical_axes)} axes for rank-{x.ndim} "
+            f"array of shape {x.shape}")
+    s = spec(*logical_axes, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_mesh, s))

@@ -1,0 +1,156 @@
+"""Parameter sharding rulesets.
+
+``param_specs(params, ruleset, mesh_axis_names)`` walks a params pytree
+and assigns a PartitionSpec per leaf from one of four rulesets:
+
+  * ``"lm"``     — decoder LMs: token table row-sharded (vocab on
+                   "model", dim on "data" — the megatron-style layout the
+                   CE loss expects), stacked ``layers/...`` params keep
+                   the leading L axis unsharded and TP-shard the output
+                   feature dim, norms/biases replicated.
+  * ``"lm_ep"``  — like "lm" but MoE expert tensors (E, d, f) shard the
+                   expert axis on "model" (expert parallelism) and d on
+                   "data" (ZeRO-style weight sharding).
+  * ``"recsys"`` — embedding/wide tables row-sharded on "model"
+                   (the SHARK terabyte-table layout); the dense net is
+                   tiny and replicated.
+  * ``"gnn"``    — node-embedding table row-sharded, message-passing
+                   weights replicated (hidden dims like 75 never divide).
+
+Axes absent from ``mesh_axis_names`` degrade to ``None`` so the same
+ruleset lowers on ("data", "model"), ("pod", "data", "model"), or a
+1-axis host mesh.  ``zero1_specs`` adds the "data" axis to a spec tree
+for ZeRO-1 optimizer-state sharding; ``validate_divisibility`` reports
+every (param, spec, mesh) combination that does not divide.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _pathstr(path) -> str:
+    parts = []
+    for k in path:
+        name = getattr(k, "key", None)
+        if name is None:
+            name = getattr(k, "idx", None)
+        parts.append(str(name))
+    return "/".join(parts)
+
+
+def _finish(entries) -> P:
+    """Full-rank tuple -> spec; fully-replicated collapses to P()."""
+    if all(e is None for e in entries):
+        return P()
+    return P(*entries)
+
+
+def _is_norm(parts) -> bool:
+    last = parts[-1]
+    if last in ("g", "b", "bias"):
+        return True
+    return any("norm" in p or p.startswith("ln") for p in parts)
+
+
+def _lm_body(parts, shape, model, data, ep: bool):
+    """Spec for one (unstacked) layer-body tensor."""
+    nd = len(shape)
+    if nd <= 1 or _is_norm(parts):
+        return (None,) * nd
+    if ep and "moe" in parts and nd >= 3:
+        # (E, d, f) / (E, f, d): expert parallelism + ZeRO-style d shard
+        return (model, data) + (None,) * (nd - 2)
+    if nd == 2:
+        return (data, model)
+    # non-EP expert stacks (E, d, f): TP on the feature dim only
+    return (None,) * (nd - 2) + (data, model)
+
+
+def _lm_spec(path, shape, model, data, ep: bool) -> P:
+    parts = _pathstr(path).split("/")
+    nd = len(shape)
+    if parts[0] == "embed":
+        return _finish((model, data) + (None,) * (nd - 2))
+    if parts[0] == "layers":
+        # scan-stacked: leading L axis always unsharded
+        return _finish((None,) + _lm_body(parts[1:], shape[1:], model,
+                                          data, ep))
+    return _finish(_lm_body(parts, shape, model, data, ep))
+
+
+def _table_spec(path, shape, model) -> P:
+    parts = _pathstr(path).lower()
+    if len(shape) == 2 and ("table" in parts or "embed" in parts):
+        return _finish((model, None))
+    return P()
+
+
+def param_specs(params, ruleset: str,
+                mesh_axis_names=("data", "model")):
+    """PartitionSpec pytree matching ``params`` under ``ruleset``."""
+    model = "model" if "model" in mesh_axis_names else None
+    data = "data" if "data" in mesh_axis_names else None
+
+    if ruleset in ("lm", "lm_ep"):
+        ep = ruleset == "lm_ep"
+
+        def assign(path, leaf):
+            return _lm_spec(path, tuple(leaf.shape), model, data, ep)
+    elif ruleset in ("recsys", "gnn"):
+
+        def assign(path, leaf):
+            return _table_spec(path, tuple(leaf.shape), model)
+    else:
+        raise KeyError(f"unknown ruleset {ruleset!r}; "
+                       "have lm, lm_ep, recsys, gnn")
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def zero1_specs(pspec, params, data_size: int):
+    """Add the "data" axis to each spec's first divisible free dimension
+    (ZeRO-1: optimizer state sharded over data parallelism)."""
+
+    def add(spec, leaf):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        if any(e == "data" or (isinstance(e, tuple) and "data" in e)
+               for e in entries):
+            return spec
+        for i, (ax, dim) in enumerate(zip(entries, leaf.shape)):
+            if ax is None and dim % data_size == 0:
+                entries[i] = "data"
+                return P(*entries)
+        return spec
+
+    return jax.tree_util.tree_map(add, pspec, params, is_leaf=_is_spec)
+
+
+def validate_divisibility(params, specs, mesh) -> list[str]:
+    """Every (dim, mesh-axis) pair that does not divide, as messages.
+    An empty list means the layout is lowerable on this mesh."""
+    sizes = dict(mesh.shape)
+    problems: list[str] = []
+
+    def check(path, leaf, spec):
+        entries = tuple(spec)
+        for i, ax in enumerate(entries):
+            if ax is None or not isinstance(ax, (str, tuple)):
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= sizes.get(a, 1)
+            if n > 1 and leaf.shape[i] % n:
+                problems.append(
+                    f"{_pathstr(path)}: dim {i} of shape "
+                    f"{tuple(leaf.shape)} not divisible by {ax} (={n})")
+        return spec
+
+    jax.tree_util.tree_map_with_path(check, params, specs)
+    return problems

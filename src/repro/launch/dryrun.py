@@ -69,6 +69,8 @@ def run_cell(arch, shape: str, mesh, mesh_name: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     stats = analyze(hlo)
 

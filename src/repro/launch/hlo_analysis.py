@@ -130,21 +130,26 @@ def _dot_flops(op: Op, symbols: dict) -> float:
     for d in shapes[0][1]:
         result_elems *= d
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
-    operands = re.findall(r"\(%([\w\.\-]+)[,)]", op.line) or \
-        re.findall(r"dot\(%([\w\.\-]+)", op.line)
-    # first operand of the dot
     args = re.search(r"dot\(([^)]*)\)", op.line)
     k = 1
     if cm and args:
-        lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
-        lhs_seg = symbols.get(lhs_name, "")
-        lhs_shapes = _shape_dims(lhs_seg)
-        if lhs_shapes:
-            dims = lhs_shapes[0][1]
-            for i in (int(x) for x in cm.group(1).split(",") if x):
-                if i < len(dims):
-                    k *= dims[i]
-    del operands
+        seg = args.group(1)
+        # operands usually carry inline types: "f32[128,256]{1,0} %a, ...";
+        # the first shape in the segment is the lhs.  Fall back to the
+        # symbol table for the bare "dot(%a, %b)" form.
+        dims: list[int] = []
+        arg_shapes = _shape_dims(seg)
+        if arg_shapes:
+            dims = arg_shapes[0][1]
+        else:
+            lhs = re.search(r"%([\w\.\-]+)", seg)
+            lhs_shapes = _shape_dims(symbols.get(lhs.group(1), "")) \
+                if lhs else []
+            if lhs_shapes:
+                dims = lhs_shapes[0][1]
+        for i in (int(x) for x in cm.group(1).split(",") if x):
+            if i < len(dims):
+                k *= dims[i]
     return 2.0 * result_elems * k
 
 

@@ -3,11 +3,23 @@
 Builds the packed tier-partitioned store for a (smoke-sized) recsys model
 and serves a batched request stream, reporting latency percentiles and
 the memory/bytes ratios behind the paper's QPS claim.
+
+``--mesh N`` (N > 1) row-shards the PackedStore over an N-way "model"
+mesh and serves through ``repro.dist.packed.sharded_lookup`` — the
+distributed serving path.  On this CPU container the mesh is faked with
+``--xla_force_host_platform_device_count`` (set before jax initialises),
+so 1/2/4-way runs are a smoke/QPS-scaling proxy for a real TPU mesh.
+
+The last stdout line is a machine-readable JSON record
+(qps / p50_us / p99_us / packed_mib / ...) consumed by
+benchmarks/qps_sharded.py.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import numpy as np
@@ -18,7 +30,16 @@ def main() -> None:
     ap.add_argument("--arch", default="dlrm-rm2")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="row-shard the packed store over an N-way "
+                         "'model' mesh (host devices)")
     args = ap.parse_args()
+
+    if args.mesh > 1:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.mesh}").strip()
 
     import jax
     import jax.numpy as jnp
@@ -49,12 +70,23 @@ def main() -> None:
         store.table, qs.current_tiers(store, cfg), cfg))
     packed = pack(store, cfg)
     fp32 = spec.total_rows * spec.dim * 4
-    print(f"packed {packed.nbytes()/2**20:.2f} MiB "
-          f"({packed.nbytes()/fp32:.1%} of fp32)")
+    packed_bytes = packed.nbytes()
+    packed_mib = packed_bytes / 2 ** 20
+    print(f"packed {packed_mib:.2f} MiB ({packed_bytes/fp32:.1%} of fp32)")
+
+    mesh = None
+    if args.mesh > 1:
+        from repro.dist.packed import shard_packed, sharded_lookup
+        mesh = jax.make_mesh((args.mesh,), ("model",))
+        packed = shard_packed(packed, mesh)
 
     @jax.jit
     def serve(packed, params, batch):
-        emb = packed_lookup(packed, E.globalize(batch["indices"], spec))
+        gidx = E.globalize(batch["indices"], spec)
+        if mesh is not None:
+            emb = sharded_lookup(packed, gidx, mesh=mesh)
+        else:
+            emb = packed_lookup(packed, gidx)
         return model.head(params, emb, batch)
 
     lat = []
@@ -65,16 +97,25 @@ def main() -> None:
             rr.integers(0, min(spec.cardinalities),
                         (args.batch, f)).astype(np.int32)),
             "labels": jnp.zeros((args.batch,))}
-        if "dense" in [k for k in ("dense",) if arch.has_dense]:
+        if arch.has_dense:
             batch["dense"] = jnp.asarray(rr.standard_normal(
                 (args.batch, arch.smoke_num_dense)).astype(np.float32))
         t0 = time.perf_counter()
         serve(packed, params, batch).block_until_ready()
         lat.append(time.perf_counter() - t0)
     lat_us = np.asarray(lat[1:]) * 1e6
+    p50 = float(np.percentile(lat_us, 50))
+    p99 = float(np.percentile(lat_us, 99))
+    qps = args.batch / (np.mean(lat_us) / 1e6)
     print(f"{args.requests} requests x{args.batch}: "
-          f"p50 {np.percentile(lat_us, 50):.0f}us "
-          f"p99 {np.percentile(lat_us, 99):.0f}us (host CPU)")
+          f"p50 {p50:.0f}us p99 {p99:.0f}us (host CPU, "
+          f"mesh={args.mesh})")
+    print(json.dumps({
+        "arch": args.arch, "batch": args.batch, "requests": args.requests,
+        "mesh": args.mesh, "qps": round(qps, 1),
+        "p50_us": round(p50, 1), "p99_us": round(p99, 1),
+        "packed_mib": round(packed_mib, 3),
+        "packed_fp32_ratio": round(packed_bytes / fp32, 4)}))
 
 
 if __name__ == "__main__":

@@ -6,3 +6,13 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# hermetic containers can't always install hypothesis (declared in
+# pyproject.toml [dev]); fall back to the deterministic in-repo stub
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_stub import install as _install_hypothesis_stub
+
+    _install_hypothesis_stub()
