@@ -9,10 +9,18 @@ measured/derived:
   2. wall time of the jnp serving forward on fp32 vs packed storage at
      the serve_p99 shape (CPU proxy, same code path XLA compiles for TPU);
   3. the Pallas fused-kernel traffic model: exact bytes touched per bag.
+
+``--online`` runs the ``repro.serve`` subsystem instead: a drifting-zipf
+request stream through the hot-row cache + priority fold + incremental
+re-tier loop, and emits ONE machine-readable JSON line with the
+steady-state QPS (second half of the stream, past warm-up and re-tier
+recompiles) and the cache hit rate — schema in docs/serving.md.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -93,6 +101,62 @@ def run(batch=512, iters=20) -> list[dict]:
     ]
 
 
+def run_online(batch=256, requests=24, cache_rows=512, retier_every=4,
+               drift=4.0, ratio=0.5) -> dict:
+    """Online serving under a drifting zipf workload: one JSON record.
+
+    Uses the bench DLRM with a fabricated pareto priority profile (no
+    training warm-up — the online loop's whole point is that the EMA
+    re-learns the tiering from traffic)."""
+    from repro.serve import OnlineConfig, OnlineServer, serve_forward_loop
+
+    setup = make_setup(num_fields=10, important=5, train_steps=0)
+    spec = setup.model.spec
+    params = setup.params
+
+    rng = np.random.default_rng(0)
+    pri = jnp.asarray((rng.pareto(1.2, spec.total_rows) * 10)
+                      .astype(np.float32))
+    cfg = FQuantConfig(
+        tiers=plan_thresholds_for_ratio(pri, spec.dim, ratio),
+        stochastic=False)
+    store = qs.QATStore(params["embed_table"], pri)
+    store = store._replace(table=qs.snap(
+        store.table, qs.current_tiers(store, cfg), cfg))
+
+    server = OnlineServer(store, cfg,
+                          OnlineConfig(cache_rows=cache_rows,
+                                       retier_every=retier_every))
+    result = serve_forward_loop(
+        server, setup.model, spec, params, batch=batch,
+        requests=requests, drift=drift,
+        num_dense=setup.ds.cfg.num_dense)
+    fp32 = spec.total_rows * spec.dim * 4
+    rec = {"benchmark": "qps_online", "batch": batch,
+           "requests": requests, "cache_rows": cache_rows,
+           "retier_every": retier_every, "drift": drift}
+    rec.update(result.as_dict())
+    rec["packed_fp32_ratio"] = round(server.host_packed.nbytes() / fp32,
+                                     4)
+    return rec
+
+
 if __name__ == "__main__":
-    for r in run():
-        print(r)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--online", action="store_true",
+                    help="drifting-zipf online-serving loop; prints one "
+                         "JSON line (steady_qps, cache_hit_rate, ...)")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--cache-rows", type=int, default=512)
+    ap.add_argument("--retier-every", type=int, default=4)
+    ap.add_argument("--drift", type=float, default=4.0)
+    args = ap.parse_args()
+    if args.online:
+        print(json.dumps(run_online(
+            batch=args.batch, requests=args.requests,
+            cache_rows=args.cache_rows,
+            retier_every=args.retier_every, drift=args.drift)))
+    else:
+        for r in run():
+            print(r)

@@ -130,6 +130,136 @@ def unpack(packed: PackedStore) -> Array:
     return lookup(packed, jnp.arange(packed.vocab))
 
 
+def packed_tiers(packed: PackedStore) -> np.ndarray:
+    """Per-row tier currently materialised in ``packed``: int8 host (V,)."""
+    ind = np.asarray(jax.device_get(packed.indirect))
+    return (ind >> _TIER_SHIFT).astype(np.int8)
+
+
+def _quantize_tier(rows: np.ndarray, tier: Tier, cfg: FQuantConfig):
+    """Quantize fp32 rows for one tier exactly as ``pack`` does.
+
+    Returns (payload, scale-or-None); row-wise ops, so quantizing any
+    subset of rows is bit-identical to quantizing them inside a full
+    ``pack`` batch.
+    """
+    if tier is Tier.INT8:
+        q, s = rq.quantize_rowwise(jnp.asarray(rows), cfg.bits,
+                                   mode=cfg.mode)
+        return np.asarray(q), np.asarray(s)[:, 0]
+    if tier is Tier.HALF:
+        half_dtype = np.float16 if cfg.strict_fp16 else jnp.bfloat16
+        q, s = rq.quantize_half(jnp.asarray(rows),
+                                strict_fp16=cfg.strict_fp16,
+                                scaled=cfg.scaled_half)
+        return np.asarray(q.astype(half_dtype)), np.asarray(s)[:, 0]
+    return rows.astype(np.float32), None
+
+
+def repack_delta(packed: PackedStore, store: QATStore, cfg: FQuantConfig,
+                 changed_rows) -> PackedStore:
+    """Incremental re-tier: migrate only tier-crossing rows (host numpy).
+
+    ``changed_rows`` is a *candidate* set — rows whose priority may have
+    crossed an Eq. 8 threshold since ``packed`` was built (pass
+    ``np.arange(V)`` to check everything; the actual movers are filtered
+    here).  Rows whose tier under ``current_tiers(store, cfg)`` equals
+    their packed tier keep their payload slot byte-for-byte; crossing
+    rows are swap-removed from the source tier (tail rows of that tier
+    backfill the holes, with their ``indirect`` words rewritten) and
+    re-quantized into the destination tier.
+
+    Contract: the table rows must be unchanged since the last
+    (re)pack — the serving-time situation, where only priorities move.
+    Then ``unpack(repack_delta(...))`` is **bit-identical** to
+    ``unpack(pack(store, cfg))``; only the row order *within* a payload
+    array (invisible through ``indirect``) may differ.  Expects an
+    unsharded store — bring a row-sharded one host-side first with
+    ``repro.dist.packed.unshard_packed``.
+
+    Cost: O(moved) re-quantization + O(V_tier) slicing, vs O(V) for a
+    full ``pack`` — the point of re-tiering *during* traffic.
+    """
+    table = np.asarray(store.table, np.float32)
+    dim = table.shape[1]
+
+    indirect = np.array(jax.device_get(packed.indirect))
+    old_tiers = (indirect >> _TIER_SHIFT).astype(np.int64)
+    new_tiers = np.asarray(current_tiers(store, cfg)).astype(np.int64)
+    cand = np.unique(np.asarray(changed_rows).astype(np.int64).reshape(-1))
+    moving = cand[old_tiers[cand] != new_tiers[cand]]
+    if moving.size == 0:
+        return packed
+
+    counts = np.bincount(old_tiers, minlength=3)[:3]
+    payloads = [np.array(jax.device_get(p)) for p in
+                (packed.payload8, packed.payload16, packed.payload32)]
+    scales = [np.array(jax.device_get(packed.scale8)),
+              np.array(jax.device_get(packed.scale16)), None]
+
+    # reverse map: tier-local index -> global row
+    inv = []
+    for t in range(3):
+        g = np.nonzero(old_tiers == t)[0]
+        a = np.zeros(int(counts[t]), np.int64)
+        a[(indirect[g] & _IDX_MASK).astype(np.int64)] = g
+        inv.append(a)
+
+    # swap-remove movers from their source tier: surviving tail rows
+    # backfill the holes left below the new count
+    for t in range(3):
+        locs = np.sort((indirect[moving[old_tiers[moving] == t]]
+                        & _IDX_MASK).astype(np.int64))
+        if locs.size == 0:
+            continue
+        c2 = int(counts[t]) - locs.size
+        holes = locs[locs < c2]
+        tail = np.setdiff1d(np.arange(c2, int(counts[t])), locs,
+                            assume_unique=True)
+        payloads[t][holes] = payloads[t][tail]
+        if scales[t] is not None:
+            scales[t][holes] = scales[t][tail]
+        g = inv[t][tail]
+        indirect[g] = ((t << _TIER_SHIFT) | holes).astype(np.int32)
+        inv[t][holes] = g
+        counts[t] = c2
+
+    payloads = [p[:int(c)] for p, c in zip(payloads, counts)]
+    scales = [None if s is None else s[:int(c)]
+              for s, c in zip(scales, counts)]
+
+    # append movers to their destination tier, quantized as pack() would
+    for t, tier in enumerate((Tier.INT8, Tier.HALF, Tier.FP32)):
+        add = moving[new_tiers[moving] == t]
+        if add.size == 0:
+            continue
+        newp, news = _quantize_tier(table[add], tier, cfg)
+        base = int(counts[t])
+        indirect[add] = ((t << _TIER_SHIFT) | np.arange(
+            base, base + add.size)).astype(np.int32)
+        payloads[t] = np.concatenate([payloads[t], newp], axis=0)
+        if news is not None:
+            scales[t] = np.concatenate([scales[t], news])
+        counts[t] = base + add.size
+
+    # emptied tiers keep pack()'s quantized-zeros 1-row placeholder
+    for t, tier in enumerate((Tier.INT8, Tier.HALF, Tier.FP32)):
+        if payloads[t].shape[0] == 0:
+            ph, ps_ = _quantize_tier(np.zeros((1, dim), np.float32), tier,
+                                     cfg)
+            payloads[t] = ph
+            if ps_ is not None:
+                scales[t] = ps_
+
+    return PackedStore(
+        payload8=jnp.asarray(payloads[0]),
+        scale8=jnp.asarray(scales[0], jnp.float32),
+        payload16=jnp.asarray(payloads[1]),
+        scale16=jnp.asarray(scales[1], jnp.float32),
+        payload32=jnp.asarray(payloads[2], jnp.float32),
+        indirect=jnp.asarray(indirect))
+
+
 def bag_lookup(packed: PackedStore, indices: Array, segment_ids: Array,
                num_bags: int, weights: Array | None = None) -> Array:
     """EmbeddingBag over the packed store: sum rows per bag.

@@ -74,6 +74,35 @@ def priority_update_from_batch(w: Array, indices: Array, labels: Array,
     return priority_update(w, c_pos, c_neg, cfg)
 
 
+def access_counts(indices: Array, vocab: int,
+                  valid: Array | None = None) -> Array:
+    """Label-free per-row hit counts for a serving batch.
+
+    Online traffic has no labels at lookup time (clicks arrive minutes
+    later, if ever), so every access counts as one unlabeled example.
+    indices: int any shape; returns float32 (vocab,).
+    """
+    idx = indices.reshape(-1)
+    ones = jnp.ones(idx.shape, jnp.float32)
+    if valid is not None:
+        ones = ones * valid.reshape(-1).astype(jnp.float32)
+    return jax.ops.segment_sum(ones, idx, num_segments=vocab)
+
+
+def serve_update(w: Array, indices: Array,
+                 cfg: PriorityConfig = PriorityConfig(),
+                 valid: Array | None = None) -> Array:
+    """Serving-time Eq. 7 fold: accesses enter the EMA as c- (c+ = 0).
+
+    This is what keeps the tier assignment tracking *live* traffic after
+    training stops — the repro.serve loop calls it per request batch and
+    periodically re-tiers from the updated scores (packed_store.
+    repack_delta).
+    """
+    c = access_counts(indices, w.shape[0], valid)
+    return priority_update(w, jnp.zeros_like(c), c, cfg)
+
+
 def steady_state_priority(rate_pos: Array, rate_neg: Array,
                           cfg: PriorityConfig = PriorityConfig()) -> Array:
     """Fixed point of Eq. 7 under stationary per-batch hit rates.

@@ -56,6 +56,23 @@ def tier_counts(tiers: Array):
     return np.bincount(t, minlength=3)[:3]
 
 
+def tier_crossings(old_tiers, new_tiers):
+    """Rows whose tier changed, plus the 3x3 transition histogram.
+
+    Host-side (numpy): feeds ``packed_store.repack_delta`` with its
+    candidate set and the serving stats with migration accounting.
+    Returns (changed int64 (M,), hist int64 (3, 3)) with
+    ``hist[src, dst]`` = rows moving src -> dst.
+    """
+    import numpy as np
+    o = np.asarray(old_tiers).astype(np.int64)
+    n = np.asarray(new_tiers).astype(np.int64)
+    changed = np.nonzero(o != n)[0]
+    hist = np.zeros((3, 3), np.int64)
+    np.add.at(hist, (o[changed], n[changed]), 1)
+    return changed, hist
+
+
 def memory_bytes(tiers: Array, dim: int, include_overhead: bool = True) -> int:
     """Total embedding-table bytes under the tier-partitioned layout."""
     counts = tier_counts(tiers)

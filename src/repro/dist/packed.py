@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -60,6 +61,33 @@ def shard_packed(packed: PackedStore, mesh,
     return PackedStore(*(put(_pad_rows(leaf, n) if spec != P() else leaf,
                              spec)
                          for leaf, spec in zip(packed, specs)))
+
+
+def unshard_packed(packed: PackedStore) -> PackedStore:
+    """Host copy with the divisibility padding rows trimmed.
+
+    Inverse of ``shard_packed`` up to the unaddressable pad rows: live
+    row counts per tier are recovered from the replicated ``indirect``
+    (local indices are dense 0..count-1), payload/scale arrays are cut
+    back to them, and emptied tiers keep a 1-row placeholder so shapes
+    stay non-degenerate.  This is what ``packed_store.repack_delta``
+    needs during online re-tiering under a mesh: trim -> delta-repack on
+    host -> ``shard_packed`` the result back out.
+    """
+    host = jax.device_get(packed)
+    ind = np.asarray(host.indirect)
+    counts = np.bincount(ind >> _TIER_SHIFT, minlength=3)[:3]
+
+    def trim(x, c):
+        return jnp.asarray(np.asarray(x)[:max(int(c), 1)])
+
+    return PackedStore(
+        payload8=trim(host.payload8, counts[0]),
+        scale8=trim(host.scale8, counts[0]),
+        payload16=trim(host.payload16, counts[1]),
+        scale16=trim(host.scale16, counts[1]),
+        payload32=trim(host.payload32, counts[2]),
+        indirect=jnp.asarray(ind))
 
 
 def _local_rows(pk: PackedStore, indices: Array, axis: str) -> Array:

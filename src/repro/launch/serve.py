@@ -10,9 +10,18 @@ distributed serving path.  On this CPU container the mesh is faked with
 ``--xla_force_host_platform_device_count`` (set before jax initialises),
 so 1/2/4-way runs are a smoke/QPS-scaling proxy for a real TPU mesh.
 
+``--online`` switches to the ``repro.serve`` subsystem: a drifting-zipf
+request stream is served cache-first (``--cache-rows`` hot rows in
+fp32), every served batch is folded into the Eq. 7 priority EMA, and
+every ``--retier-every`` requests tier-crossing rows are migrated with
+``packed_store.repack_delta`` (re-sharded under ``--mesh N``).  Payload
+shapes change at re-tier boundaries, so jit recompiles exactly there.
+
 The last stdout line is a machine-readable JSON record
-(qps / p50_us / p99_us / packed_mib / ...) consumed by
-benchmarks/qps_sharded.py.
+(qps / p50_us / p99_us / packed_mib / ... plus, online:
+cache_hit_rate / steady_qps / retiers / rows_moved) consumed by
+``benchmarks/qps_sharded.py`` and the CI smoke — schema in
+docs/serving.md.
 """
 
 from __future__ import annotations
@@ -33,6 +42,18 @@ def main() -> None:
     ap.add_argument("--mesh", type=int, default=1,
                     help="row-shard the packed store over an N-way "
                          "'model' mesh (host devices)")
+    ap.add_argument("--online", action="store_true",
+                    help="serve through repro.serve: hot-row cache + "
+                         "priority fold + incremental re-tiering under "
+                         "a drifting-zipf workload")
+    ap.add_argument("--cache-rows", type=int, default=256,
+                    help="top-K fp32 hot rows (--online; 0 disables)")
+    ap.add_argument("--retier-every", type=int, default=2,
+                    help="requests between delta re-tiers (--online; "
+                         "0 disables; smoke-sized default)")
+    ap.add_argument("--drift", type=float, default=4.0,
+                    help="zipf hot-set drift in ids/request "
+                         "(--online; 0 = stationary)")
     args = ap.parse_args()
 
     if args.mesh > 1:
@@ -68,16 +89,77 @@ def main() -> None:
     store = qs.QATStore(params["embed_table"], pri)
     store = store._replace(table=qs.snap(
         store.table, qs.current_tiers(store, cfg), cfg))
-    packed = pack(store, cfg)
     fp32 = spec.total_rows * spec.dim * 4
+
+    mesh = None
+    if args.mesh > 1:
+        mesh = jax.make_mesh((args.mesh,), ("model",))
+
+    f = spec.num_fields
+    cards = np.asarray(spec.cardinalities, np.int64)
+
+    def uniform_batch(r: int) -> np.ndarray:
+        # per-field uniform draws: every field samples its own id range
+        # (a single min(cards) range would never exercise the rows of
+        # high-cardinality fields)
+        rr = np.random.default_rng(r)
+        return (rr.random((args.batch, f)) * cards[None, :]).astype(
+            np.int32)
+
+    def full_batch(idx: np.ndarray, r: int) -> dict:
+        batch = {"indices": jnp.asarray(idx),
+                 "labels": jnp.zeros((args.batch,))}
+        if arch.has_dense:
+            rr = np.random.default_rng(10_000 + r)
+            batch["dense"] = jnp.asarray(rr.standard_normal(
+                (args.batch, arch.smoke_num_dense)).astype(np.float32))
+        return batch
+
+    rec = {"arch": args.arch, "batch": args.batch,
+           "requests": args.requests, "mesh": args.mesh,
+           "online": args.online}
+
+    if args.online:
+        from repro.serve import (OnlineConfig, OnlineServer,
+                                 serve_forward_loop)
+
+        server = OnlineServer(
+            store, cfg,
+            OnlineConfig(cache_rows=args.cache_rows,
+                         retier_every=args.retier_every),
+            mesh=mesh)
+        packed_mib = server.host_packed.nbytes() / 2 ** 20
+        print(f"packed {packed_mib:.2f} MiB "
+              f"({server.host_packed.nbytes() / fp32:.1%} of fp32), "
+              f"cache {args.cache_rows} rows, "
+              f"retier every {args.retier_every} requests")
+        result = serve_forward_loop(
+            server, model, spec, params, batch=args.batch,
+            requests=args.requests, drift=args.drift,
+            num_dense=arch.smoke_num_dense if arch.has_dense else 0)
+        print(f"{args.requests} requests x{args.batch}: "
+              f"p50 {result.p50_us:.0f}us p99 {result.p99_us:.0f}us "
+              f"hit-rate {server.stats.hit_rate:.1%} "
+              f"retiers {server.stats.retiers} "
+              f"rows moved {server.stats.rows_moved} (host CPU, "
+              f"mesh={args.mesh})")
+        packed_bytes = server.host_packed.nbytes()
+        rec.update(result.as_dict())
+        rec.update({"cache_rows": args.cache_rows,
+                    "retier_every": args.retier_every,
+                    "drift": args.drift,
+                    "packed_mib": round(packed_bytes / 2 ** 20, 3),
+                    "packed_fp32_ratio": round(packed_bytes / fp32, 4)})
+        print(json.dumps(rec))
+        return
+
+    packed = pack(store, cfg)
     packed_bytes = packed.nbytes()
     packed_mib = packed_bytes / 2 ** 20
     print(f"packed {packed_mib:.2f} MiB ({packed_bytes/fp32:.1%} of fp32)")
 
-    mesh = None
-    if args.mesh > 1:
+    if mesh is not None:
         from repro.dist.packed import shard_packed, sharded_lookup
-        mesh = jax.make_mesh((args.mesh,), ("model",))
         packed = shard_packed(packed, mesh)
 
     @jax.jit
@@ -90,32 +172,23 @@ def main() -> None:
         return model.head(params, emb, batch)
 
     lat = []
-    f = spec.num_fields
     for r in range(args.requests):
-        rr = np.random.default_rng(r)
-        batch = {"indices": jnp.asarray(
-            rr.integers(0, min(spec.cardinalities),
-                        (args.batch, f)).astype(np.int32)),
-            "labels": jnp.zeros((args.batch,))}
-        if arch.has_dense:
-            batch["dense"] = jnp.asarray(rr.standard_normal(
-                (args.batch, arch.smoke_num_dense)).astype(np.float32))
+        batch = full_batch(uniform_batch(r), r)
         t0 = time.perf_counter()
         serve(packed, params, batch).block_until_ready()
         lat.append(time.perf_counter() - t0)
-    lat_us = np.asarray(lat[1:]) * 1e6
+    lat_us = np.asarray(lat[1:] if len(lat) > 1 else lat) * 1e6
     p50 = float(np.percentile(lat_us, 50))
     p99 = float(np.percentile(lat_us, 99))
     qps = args.batch / (np.mean(lat_us) / 1e6)
     print(f"{args.requests} requests x{args.batch}: "
           f"p50 {p50:.0f}us p99 {p99:.0f}us (host CPU, "
           f"mesh={args.mesh})")
-    print(json.dumps({
-        "arch": args.arch, "batch": args.batch, "requests": args.requests,
-        "mesh": args.mesh, "qps": round(qps, 1),
-        "p50_us": round(p50, 1), "p99_us": round(p99, 1),
-        "packed_mib": round(packed_mib, 3),
-        "packed_fp32_ratio": round(packed_bytes / fp32, 4)}))
+    rec.update({"qps": round(qps, 1),
+                "p50_us": round(p50, 1), "p99_us": round(p99, 1),
+                "packed_mib": round(packed_mib, 3),
+                "packed_fp32_ratio": round(packed_bytes / fp32, 4)})
+    print(json.dumps(rec))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,36 @@
+"""repro.serve — the online serving subsystem.
+
+Layers live, traffic-adaptive state over the offline artifacts of
+``repro.core`` (tier-partitioned ``PackedStore``) and ``repro.dist``
+(row-sharded placement):
+
+  cache    hot-row cache: top-K rows by live priority, fp32, hit-rate
+           accounted, bit-identical to the packed gather
+  online   ``OnlineServer``: priority EMA fold per request + periodic
+           incremental re-tier (``packed_store.repack_delta``) + cache
+           rebuild, single-device or row-sharded over a mesh
+  loop     request-loop timing harness + drifting-zipf workload synth
+
+Entry points: ``repro.launch.serve --online`` (driver) and
+``benchmarks/qps.py --online`` (steady-state QPS + hit-rate JSON).
+See docs/serving.md for the knobs and docs/architecture.md for where
+this sits in the train -> pack -> serve dataflow.
+"""
+
+from repro.serve.cache import (  # noqa: F401
+    HotRowCache,
+    build_cache,
+    cached_lookup,
+    empty_cache,
+)
+from repro.serve.loop import (  # noqa: F401
+    LoopResult,
+    drifting_zipf_batch,
+    run_loop,
+    serve_forward_loop,
+)
+from repro.serve.online import (  # noqa: F401
+    OnlineConfig,
+    OnlineServer,
+    ServeStats,
+)

@@ -1,0 +1,90 @@
+"""Hot-row cache: top-K rows by live priority, held dequantized in fp32.
+
+SHARK's priority EMA (Eq. 7) already names the rows worth caring about —
+the same scores that pick the fp32 tier offline pick the cache residents
+online.  The cache is consulted *before* the packed gather: hits read a
+contiguous fp32 [K, D] array (VMEM/L2-resident at real K), misses fall
+through to the tier-partitioned store.  Because cache rows are exact
+dequantized copies of the packed payloads, the cached path is
+bit-identical to a plain ``packed_store.lookup`` — the win is traffic,
+not values, so correctness tests can demand equality.
+
+Hit accounting is returned per call (a scalar count) and aggregated by
+``repro.serve.online.ServeStats``; ``benchmarks/qps.py --online``
+reports the steady-state hit rate.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packed_store as ps
+from repro.core.packed_store import PackedStore
+
+Array = jax.Array
+
+LookupFn = Callable[[PackedStore, Array], Array]
+
+
+class HotRowCache(NamedTuple):
+    ids: Array      # int32 [K] global row ids resident in the cache
+    rows: Array     # fp32 [max(K,1), D] dequantized payloads
+    slot_of: Array  # int32 [V] global row -> cache slot, -1 = not cached
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[0]
+
+    def nbytes(self) -> int:
+        return int(sum(leaf.size * leaf.dtype.itemsize for leaf in self))
+
+
+def empty_cache(vocab: int, dim: int) -> HotRowCache:
+    """Disabled cache: every lookup misses (rows kept (1, D) so gathers
+    stay well-formed)."""
+    return HotRowCache(ids=jnp.zeros((0,), jnp.int32),
+                       rows=jnp.zeros((1, dim), jnp.float32),
+                       slot_of=jnp.full((vocab,), -1, jnp.int32))
+
+
+def build_cache(packed: PackedStore, priority: Array, k: int,
+                lookup_fn: LookupFn | None = None) -> HotRowCache:
+    """Populate with the current top-``k`` rows by priority score.
+
+    Rebuilt after every incremental re-tier (the packed payloads the
+    cache mirrors just changed) — see ``online.OnlineServer.retier``.
+    """
+    k = int(min(k, packed.vocab))
+    if k <= 0:
+        return empty_cache(packed.vocab, packed.dim)
+    _, ids = jax.lax.top_k(priority, k)
+    ids = ids.astype(jnp.int32)
+    rows = (lookup_fn or ps.lookup)(packed, ids)
+    slot_of = jnp.full((packed.vocab,), -1, jnp.int32
+                       ).at[ids].set(jnp.arange(k, dtype=jnp.int32))
+    return HotRowCache(ids=ids, rows=rows.astype(jnp.float32),
+                       slot_of=slot_of)
+
+
+def cached_lookup(packed: PackedStore, cache: HotRowCache, indices: Array,
+                  lookup_fn: LookupFn | None = None
+                  ) -> tuple[Array, Array]:
+    """Cache-first gather: int (...,) -> (fp32 (..., D), scalar hits).
+
+    Cache hits read ``cache.rows``; misses go through ``lookup_fn``
+    (``packed_store.lookup`` by default, ``dist.packed.sharded_lookup``
+    on a mesh) with hit positions redirected to row 0 so the packed
+    gather touches only the miss set's rows.  Output is bit-identical to
+    ``lookup_fn(packed, indices)`` for any cache contents built by
+    ``build_cache``.
+    """
+    slot = jnp.take(cache.slot_of, indices, axis=0)
+    hit = slot >= 0
+    miss_idx = jnp.where(hit, 0, indices)
+    cold = (lookup_fn or ps.lookup)(packed, miss_idx)
+    hot = jnp.take(cache.rows, jnp.clip(slot, 0, cache.rows.shape[0] - 1),
+                   axis=0)
+    return jnp.where(hit[..., None], hot, cold), hit.sum()

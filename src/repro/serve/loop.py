@@ -1,0 +1,158 @@
+"""Request loop + synthetic drifting-zipf serving workload.
+
+``drifting_zipf_batch`` draws per-field zipf-ranked indices whose hot
+set rotates linearly through each field's id space over the request
+stream — the adversarial case for any *static* tier assignment: rows
+that were cold at pack time become the head of the distribution
+mid-stream.  The online path (priority fold + delta re-tier + cache
+rebuild) is exactly what keeps hit rate and per-row bytes tracking such
+drift; the offline path degrades.
+
+``run_loop`` times a request stream and reports overall QPS (first,
+compile-bearing request dropped — the same convention as the offline
+driver) and steady-state QPS: the second half of the stream minus the
+requests that ran a re-tier or immediately followed one (those pay the
+host repack and the jit recompile respectively; a production deployment
+runs them off the serving thread).
+
+``serve_forward_loop`` is the shared online driver behind
+``repro.launch.serve --online`` and ``benchmarks/qps.py --online``:
+jitted cache-first forward + priority fold over a drifting-zipf stream.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import embedding as E
+from repro.serve.cache import cached_lookup
+from repro.serve.online import OnlineServer
+
+
+class LoopResult(NamedTuple):
+    lat_s: tuple          # per-request wall seconds
+    qps: float            # whole stream minus the first request
+    steady_qps: float     # second half, re-tier-affected requests excluded
+    p50_us: float
+    p99_us: float
+    stats: dict           # ServeStats.as_dict() snapshot
+
+    def as_dict(self) -> dict:
+        d = {"qps": round(self.qps, 1),
+             "steady_qps": round(self.steady_qps, 1),
+             "p50_us": round(self.p50_us, 1),
+             "p99_us": round(self.p99_us, 1)}
+        d.update(self.stats)
+        return d
+
+
+def drifting_zipf_batch(cardinalities, batch: int, request: int,
+                        num_requests: int, *, a: float = 1.2,
+                        drift: float = 4.0, seed: int = 0) -> np.ndarray:
+    """Field-local int32 (batch, F) indices, zipf-ranked with a moving
+    hot set.
+
+    Rank r of field f maps to id ``(r + shift_f) % card_f`` where
+    ``shift_f = floor(drift * request)``: the hot set advances ``drift``
+    ids per request, wrapping around each field's id space.  The rate is
+    absolute (ids/request, not a fraction of the cardinality) so it is
+    *trackable*: the zipf head is a few dozen ids wide, and a re-tier +
+    cache rebuild every few requests can keep up with a few-ids/request
+    drift, while a static pack decays.  ``drift=0`` is a stationary
+    zipf workload.  ``num_requests`` is unused but kept so callers can
+    switch drift laws without re-plumbing.
+    """
+    del num_requests
+    cards = np.asarray(cardinalities, np.int64)
+    rng = np.random.default_rng(seed * 1_000_003 + request)
+    ranks = rng.zipf(a, size=(batch, cards.size)).astype(np.int64) - 1
+    shift = np.int64(np.floor(drift * request))
+    return ((ranks + shift) % cards[None, :]).astype(np.int32)
+
+
+def run_loop(server: OnlineServer,
+             serve_fn: Callable[[np.ndarray], object],
+             make_batch: Callable[[int], np.ndarray],
+             requests: int, batch: int) -> LoopResult:
+    """Drive ``requests`` batches through ``serve_fn`` and time them.
+
+    ``serve_fn`` receives the (batch, F) field-local index array and is
+    responsible for the forward *and* for ``server.observe`` (so jit
+    boundaries stay under the driver's control); its result is blocked
+    on for honest wall-clock.  Requests during which the server
+    re-tiered are detected from ``server.stats`` and excluded — together
+    with their successor, which pays the recompile — from the
+    steady-state window.
+    """
+    lat, retiered = [], []
+    for r in range(requests):
+        idx = make_batch(r)
+        n_retiers = server.stats.retiers
+        t0 = time.perf_counter()
+        out = serve_fn(idx)
+        jax.block_until_ready(out)
+        lat.append(time.perf_counter() - t0)
+        retiered.append(server.stats.retiers > n_retiers)
+    lat_arr = np.asarray(lat)
+
+    warm = lat_arr[1:] if len(lat) > 1 else lat_arr
+    steady = [lat_arr[i] for i in range(len(lat) // 2, len(lat))
+              if not (i == 0 or retiered[i] or retiered[i - 1])]
+    steady = np.asarray(steady) if steady else lat_arr[len(lat) // 2:]
+    return LoopResult(
+        lat_s=tuple(lat),
+        qps=batch / float(warm.mean()),
+        steady_qps=batch / float(steady.mean()),
+        p50_us=float(np.percentile(warm * 1e6, 50)),
+        p99_us=float(np.percentile(warm * 1e6, 99)),
+        stats=server.stats.as_dict())
+
+
+def serve_forward_loop(server: OnlineServer, model, spec, params, *,
+                       batch: int, requests: int, drift: float = 4.0,
+                       num_dense: int = 0, a: float = 1.2,
+                       seed: int = 0) -> LoopResult:
+    """Shared online driver: jitted cache-first forward + observe fold.
+
+    Serves ``requests`` drifting-zipf batches through
+    ``model.head(params, cached_lookup(...), batch)``.  The jitted
+    forward takes the packed store and cache as arguments, so a re-tier
+    (which changes payload shapes) recompiles exactly at re-tier
+    boundaries and nowhere else.  ``num_dense > 0`` synthesises that
+    many dense features per request (DLRM-style heads).
+    """
+    lfn = server.lookup_fn()
+
+    @jax.jit
+    def fwd(packed, cache, net, b):
+        gidx = E.globalize(b["indices"], spec)
+        emb, hits = cached_lookup(packed, cache, gidx, lfn)
+        return model.head(net, emb, b), hits
+
+    counter = {"r": 0}
+
+    def serve_fn(idx: np.ndarray):
+        r = counter["r"]
+        counter["r"] += 1
+        b = {"indices": jnp.asarray(idx),
+             "labels": jnp.zeros((idx.shape[0],))}
+        if num_dense:
+            rr = np.random.default_rng(10_000 + r)
+            b["dense"] = jnp.asarray(rr.standard_normal(
+                (idx.shape[0], num_dense)).astype(np.float32))
+        out, hits = fwd(server.packed, server.cache, params, b)
+        out.block_until_ready()
+        server.observe(E.globalize(b["indices"], spec), int(hits))
+        return out
+
+    cards = np.asarray(spec.cardinalities, np.int64)
+    return run_loop(
+        server, serve_fn,
+        lambda r: drifting_zipf_batch(cards, batch, r, requests, a=a,
+                                      drift=drift, seed=seed),
+        requests, batch)

@@ -1,0 +1,164 @@
+"""Online serving state: live priority EMA + hot cache + delta re-tier.
+
+``OnlineServer`` owns everything the offline path froze at pack time:
+
+  * the QATStore (fp32 table + Eq. 7 priority vector) — the table is
+    frozen in serving, the priority keeps moving with traffic,
+  * the authoritative *host* PackedStore and its placed copy (identical
+    single-device, ``shard_packed`` row-sharded under a mesh),
+  * the hot-row cache (``serve.cache``), rebuilt after every re-tier,
+  * ``ServeStats`` counters (requests / lookups / hits / retiers /
+    rows_moved).
+
+Per request the driver either calls ``server.lookup(indices)`` (eager
+convenience: cache-first gather + priority fold + periodic re-tier) or
+runs its own jitted forward over ``server.packed`` / ``server.cache``
+and then calls ``server.observe(indices, hits)``.  The second form is
+what ``repro.launch.serve --online`` does — a re-tier swaps in payload
+arrays with *new shapes*, so jit recompiles exactly at re-tier
+boundaries and nowhere else.
+
+Re-tiering itself is ``packed_store.repack_delta``: only tier-crossing
+rows migrate, everything else keeps its payload bytes, and the result is
+bit-identical to a fresh full ``pack`` of the same store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core.packed_store import (
+    PackedStore,
+    lookup as packed_lookup,
+    pack,
+    packed_tiers,
+    repack_delta,
+)
+from repro.core.priority import PriorityConfig, serve_update
+from repro.core.qat_store import FQuantConfig, QATStore, current_tiers
+from repro.core.tiers import tier_crossings
+from repro.serve.cache import HotRowCache, build_cache, cached_lookup
+
+Array = jax.Array
+
+
+class OnlineConfig(NamedTuple):
+    cache_rows: int = 0      # top-K fp32 hot rows (0 = cache disabled)
+    retier_every: int = 0    # requests between delta re-tiers (0 = never)
+    priority: PriorityConfig | None = None  # None -> FQuantConfig's
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int = 0
+    lookups: int = 0       # individual row lookups served
+    hits: int = 0          # of which from the hot cache
+    retiers: int = 0
+    rows_moved: int = 0    # tier-crossing rows migrated by repack_delta
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> dict:
+        return {"requests": self.requests, "lookups": self.lookups,
+                "hits": self.hits, "cache_hit_rate": round(self.hit_rate, 4),
+                "retiers": self.retiers, "rows_moved": self.rows_moved}
+
+
+class OnlineServer:
+    """Mutable serving-side owner of packed store, cache and priorities."""
+
+    def __init__(self, store: QATStore, cfg: FQuantConfig,
+                 online: OnlineConfig = OnlineConfig(), *, mesh=None,
+                 axis: str = "model"):
+        self.store = store
+        self.cfg = cfg
+        self.online = online
+        self.mesh = mesh
+        self.axis = axis
+        self.stats = ServeStats()
+        self.host_packed: PackedStore = pack(store, cfg)
+        self._place()
+        self._rebuild_cache()
+
+    # -- placement -----------------------------------------------------
+
+    def _place(self) -> None:
+        if self.mesh is not None:
+            from repro.dist.packed import shard_packed
+            self.packed = shard_packed(self.host_packed, self.mesh,
+                                       self.axis)
+        else:
+            self.packed = self.host_packed
+
+    def lookup_fn(self):
+        """Miss-path gather matching the placement of ``self.packed``."""
+        if self.mesh is None:
+            return packed_lookup
+        from repro.dist.packed import sharded_lookup
+        mesh, axis = self.mesh, self.axis
+        return lambda pk, idx: sharded_lookup(pk, idx, mesh=mesh,
+                                              axis=axis)
+
+    def _rebuild_cache(self) -> None:
+        # built from the host copy: K rows dequantized on one device
+        self.cache: HotRowCache = build_cache(
+            self.host_packed, self.store.priority, self.online.cache_rows)
+
+    # -- request path --------------------------------------------------
+
+    def lookup(self, indices: Array) -> Array:
+        """Eager cache-first gather + traffic fold.  int (...,) -> fp32
+        (..., D), bit-identical to ``packed_store.lookup`` on a fresh
+        full pack of the current store."""
+        rows, hits = cached_lookup(self.packed, self.cache, indices,
+                                   self.lookup_fn())
+        self.observe(indices, int(hits))
+        return rows
+
+    def observe(self, indices: Array, hits: int | None = None) -> bool:
+        """Fold one served request batch into the online state.
+
+        Updates the priority EMA with the served indices (Eq. 7, c- only
+        — labels don't exist at lookup time), bumps counters, and every
+        ``retier_every`` requests runs an incremental re-tier.  Returns
+        True when the packed store was repacked (payload shapes may have
+        changed — re-fetch ``server.packed`` / ``server.cache``).
+        """
+        self.stats.requests += 1
+        self.stats.lookups += int(np.prod(np.shape(indices)))
+        if hits is not None:
+            self.stats.hits += int(hits)
+        pcfg = self.online.priority or self.cfg.priority
+        self.store = self.store._replace(
+            priority=serve_update(self.store.priority, indices, pcfg))
+        if (self.online.retier_every
+                and self.stats.requests % self.online.retier_every == 0):
+            return self.retier()
+        return False
+
+    # -- incremental re-tier -------------------------------------------
+
+    def retier(self) -> bool:
+        """Delta-repack tier-crossing rows + rebuild the hot cache.
+
+        Equivalent to (but much cheaper than) ``pack(self.store,
+        self.cfg)`` followed by re-placement.  Returns True if any row
+        migrated.
+        """
+        old = packed_tiers(self.host_packed)
+        new = np.asarray(current_tiers(self.store, self.cfg))
+        changed, _ = tier_crossings(old, new)
+        self.stats.retiers += 1
+        if changed.size:
+            self.host_packed = repack_delta(self.host_packed, self.store,
+                                            self.cfg, changed)
+            self.stats.rows_moved += int(changed.size)
+            self._place()
+        self._rebuild_cache()
+        return bool(changed.size)

@@ -59,6 +59,36 @@ def test_bag_lookup_unweighted_is_weight_one():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
 
 
+def test_bag_lookup_empty_bags_are_zero():
+    """Bags no index maps to must come back exactly zero (segment_sum
+    semantics), weighted or not — the serving path pads ragged request
+    streams with empty bags."""
+    packed = _packed(seed=2)
+    rng = np.random.default_rng(9)
+    n, bags = 12, 8
+    idx = jnp.asarray(rng.integers(0, packed.vocab, n).astype(np.int32))
+    seg = jnp.asarray(np.sort(rng.integers(0, 3, n)).astype(np.int32))
+    occupied = np.unique(np.asarray(seg))
+    empty = np.setdiff1d(np.arange(bags), occupied)
+    assert empty.size > 0
+    for w in (None, jnp.asarray(rng.standard_normal(n)
+                                .astype(np.float32))):
+        out = np.asarray(ps.bag_lookup(packed, idx, seg, bags, weights=w))
+        assert out.shape == (bags, packed.dim)
+        np.testing.assert_array_equal(
+            out[empty], np.zeros((empty.size, packed.dim), np.float32))
+        assert np.abs(out[occupied]).sum() > 0
+
+
+def test_bag_lookup_all_bags_empty():
+    """num_bags with a zero-length index stream: all-zero output."""
+    packed = _packed(seed=3)
+    out = ps.bag_lookup(packed, jnp.zeros((0,), jnp.int32),
+                        jnp.zeros((0,), jnp.int32), 5)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.zeros((5, packed.dim), np.float32))
+
+
 def test_sharded_lookup_matches_oracle_4way():
     """shard_packed + sharded_{bag_,}lookup on a 4-device host mesh in a
     subprocess (device count must be set before jax init), vs the

@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Docs link check: relative links and heading anchors must resolve.
+
+Scans README.md and docs/*.md for markdown links ``[text](target)`` and
+fails (exit 1) when
+
+  * a relative file target does not exist, or
+  * a ``#anchor`` (same-file or ``file.md#anchor``) does not match any
+    heading's GitHub-style slug in the target file.
+
+External (``http``/``https``/``mailto``) targets are skipped.  Run from
+the repo root: ``python tools/check_doc_links.py`` (CI does).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: drop markdown emphasis markers, lowercase,
+    keep alphanumerics, hyphens and underscores (GitHub preserves ``_``
+    in anchors — headings naming code identifiers rely on it), map each
+    space to a hyphen."""
+    text = re.sub(r"[`*]", "", heading.strip())
+    out = []
+    for ch in text.lower():
+        if ch.isalnum() or ch in "-_":
+            out.append(ch)
+        elif ch == " ":
+            out.append("-")
+    return "".join(out)
+
+
+def heading_slugs(path: Path) -> set[str]:
+    slugs: set[str] = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            slugs.add(github_slug(m.group(1)))
+    return slugs
+
+
+def doc_files() -> list[Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check() -> list[str]:
+    errors: list[str] = []
+    for doc in doc_files():
+        in_fence = False
+        for lineno, line in enumerate(
+                doc.read_text(encoding="utf-8").splitlines(), 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                where = f"{doc.relative_to(ROOT)}:{lineno}"
+                file_part, _, anchor = target.partition("#")
+                dest = doc if not file_part else (
+                    doc.parent / file_part).resolve()
+                if not dest.exists():
+                    errors.append(f"{where}: broken file link -> "
+                                  f"{target}")
+                    continue
+                if anchor and dest.suffix == ".md":
+                    if anchor not in heading_slugs(dest):
+                        errors.append(f"{where}: broken anchor -> "
+                                      f"{target}")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_files = len(doc_files())
+    if errors:
+        print(f"doc link check FAILED: {len(errors)} broken link(s) "
+              f"across {n_files} file(s)", file=sys.stderr)
+        return 1
+    print(f"doc link check OK ({n_files} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
