@@ -15,6 +15,16 @@ request stream through the hot-row cache + priority fold + incremental
 re-tier loop, and emits ONE machine-readable JSON line with the
 steady-state QPS (second half of the stream, past warm-up and re-tier
 recompiles) and the cache hit rate — schema in docs/serving.md.
+
+``--online --serve-batch 1,8,32`` sweeps the micro-batched pipeline
+instead: the SAME single-user request stream is served at each fusion
+factor and the per-batch-size steady-state QPS lands in a
+stable-schema ``bench_qps/v1`` JSON file (``--emit``, default
+``BENCH_qps.json``) — the measured-bytes-vs-wall-time trajectory
+future PRs compare against.  Bytes per request are derived from the
+pack-time tier assignment over the full stream (identical for every
+sweep entry by construction), so the record also proves micro-batching
+changes wall-time only, not traffic.
 """
 
 from __future__ import annotations
@@ -101,15 +111,11 @@ def run(batch=512, iters=20) -> list[dict]:
     ]
 
 
-def run_online(batch=256, requests=24, cache_rows=512, retier_every=4,
-               drift=4.0, ratio=0.5) -> dict:
-    """Online serving under a drifting zipf workload: one JSON record.
-
-    Uses the bench DLRM with a fabricated pareto priority profile (no
+def _bench_store(ratio: float):
+    """Shared online-bench fixture: the bench DLRM with a fabricated
+    pareto priority profile packed at ``ratio`` of fp32 bytes (no
     training warm-up — the online loop's whole point is that the EMA
     re-learns the tiering from traffic)."""
-    from repro.serve import OnlineConfig, OnlineServer, serve_forward_loop
-
     setup = make_setup(num_fields=10, important=5, train_steps=0)
     spec = setup.model.spec
     params = setup.params
@@ -123,6 +129,22 @@ def run_online(batch=256, requests=24, cache_rows=512, retier_every=4,
     store = qs.QATStore(params["embed_table"], pri)
     store = store._replace(table=qs.snap(
         store.table, qs.current_tiers(store, cfg), cfg))
+    return setup, spec, params, store, cfg
+
+
+def write_bench_json(rec: dict, path: str) -> None:
+    """Single writer for bench_qps/v1 files (qps CLI and run.py --emit)."""
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def run_online(batch=256, requests=24, cache_rows=512, retier_every=4,
+               drift=4.0, ratio=0.5) -> dict:
+    """Online serving under a drifting zipf workload: one JSON record."""
+    from repro.serve import OnlineConfig, OnlineServer, serve_forward_loop
+
+    setup, spec, params, store, cfg = _bench_store(ratio)
 
     server = OnlineServer(store, cfg,
                           OnlineConfig(cache_rows=cache_rows,
@@ -141,22 +163,132 @@ def run_online(batch=256, requests=24, cache_rows=512, retier_every=4,
     return rec
 
 
+BENCH_SCHEMA = "bench_qps/v1"
+
+
+def _stream_bytes_per_request(packed, spec, requests: int, drift: float,
+                              a: float, seed: int) -> dict:
+    """Mean HBM bytes per single-user request over the benchmark stream,
+    against the PACK-TIME tier assignment of ``packed``.
+
+    The sweep evaluates every serve_batch against the same initial
+    pack, so this is identical across entries *by construction* (the
+    schema validator rejects records where it is not) — micro-batching
+    must change wall-time, never traffic.  The online EMA fold is
+    count-batched, so the *final* tier assignment may drift slightly
+    with the fusion factor; pack-time bytes are the stable contract.
+    """
+    from repro.core.packed_store import packed_tiers
+    from repro.models import embedding as E
+    from repro.serve import drifting_zipf_batch
+
+    cards = np.asarray(spec.cardinalities, np.int64)
+    idx = np.stack([drifting_zipf_batch(cards, 1, r, requests, a=a,
+                                        drift=drift, seed=seed)[0]
+                    for r in range(requests)])              # (R, F)
+    gidx = np.asarray(E.globalize(jnp.asarray(idx), spec))
+    tiers = packed_tiers(packed)[gidx.reshape(-1)]
+    d = spec.dim
+    per_tier = np.array([d + 4, 2 * d + 4, 4 * d], np.int64)
+    packed_bytes = int((per_tier[tiers] + 4).sum())
+    return {
+        "bytes_per_request_fp32": int(gidx.size * d * 4 // requests),
+        "bytes_per_request_packed": packed_bytes // requests,
+    }
+
+
+def run_online_sweep(serve_batches, requests=384, cache_rows=512,
+                     retier_every=128, drift=4.0, ratio=0.5,
+                     a=1.2, seed=0) -> dict:
+    """Micro-batched serving sweep: one ``bench_qps/v1`` record.
+
+    Every ``serve_batch`` serves the SAME drifting-zipf single-user
+    stream (seeded per request index, independent of the fusion
+    factor), so steady-state QPS across entries isolates the
+    micro-batching win.  ``retier_every`` counts requests, so the
+    re-tier cadence is identical too.
+    """
+    from repro.serve import (OnlineConfig, OnlineServer,
+                             serve_forward_microbatched)
+
+    setup, spec, params, store, cfg = _bench_store(ratio)
+    fp32 = spec.total_rows * spec.dim * 4
+    initial_pack = pack(store, cfg)
+    bytes_rec = _stream_bytes_per_request(initial_pack, spec, requests,
+                                          drift, a, seed)
+
+    sweep = []
+    for sb in serve_batches:
+        server = OnlineServer(store, cfg,
+                              OnlineConfig(cache_rows=cache_rows,
+                                           retier_every=retier_every))
+        result = serve_forward_microbatched(
+            server, setup.model, spec, params, serve_batch=int(sb),
+            requests=requests, drift=drift, a=a,
+            num_dense=setup.ds.cfg.num_dense, seed=seed)
+        entry = {"serve_batch": int(sb)}
+        entry.update(result.as_dict())
+        entry.update(bytes_rec)
+        sweep.append(entry)
+
+    rec = {"schema": BENCH_SCHEMA, "benchmark": "qps_online_microbatch",
+           "requests": requests, "cache_rows": cache_rows,
+           "retier_every": retier_every, "drift": drift,
+           "packed_fp32_ratio": round(initial_pack.nbytes() / fp32, 4),
+           "sweep": sweep}
+    rec.update(bytes_rec)
+    return rec
+
+
+def _parse_serve_batches(arg: str) -> list[int]:
+    return [int(x) for x in arg.split(",") if x.strip()]
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--online", action="store_true",
                     help="drifting-zipf online-serving loop; prints one "
                          "JSON line (steady_qps, cache_hit_rate, ...)")
     ap.add_argument("--batch", type=int, default=256)
-    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="request-batches (--online; default 24), or "
+                         "single-user requests with --serve-batch "
+                         "(default 384)")
     ap.add_argument("--cache-rows", type=int, default=512)
-    ap.add_argument("--retier-every", type=int, default=4)
+    ap.add_argument("--retier-every", type=int, default=None,
+                    help="re-tier cadence in request-batches (--online; "
+                         "default 4), or in single-user requests with "
+                         "--serve-batch (default 128)")
     ap.add_argument("--drift", type=float, default=4.0)
+    ap.add_argument("--serve-batch", default=None, metavar="N[,N...]",
+                    help="micro-batch sweep (--online): serve the same "
+                         "single-user stream at each fusion factor and "
+                         "emit a bench_qps/v1 JSON file")
+    ap.add_argument("--emit", default=None, metavar="PATH",
+                    help="where to write the bench_qps/v1 JSON "
+                         "(default BENCH_qps.json with --serve-batch)")
     args = ap.parse_args()
-    if args.online:
-        print(json.dumps(run_online(
-            batch=args.batch, requests=args.requests,
+    if args.serve_batch and not args.online:
+        ap.error("--serve-batch requires --online")
+    if args.online and args.serve_batch:
+        rec = run_online_sweep(
+            _parse_serve_batches(args.serve_batch),
+            requests=args.requests or 384,
             cache_rows=args.cache_rows,
-            retier_every=args.retier_every, drift=args.drift)))
+            retier_every=(128 if args.retier_every is None
+                          else args.retier_every),
+            drift=args.drift)
+        path = args.emit or "BENCH_qps.json"
+        write_bench_json(rec, path)
+        print(json.dumps(rec))
+        print(f"wrote {path}")
+    elif args.online:
+        print(json.dumps(run_online(
+            batch=args.batch, requests=args.requests or 24,
+            cache_rows=args.cache_rows,
+            retier_every=(4 if args.retier_every is None
+                          else args.retier_every),
+            drift=args.drift)))
     else:
         for r in run():
             print(r)

@@ -4,6 +4,12 @@ Prints ``name,us_per_call,derived`` CSV rows (derived carries the
 table-specific payload as key=value pairs).
 
     PYTHONPATH=src python -m benchmarks.run [--fast]
+
+``--emit BENCH_qps.json`` instead runs the micro-batched serving sweep
+(``qps.run_online_sweep``) and writes its stable-schema ``bench_qps/v1``
+record to the given path — the perf-trajectory file future PRs diff
+against (validate with ``tools/check_bench_schema.py``).  The CSV jobs
+are skipped in that mode.
 """
 
 from __future__ import annotations
@@ -26,8 +32,25 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="reduced budgets (CI)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--emit", default=None, metavar="PATH",
+                    help="write the micro-batched serving sweep as a "
+                         "stable-schema bench_qps/v1 JSON file and skip "
+                         "the CSV jobs")
+    ap.add_argument("--serve-batches", default="1,8,32",
+                    help="fusion factors for --emit (comma-separated)")
     args = ap.parse_args()
     fast = args.fast
+
+    if args.emit:
+        from benchmarks import qps
+
+        rec = qps.run_online_sweep(
+            qps._parse_serve_batches(args.serve_batches),
+            requests=96 if fast else 384,
+            retier_every=32 if fast else 128)
+        qps.write_bench_json(rec, args.emit)
+        print(f"wrote {args.emit}")
+        return
 
     from benchmarks import (fig2_fperm, fig3_thresholds, freq_error,
                             qps, qps_sharded, roofline, table2_time,

@@ -35,6 +35,19 @@ _TIER_SHIFT = 28
 _IDX_MASK = (1 << _TIER_SHIFT) - 1
 
 
+def _scale_f32(s) -> np.ndarray:
+    """Normalise a host-side scale column to fp32 (writable copy).
+
+    numpy promotes to float64 on contact with python floats (and
+    ``np.concatenate`` keeps the widest dtype), so ``pack`` and
+    ``repack_delta`` funnel scale arrays through here at every entry
+    point — a float64 scale column would double the serving scale
+    bytes and break bit-identity between the delta and full-pack
+    paths.  The fp32-out contract is pinned by a regression test.
+    """
+    return np.array(s, np.float32)  # copy: callers mutate in place
+
+
 class PackedStore(NamedTuple):
     payload8: Array    # int8 [V8, D]
     scale8: Array      # fp32 [V8]
@@ -72,14 +85,14 @@ def pack(store: QATStore, cfg: FQuantConfig) -> PackedStore:
     # int8 tier: RTN at pack time (serving path; paper Eq. 5-6)
     rows8 = table[idx8] if idx8.size else np.zeros((1, dim), np.float32)
     q8, s8 = rq.quantize_rowwise(jnp.asarray(rows8), cfg.bits, mode=cfg.mode)
-    q8, s8 = np.asarray(q8), np.asarray(s8)[:, 0]
+    q8, s8 = np.asarray(q8), _scale_f32(np.asarray(s8)[:, 0])
 
     rows16 = table[idx16] if idx16.size else np.zeros((1, dim), np.float32)
     q16, s16 = rq.quantize_half(jnp.asarray(rows16),
                                 strict_fp16=cfg.strict_fp16,
                                 scaled=cfg.scaled_half)
     q16 = np.asarray(q16.astype(half_dtype))
-    s16 = np.asarray(s16)[:, 0]
+    s16 = _scale_f32(np.asarray(s16)[:, 0])
 
     rows32 = table[idx32] if idx32.size else np.zeros((1, dim), np.float32)
 
@@ -125,6 +138,19 @@ def lookup(packed: PackedStore, indices: Array) -> Array:
                      jnp.where(t == Tier.HALF.value, e16, e32))
 
 
+def lookup_fused(packed: PackedStore, indices: Array,
+                 use_pallas: bool | None = None) -> Array:
+    """Serving-path ``lookup``: fused tiled Pallas gather, bit-identical.
+
+    One fused gather+dequant+bag kernel call per tier with no (N, D)
+    per-tier fp32 intermediates (see ``kernels.dequant_bag.ops``).
+    ``use_pallas=None`` auto-selects the kernel on TPU and falls back to
+    the jnp ``lookup`` oracle where Pallas would be interpreted.
+    """
+    from repro.kernels.dequant_bag.ops import packed_lookup_fused
+    return packed_lookup_fused(packed, indices, use_pallas=use_pallas)
+
+
 def unpack(packed: PackedStore) -> Array:
     """Full dequantized table fp32[V, D] (round-trip check vs QAT snap)."""
     return lookup(packed, jnp.arange(packed.vocab))
@@ -144,15 +170,16 @@ def _quantize_tier(rows: np.ndarray, tier: Tier, cfg: FQuantConfig):
     ``pack`` batch.
     """
     if tier is Tier.INT8:
-        q, s = rq.quantize_rowwise(jnp.asarray(rows), cfg.bits,
-                                   mode=cfg.mode)
-        return np.asarray(q), np.asarray(s)[:, 0]
+        q, s = rq.quantize_rowwise(jnp.asarray(rows, jnp.float32),
+                                   cfg.bits, mode=cfg.mode)
+        return np.asarray(q), _scale_f32(np.asarray(s)[:, 0])
     if tier is Tier.HALF:
         half_dtype = np.float16 if cfg.strict_fp16 else jnp.bfloat16
-        q, s = rq.quantize_half(jnp.asarray(rows),
+        q, s = rq.quantize_half(jnp.asarray(rows, jnp.float32),
                                 strict_fp16=cfg.strict_fp16,
                                 scaled=cfg.scaled_half)
-        return np.asarray(q.astype(half_dtype)), np.asarray(s)[:, 0]
+        return (np.asarray(q.astype(half_dtype)),
+                _scale_f32(np.asarray(s)[:, 0]))
     return rows.astype(np.float32), None
 
 
@@ -194,8 +221,8 @@ def repack_delta(packed: PackedStore, store: QATStore, cfg: FQuantConfig,
     counts = np.bincount(old_tiers, minlength=3)[:3]
     payloads = [np.array(jax.device_get(p)) for p in
                 (packed.payload8, packed.payload16, packed.payload32)]
-    scales = [np.array(jax.device_get(packed.scale8)),
-              np.array(jax.device_get(packed.scale16)), None]
+    scales = [_scale_f32(jax.device_get(packed.scale8)),
+              _scale_f32(jax.device_get(packed.scale16)), None]
 
     # reverse map: tier-local index -> global row
     inv = []

@@ -15,6 +15,14 @@ bag sizes — so the collective cost per request does not grow with the
 number of indices, which is what lets the +30% QPS survive distribution.
 Padding rows added for divisibility are never addressed: ``indirect``
 only encodes real local indices.
+
+Step 2 has two realisations: the jnp gather/where path
+(``_local_rows``, the oracle) and the fused tiled Pallas kernel
+(``_local_bags_fused``) in which each tier's gather + dequant + bag is
+ONE kernel call with other-shard/other-tier slots weight-0-skipped —
+no (N, D) per-tier fp32 intermediates.  ``use_pallas=None``
+auto-selects the kernel on TPU, the oracle where Pallas would be
+interpreted.
 """
 
 from __future__ import annotations
@@ -27,6 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.packed_store import _IDX_MASK, _TIER_SHIFT, PackedStore
 from repro.core.tiers import Tier
+from repro.kernels import should_interpret
 
 Array = jax.Array
 
@@ -112,17 +121,103 @@ def _local_rows(pk: PackedStore, indices: Array, axis: str) -> Array:
             + gather(pk.payload32, None, Tier.FP32.value))
 
 
+def _local_bags_fused(pk: PackedStore, indices: Array, axis: str,
+                      weights: Array | None = None) -> Array:
+    """Tier-split gather + dequant + bag for the rows this shard owns,
+    as one fused tiled kernel call per tier — the (N, D) dequantized
+    per-tier intermediates of ``_local_rows`` never materialise.
+
+    indices (B, K) -> (B, D); rows other shards own contribute zero
+    weight, so the kernel skips their DMAs entirely.
+    """
+    from repro.kernels.dequant_bag.ops import dequant_bag_tpu
+
+    code = jnp.take(pk.indirect, indices, axis=0)
+    tier = code >> _TIER_SHIFT
+    loc = code & _IDX_MASK
+    i = jax.lax.axis_index(axis)
+
+    ones32 = jnp.ones((pk.payload32.shape[0],), jnp.float32)
+    out = jnp.zeros((indices.shape[0], pk.payload32.shape[-1]),
+                    jnp.float32)
+    for t, payload, scale in ((Tier.INT8.value, pk.payload8, pk.scale8),
+                              (Tier.HALF.value, pk.payload16, pk.scale16),
+                              (Tier.FP32.value, pk.payload32, ones32)):
+        v_loc = payload.shape[0]
+        l = loc - i * v_loc
+        mine = (tier == t) & (l >= 0) & (l < v_loc)
+        w = mine.astype(jnp.float32)
+        if weights is not None:
+            w = w * weights
+        lc = jnp.clip(l, 0, v_loc - 1)
+        out = out + dequant_bag_tpu(payload, scale, lc, w,
+                                    use_pallas=True)
+    return out
+
+
 def sharded_lookup(packed: PackedStore, indices: Array, *, mesh,
-                   axis: str = "model") -> Array:
+                   axis: str = "model",
+                   use_pallas: bool | None = None) -> Array:
     """Distributed ``packed_store.lookup``: int (...,) -> fp32 (..., D),
-    replicated."""
+    replicated.
+
+    ``use_pallas=None`` auto-selects: each shard runs the fused tiled
+    kernel (K = 1 bags, bit-identical to the jnp path) on TPU, the
+    gather/where jnp path where Pallas would be interpreted.
+    """
+    if use_pallas is None:
+        use_pallas = not should_interpret()
 
     def local(pk, idx):
-        return jax.lax.psum(_local_rows(pk, idx, axis), axis)
+        if use_pallas:
+            flat = idx.reshape(-1, 1)
+            rows = _local_bags_fused(pk, flat, axis)
+            rows = rows.reshape(*idx.shape, rows.shape[-1])
+        else:
+            rows = _local_rows(pk, idx, axis)
+        return jax.lax.psum(rows, axis)
 
     return shard_map(local, mesh=mesh,
                      in_specs=(packed_pspecs(axis), P()),
                      out_specs=P(), check_rep=False)(packed, indices)
+
+
+def sharded_bag_lookup_rect(packed: PackedStore, indices: Array, *,
+                            mesh, axis: str = "model",
+                            weights: Array | None = None,
+                            use_pallas: bool | None = None) -> Array:
+    """Distributed rectangular embedding-bag: (B, K) indices -> (B, D).
+
+    The fused form of ``sharded_bag_lookup`` for fixed-shape bags (the
+    serving layout): per shard, tier-split gather + dequant + bag run as
+    one tiled kernel call per tier, then a single (B, D) psum — neither
+    the (B*K, D) dequantized rows nor per-tier selects exist.  With
+    ``use_pallas=False`` falls back to ``_local_rows`` + in-axis sum
+    (the oracle the fused path is tested against).
+    """
+    if use_pallas is None:
+        use_pallas = not should_interpret()
+
+    def local(pk, idx, w):
+        if use_pallas:
+            bags = _local_bags_fused(pk, idx, axis, weights=w)
+        else:
+            rows = _local_rows(pk, idx, axis)
+            if w is not None:
+                rows = rows * w[..., None]
+            bags = rows.sum(axis=1)
+        return jax.lax.psum(bags, axis)
+
+    pk_specs = packed_pspecs(axis)
+    if weights is None:
+        fn = shard_map(lambda pk, idx: local(pk, idx, None), mesh=mesh,
+                       in_specs=(pk_specs, P()),
+                       out_specs=P(), check_rep=False)
+        return fn(packed, indices)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(pk_specs, P(), P()),
+                     out_specs=P(), check_rep=False)(
+        packed, indices, weights)
 
 
 def sharded_bag_lookup(packed: PackedStore, indices: Array,

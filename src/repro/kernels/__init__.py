@@ -8,7 +8,36 @@
 
 Each kernel package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper + interpret/XLA fallback switch), ref.py (pure-jnp oracle).
-TPU is the target; correctness is validated with interpret=True on CPU.
+
+Interpret mode is auto-detected per process: on TPU the real kernel
+compiles, everywhere else (CPU containers, CI) the Pallas interpreter
+runs the same program.  ``REPRO_PALLAS_INTERPRET=0|1`` force-overrides
+the detection; per-call ``interpret=`` arguments override both.
 """
 
-INTERPRET = True  # CPU container: run kernels in interpret mode
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+
+@functools.cache
+def _default_interpret() -> bool:
+    forced = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if forced is not None:
+        return forced.strip().lower() not in ("0", "false", "")
+    return jax.default_backend() != "tpu"
+
+
+def should_interpret(override: bool | None = None) -> bool:
+    """Resolve the Pallas ``interpret=`` flag for this process.
+
+    ``override`` wins when given; else ``REPRO_PALLAS_INTERPRET``; else
+    interpret exactly when the default backend is not a TPU, so TPU runs
+    compile the real kernel instead of silently interpreting.
+    """
+    if override is not None:
+        return bool(override)
+    return _default_interpret()

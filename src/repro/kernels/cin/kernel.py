@@ -51,8 +51,12 @@ def _cin_kernel(xk_ref, x0_ref, w_ref, out_ref):
 @functools.partial(jax.jit,
                    static_argnames=("block_b", "block_o", "interpret"))
 def cin_layer_pallas(w: Array, x_k: Array, x_0: Array, block_b: int = 64,
-                     block_o: int = 16, interpret: bool = True) -> Array:
-    """(O,H,M), (B,H,D), (B,M,D) -> (B,O,D) fp32."""
+                     block_o: int = 16,
+                     interpret: bool | None = None) -> Array:
+    """(O,H,M), (B,H,D), (B,M,D) -> (B,O,D) fp32.  ``interpret=None``
+    auto-detects the backend (real kernel on TPU)."""
+    from repro.kernels import should_interpret
+    interpret = should_interpret(interpret)
     b, h, d = x_k.shape
     m = x_0.shape[1]
     o = w.shape[0]

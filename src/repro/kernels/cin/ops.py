@@ -12,7 +12,10 @@ Array = jax.Array
 
 
 def cin_layer_tpu(w: Array, x_k: Array, x_0: Array,
-                  use_pallas: bool = True) -> Array:
+                  use_pallas: bool = True,
+                  interpret: bool | None = None) -> Array:
+    """``interpret=None`` auto-detects (``kernels.should_interpret``)."""
     if not use_pallas:
         return cin_layer_ref(w, x_k, x_0)
-    return cin_layer_pallas(w, x_k, x_0, interpret=kernels.INTERPRET)
+    return cin_layer_pallas(w, x_k, x_0,
+                            interpret=kernels.should_interpret(interpret))

@@ -3,22 +3,42 @@
 The SHARK serving hot path.  XLA lowers packed-store lookup to
 gather(int8) -> convert -> gather(scale) -> multiply -> segment-sum: four
 HBM-bound ops materialising the (B*K, D) dequantized rows.  This kernel
-streams each needed row HBM->VMEM exactly once via the scalar-prefetch
-pipeline, dequantizes on the VPU in fp32, and accumulates straight into
-the (B_block, D) output bag tile — the (L, D) intermediate never exists.
+streams each needed row HBM->VMEM exactly once, dequantizes on the VPU in
+fp32, and accumulates straight into the output bag tile — the (L, D)
+intermediate never exists.
 
-Layout:
-  grid = (B, K)     one row DMA per step; output tile revisited K times
-  payload row block (1, D) indexed by the prefetched indices[b, k]
-  scale   block     (1, 1) same indirection
-  weights block     (1, 1) per-slot weight (0 masks padded slots)
-  out     block     (1, D) accumulate; zeroed at k == 0
+Tiled layout (``dequant_bag_pallas``):
 
-B*K DMAs of D bytes each pipeline across grid steps (double-buffered by
-the Pallas pipeline), which is the roofline-optimal traffic: exactly the
-bytes of the touched rows.  On the 819 GB/s HBM of v5e this is
-~4x fewer bytes than the fp32 path — the kernel-level realisation of the
-paper's +30% QPS.
+  grid = (ceil(B / B_block), D / D_block)
+  indices   (B, K) int32   scalar-prefetched (SMEM): row addressing
+  scales    (B_block, K)   VMEM block: per-slot gathered row scales
+  weights   (B_block, K)   VMEM block: per-slot weight (0 = padded slot)
+  payload   (V, D)         stays in HBM (ANY); rows DMA'd manually
+  out       (B_block, D_block) VMEM, accumulated in-kernel
+  scratch   (B_block*K, D_block) payload-dtype row landing buffer
+            + one DMA semaphore per slot
+
+Each grid step batch-issues the async row-slice copies for its whole
+(B_block, K) tile — skipping zero-weight slots entirely — then drains
+them in slot order, accumulating ``(row * scale) * weight`` into the
+output tile.  Issuing all DMAs before the first wait is what coalesces
+the per-row transfers: the DMA engine pipelines B_block*K row bursts
+per tile instead of one (1, D) copy per grid step, and blocking over D
+keeps the VMEM footprint bounded for large dims (a (1, D) tile no
+longer has to fit a whole row).
+
+Accumulation is sequential in k per bag, so results are bit-identical
+to the (B, K)-grid kernel (kept as ``dequant_bag_pallas_rowgrid``) and
+match the jnp oracle to within the final jnp.sum reduction order
+(exactly, for K = 1).  One normalisation rode along with the refactor:
+both kernels now multiply ``(row * scale) * weight`` in the oracle's
+order, where the original grid kernel computed ``row * (scale *
+weight)`` — up to 1 ulp apart per slot — so that rowgrid-vs-tiled
+bit-equality isolates the *tiling* change.
+
+On the 819 GB/s HBM of v5e the traffic is roofline-optimal: exactly the
+bytes of the touched rows, ~4x fewer than the fp32 path — the
+kernel-level realisation of the paper's +30% QPS.
 """
 
 from __future__ import annotations
@@ -30,10 +50,134 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import should_interpret
+
 Array = jax.Array
 
 
-def _bag_kernel(idx_ref, payload_ref, scale_ref, weight_ref, out_ref):
+def _tiled_kernel(idx_ref, scale_ref, weight_ref, payload_ref, out_ref,
+                  rows_ref, sems, *, block_b: int, block_d: int, k: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    d0 = j * block_d
+    nslots = block_b * k
+
+    def row_dma(slot):
+        b, kk = slot // k, slot % k
+        row = idx_ref[i * block_b + b, kk]
+        return pltpu.make_async_copy(
+            payload_ref.at[pl.ds(row, 1), pl.ds(d0, block_d)],
+            rows_ref.at[pl.ds(slot, 1), :],
+            sems.at[slot])
+
+    def start(slot, carry):
+        @pl.when(weight_ref[slot // k, slot % k] != 0.0)
+        def _():
+            row_dma(slot).start()
+        return carry
+
+    jax.lax.fori_loop(0, nslots, start, 0)
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    def drain(slot, carry):
+        b, kk = slot // k, slot % k
+        w = weight_ref[b, kk]
+
+        @pl.when(w != 0.0)
+        def _():
+            row_dma(slot).wait()
+            row = rows_ref[pl.ds(slot, 1), :].astype(jnp.float32)
+            out_ref[pl.ds(b, 1), :] += (row * scale_ref[b, kk]) * w
+        return carry
+
+    jax.lax.fori_loop(0, nslots, drain, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_d", "interpret"))
+def _tiled_call(payload: Array, scales: Array, indices: Array,
+                weights: Array, *, block_b: int, block_d: int,
+                interpret: bool) -> Array:
+    v, d = payload.shape
+    b, k = indices.shape
+    indices = indices.astype(jnp.int32)
+    sg = jnp.take(scales, indices, axis=0).astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+
+    nb = -(-b // block_b)
+    bp = nb * block_b
+    if bp != b:
+        # grid padding: extra bags carry weight 0, so every DMA and
+        # accumulate for them is skipped in-kernel
+        indices = jnp.pad(indices, ((0, bp - b), (0, 0)))
+        sg = jnp.pad(sg, ((0, bp - b), (0, 0)))
+        weights = jnp.pad(weights, ((0, bp - b), (0, 0)))
+    nd = -(-d // block_d)
+    dp = nd * block_d
+    if dp != d:
+        # correctness path for explicit non-dividing block_d: pad the
+        # payload columns once (the block picker always chooses a
+        # divisor of D, so the hot path never copies)
+        payload = jnp.pad(payload, ((0, 0), (0, dp - d)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, nd),
+        in_specs=[
+            pl.BlockSpec((block_b, k), lambda i, j, idx: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i, j, idx: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_d),
+                               lambda i, j, idx: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((block_b * k, block_d), payload.dtype),
+            pltpu.SemaphoreType.DMA((block_b * k,)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_tiled_kernel, block_b=block_b,
+                          block_d=block_d, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bp, dp), jnp.float32),
+        interpret=interpret,
+    )(indices, sg, weights, payload)
+    return out[:b, :d]
+
+
+def dequant_bag_pallas(payload: Array, scales: Array, indices: Array,
+                       weights: Array | None = None,
+                       interpret: bool | None = None, *,
+                       block_b: int | None = None,
+                       block_d: int | None = None) -> Array:
+    """payload (V, D), scales (V,), indices (B, K) -> (B, D) fp32 bags.
+
+    Tiled (B_block, D_block) kernel; block sizes default to the
+    autotune-lite picker in ``ops.pick_block_sizes``.  ``interpret``
+    defaults to backend auto-detection (``kernels.should_interpret``).
+    """
+    b, k = indices.shape
+    d = payload.shape[1]
+    if weights is None:
+        weights = jnp.ones((b, k), jnp.float32)
+    from repro.kernels.dequant_bag.ops import resolve_block_sizes
+    block_b, block_d = resolve_block_sizes(b, k, d,
+                                           payload.dtype.itemsize,
+                                           block_b, block_d)
+    return _tiled_call(payload, scales, indices, weights,
+                       block_b=block_b, block_d=block_d,
+                       interpret=should_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# pre-refactor kernel layout: (B, K) grid, one (1, D) row DMA per step.
+# Kept as the tiling oracle, with ONE edit vs its original form: the
+# accumulate is now (row * s) * w instead of row * (s * w) — the ref's
+# multiply order, <=1 ulp apart — so bit-equality with the tiled kernel
+# tests the tiling alone.
+
+
+def _rowgrid_kernel(idx_ref, payload_ref, scale_ref, weight_ref, out_ref):
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -43,18 +187,14 @@ def _bag_kernel(idx_ref, payload_ref, scale_ref, weight_ref, out_ref):
     row = payload_ref[...].astype(jnp.float32)      # (1, D)
     s = scale_ref[0, 0]
     w = weight_ref[0, 0]
-    out_ref[...] += row * (s * w)
+    out_ref[...] += (row * s) * w
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def dequant_bag_pallas(payload: Array, scales: Array, indices: Array,
-                       weights: Array | None = None,
-                       interpret: bool = True) -> Array:
-    """payload (V, D), scales (V,), indices (B, K) -> (B, D) fp32 bags."""
+def _rowgrid_call(payload: Array, scales: Array, indices: Array,
+                  weights: Array, *, interpret: bool) -> Array:
     v, d = payload.shape
     b, k = indices.shape
-    if weights is None:
-        weights = jnp.ones((b, k), jnp.float32)
     scales2 = scales.reshape(v, 1)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -68,8 +208,22 @@ def dequant_bag_pallas(payload: Array, scales: Array, indices: Array,
         out_specs=pl.BlockSpec((1, d), lambda i, j, idx: (i, 0)),
     )
     return pl.pallas_call(
-        _bag_kernel,
+        _rowgrid_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
         interpret=interpret,
-    )(indices, payload, scales2, weights)
+    )(indices.astype(jnp.int32), payload, scales2, weights)
+
+
+def dequant_bag_pallas_rowgrid(payload: Array, scales: Array,
+                               indices: Array,
+                               weights: Array | None = None,
+                               interpret: bool | None = None) -> Array:
+    """Pre-refactor (B, K)-grid layout.  One row DMA per grid step; the
+    output tile is revisited K times.  Bit-identical to the tiled
+    kernel (multiply order normalised to the ref's — see above)."""
+    b, k = indices.shape
+    if weights is None:
+        weights = jnp.ones((b, k), jnp.float32)
+    return _rowgrid_call(payload, scales, indices, weights,
+                         interpret=should_interpret(interpret))

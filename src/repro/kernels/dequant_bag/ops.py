@@ -1,42 +1,130 @@
 """Public op: fused dequant embedding-bag over the tier-partitioned store.
 
-``packed_bag_lookup`` runs one fused kernel per tier (tier-local indices
-come straight from the PackedStore indirection) and sums the three
-partial bags — rows of padded slots are masked by zero weights.
+``packed_bag_lookup`` runs one fused tiled kernel per tier (tier-local
+indices come straight from the PackedStore indirection) and sums the
+three partial bags — slots belonging to other tiers are masked by zero
+weights, which the tiled kernel skips without issuing their row DMAs.
+``packed_lookup_fused`` is the per-index (K = 1) specialisation: the
+serving gather with no (B*K, D) fp32 intermediate, bit-identical to
+``packed_store.lookup``.
+
+Block sizes come from ``pick_block_sizes`` — an autotune-lite picker:
+a cached analytic model (VMEM budget + divisibility) rather than a
+timing sweep, overridable per call or via
+``REPRO_DEQUANT_BLOCK_B`` / ``REPRO_DEQUANT_BLOCK_D``.
 """
 
 from __future__ import annotations
 
+import functools
+import os
+
 import jax
 import jax.numpy as jnp
 
-from repro import kernels
 from repro.core.packed_store import _IDX_MASK, _TIER_SHIFT, PackedStore
+from repro.kernels import should_interpret
 from repro.kernels.dequant_bag.kernel import dequant_bag_pallas
 from repro.kernels.dequant_bag.ref import dequant_bag_ref
 
 Array = jax.Array
 
+# scratch budget for the (B_block*K, D_block) row landing buffer; ~2 MiB
+# leaves plenty of the ~16 MiB/core VMEM for the pipeline's other blocks
+_VMEM_SCRATCH_BUDGET = 2 << 20
+
+
+@functools.lru_cache(maxsize=512)
+def _auto_block_d(d: int) -> int:
+    divisors = [x for x in range(1, min(d, 512) + 1) if d % x == 0]
+    aligned = [x for x in divisors if x % 128 == 0]
+    return max(aligned) if aligned else max(divisors)
+
+
+@functools.lru_cache(maxsize=512)
+def _auto_block_b(b: int, k: int, block_d: int, itemsize: int,
+                  vmem_budget: int) -> int:
+    block_b = 1
+    while (block_b * 2 <= b
+           and block_b * 2 * k * block_d * itemsize <= vmem_budget):
+        block_b *= 2
+    return block_b
+
+
+def resolve_block_sizes(b: int, k: int, d: int, itemsize: int = 1,
+                        block_b: int | None = None,
+                        block_d: int | None = None,
+                        vmem_budget: int = _VMEM_SCRATCH_BUDGET
+                        ) -> tuple[int, int]:
+    """Layer (B_block, D_block) overrides over the analytic pick.
+
+    Precedence per dimension: explicit argument, then
+    ``REPRO_DEQUANT_BLOCK_B`` / ``REPRO_DEQUANT_BLOCK_D`` (read per
+    call, so changing them mid-process takes effect), then the
+    autotune-lite pick.  An overridden D_block — from either source —
+    re-sizes an unspecified B_block against the *overridden* value, so
+    the VMEM scratch budget holds whichever dimension was pinned.
+    """
+    for name, v in (("block_b", block_b), ("block_d", block_d)):
+        if v is not None and v < 1:
+            raise ValueError(f"{name} must be >= 1, got {v}")
+    if block_d is None:
+        env_d = os.environ.get("REPRO_DEQUANT_BLOCK_D")
+        block_d = max(1, int(env_d)) if env_d else _auto_block_d(d)
+    if block_b is None:
+        env_b = os.environ.get("REPRO_DEQUANT_BLOCK_B")
+        block_b = (max(1, int(env_b)) if env_b
+                   else _auto_block_b(b, k, int(block_d), itemsize,
+                                      vmem_budget))
+    return int(block_b), int(block_d)
+
+
+def pick_block_sizes(b: int, k: int, d: int, itemsize: int = 1,
+                     vmem_budget: int = _VMEM_SCRATCH_BUDGET
+                     ) -> tuple[int, int]:
+    """Autotune-lite (B_block, D_block) picker for the tiled kernel.
+
+    D_block: the largest divisor of D that is <= 512, preferring
+    lane-aligned multiples of 128 (so large dims are split instead of
+    forcing a full-row VMEM tile, and the hot path never pads).
+    B_block: the largest power of two <= B whose (B_block*K, D_block)
+    row scratch fits the VMEM budget.  The analytic picks are cached
+    per shape; env overrides layer on top (``resolve_block_sizes``).
+    """
+    return resolve_block_sizes(b, k, d, itemsize,
+                               vmem_budget=vmem_budget)
+
 
 def dequant_bag_tpu(payload: Array, scales: Array, indices: Array,
                     weights: Array | None = None,
-                    use_pallas: bool = True) -> Array:
+                    use_pallas: bool = True,
+                    interpret: bool | None = None,
+                    block_b: int | None = None,
+                    block_d: int | None = None) -> Array:
     if not use_pallas:
         return dequant_bag_ref(payload, scales, indices, weights)
     return dequant_bag_pallas(payload, scales, indices, weights,
-                              interpret=kernels.INTERPRET)
+                              interpret=interpret,
+                              block_b=block_b, block_d=block_d)
+
+
+def _tier_split(packed: PackedStore, indices: Array):
+    code = jnp.take(packed.indirect, indices, axis=0)
+    return code >> _TIER_SHIFT, code & _IDX_MASK
 
 
 def packed_bag_lookup(packed: PackedStore, indices: Array,
-                      use_pallas: bool = True) -> Array:
+                      weights: Array | None = None,
+                      use_pallas: bool = True,
+                      interpret: bool | None = None) -> Array:
     """Bag-sum lookup over a PackedStore.  indices (B, K) -> (B, D) fp32.
 
-    Each tier's rows are gathered by its own fused kernel call with
-    tier-local indices; slots belonging to other tiers get weight 0.
+    Each tier's rows are gathered by its own fused tiled kernel call
+    with tier-local indices; slots belonging to other tiers get weight 0
+    and are skipped in-kernel (no DMA issued).  Optional ``weights``
+    (B, K) multiply per slot.
     """
-    code = jnp.take(packed.indirect, indices, axis=0)
-    tier = code >> _TIER_SHIFT
-    loc = code & _IDX_MASK
+    tier, loc = _tier_split(packed, indices)
 
     ones32 = jnp.ones((packed.payload32.shape[0],), jnp.float32)
     out = jnp.zeros((indices.shape[0], packed.dim), jnp.float32)
@@ -45,7 +133,36 @@ def packed_bag_lookup(packed: PackedStore, indices: Array,
             (1, packed.payload16, packed.scale16),
             (2, packed.payload32, ones32)):
         w = (tier == t).astype(jnp.float32)
+        if weights is not None:
+            w = w * weights
         li = jnp.clip(loc, 0, payload.shape[0] - 1)
         out = out + dequant_bag_tpu(payload, scales, li, w,
-                                    use_pallas=use_pallas)
+                                    use_pallas=use_pallas,
+                                    interpret=interpret)
     return out
+
+
+def packed_lookup_fused(packed: PackedStore, indices: Array,
+                        use_pallas: bool | None = None,
+                        interpret: bool | None = None) -> Array:
+    """Fused per-index serving gather.  int (...,) -> fp32 (..., D).
+
+    The K = 1 specialisation of ``packed_bag_lookup``: one tiled kernel
+    call per tier, no (N, D) per-tier fp32 intermediates and no
+    three-way select — each slot's row is produced by exactly one tier's
+    kernel (the others skip it), so the sum is **bit-identical** to
+    ``packed_store.lookup``.
+
+    ``use_pallas=None`` auto-selects: the fused kernel when the backend
+    compiles it for real, the jnp oracle under interpretation (where
+    the interpreter's per-step Python loop would throttle serving).
+    """
+    if use_pallas is None:
+        use_pallas = not should_interpret(interpret)
+    if not use_pallas:
+        from repro.core.packed_store import lookup
+        return lookup(packed, indices)
+    flat = indices.reshape(-1, 1)
+    out = packed_bag_lookup(packed, flat, use_pallas=True,
+                            interpret=interpret)
+    return out.reshape(*indices.shape, packed.dim)

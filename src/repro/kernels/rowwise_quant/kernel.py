@@ -43,10 +43,13 @@ def _quant_kernel(x_ref, noise_ref, q_ref, scale_ref, *, mode: str,
                    static_argnames=("mode", "block_rows", "interpret"))
 def quantize_rowwise_pallas(x: Array, noise: Array | None = None,
                             mode: str = "narrow", block_rows: int = 256,
-                            interpret: bool = True
+                            interpret: bool | None = None
                             ) -> tuple[Array, Array]:
     """x (V, D) -> (q int8 (V, D), scale fp32 (V, 1)).  V % block_rows == 0
-    is handled by padding here; D should be lane-aligned for real TPU."""
+    is handled by padding here; D should be lane-aligned for real TPU.
+    ``interpret=None`` auto-detects the backend (real kernel on TPU)."""
+    from repro.kernels import should_interpret
+    interpret = should_interpret(interpret)
     v, d = x.shape
     br = min(block_rows, v)
     pad = (-v) % br

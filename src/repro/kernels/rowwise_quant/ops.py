@@ -13,9 +13,13 @@ Array = jax.Array
 
 def quantize_rowwise_tpu(x: Array, noise: Array | None = None,
                          mode: str = "narrow",
-                         use_pallas: bool = True) -> tuple[Array, Array]:
-    """Fused row-wise quantization.  See kernel.py for the TPU layout."""
+                         use_pallas: bool = True,
+                         interpret: bool | None = None
+                         ) -> tuple[Array, Array]:
+    """Fused row-wise quantization.  See kernel.py for the TPU layout.
+    ``interpret=None`` auto-detects (``kernels.should_interpret``)."""
     if not use_pallas:
         return quantize_rowwise_ref(x, noise, mode)
     return quantize_rowwise_pallas(x, noise, mode,
-                                   interpret=kernels.INTERPRET)
+                                   interpret=kernels.should_interpret(
+                                       interpret))

@@ -17,6 +17,13 @@ every ``--retier-every`` requests tier-crossing rows are migrated with
 ``packed_store.repack_delta`` (re-sharded under ``--mesh N``).  Payload
 shapes change at re-tier boundaries, so jit recompiles exactly there.
 
+``--serve-batch N`` (with ``--online``) switches to the micro-batched
+pipeline: single-user requests accumulate into fixed-shape (N, F)
+batches (pad + mask) and each batch runs one jitted forward and one
+vectorised priority fold — ``--requests`` then counts single-user
+requests.  The serving gather is the fused tiled Pallas dequant-bag
+kernel on TPU (``packed_store.lookup_fused``), its jnp oracle on CPU.
+
 The last stdout line is a machine-readable JSON record
 (qps / p50_us / p99_us / packed_mib / ... plus, online:
 cache_hit_rate / steady_qps / retiers / rows_moved) consumed by
@@ -54,7 +61,14 @@ def main() -> None:
     ap.add_argument("--drift", type=float, default=4.0,
                     help="zipf hot-set drift in ids/request "
                          "(--online; 0 = stationary)")
+    ap.add_argument("--serve-batch", type=int, default=0,
+                    help="micro-batch N single-user requests per jitted "
+                         "forward (--online; 0 = legacy request-at-a-"
+                         "time batches of --batch users).  --requests "
+                         "then counts single-user requests")
     args = ap.parse_args()
+    if args.serve_batch > 0 and not args.online:
+        ap.error("--serve-batch requires --online")
 
     if args.mesh > 1:
         flags = os.environ.get("XLA_FLAGS", "")
@@ -68,7 +82,7 @@ def main() -> None:
     from repro import configs
     from repro.core import FQuantConfig, pack
     from repro.core import qat_store as qs
-    from repro.core.packed_store import lookup as packed_lookup
+    from repro.core.packed_store import lookup_fused as packed_lookup
     from repro.core.tiers import plan_thresholds_for_ratio
     from repro.models import embedding as E
 
@@ -121,7 +135,8 @@ def main() -> None:
 
     if args.online:
         from repro.serve import (OnlineConfig, OnlineServer,
-                                 serve_forward_loop)
+                                 serve_forward_loop,
+                                 serve_forward_microbatched)
 
         server = OnlineServer(
             store, cfg,
@@ -133,12 +148,23 @@ def main() -> None:
               f"({server.host_packed.nbytes() / fp32:.1%} of fp32), "
               f"cache {args.cache_rows} rows, "
               f"retier every {args.retier_every} requests")
-        result = serve_forward_loop(
-            server, model, spec, params, batch=args.batch,
-            requests=args.requests, drift=args.drift,
-            num_dense=arch.smoke_num_dense if arch.has_dense else 0)
-        print(f"{args.requests} requests x{args.batch}: "
+        num_dense = arch.smoke_num_dense if arch.has_dense else 0
+        if args.serve_batch > 0:
+            result = serve_forward_microbatched(
+                server, model, spec, params,
+                serve_batch=args.serve_batch, requests=args.requests,
+                drift=args.drift, num_dense=num_dense)
+            shape_note = (f"{args.requests} requests micro-batched "
+                          f"x{args.serve_batch}")
+        else:
+            result = serve_forward_loop(
+                server, model, spec, params, batch=args.batch,
+                requests=args.requests, drift=args.drift,
+                num_dense=num_dense)
+            shape_note = f"{args.requests} requests x{args.batch}"
+        print(f"{shape_note}: "
               f"p50 {result.p50_us:.0f}us p99 {result.p99_us:.0f}us "
+              f"steady {result.steady_qps:.0f} qps "
               f"hit-rate {server.stats.hit_rate:.1%} "
               f"retiers {server.stats.retiers} "
               f"rows moved {server.stats.rows_moved} (host CPU, "
@@ -148,6 +174,7 @@ def main() -> None:
         rec.update({"cache_rows": args.cache_rows,
                     "retier_every": args.retier_every,
                     "drift": args.drift,
+                    "serve_batch": args.serve_batch,
                     "packed_mib": round(packed_bytes / 2 ** 20, 3),
                     "packed_fp32_ratio": round(packed_bytes / fp32, 4)})
         print(json.dumps(rec))

@@ -10,6 +10,8 @@ Layers live, traffic-adaptive state over the offline artifacts of
            incremental re-tier (``packed_store.repack_delta``) + cache
            rebuild, single-device or row-sharded over a mesh
   loop     request-loop timing harness + drifting-zipf workload synth
+           + micro-batching (``MicroBatcher``: fixed-shape pad+mask
+           fusion of single-user requests, one forward per N requests)
 
 Entry points: ``repro.launch.serve --online`` (driver) and
 ``benchmarks/qps.py --online`` (steady-state QPS + hit-rate JSON).
@@ -25,9 +27,13 @@ from repro.serve.cache import (  # noqa: F401
 )
 from repro.serve.loop import (  # noqa: F401
     LoopResult,
+    MicroBatch,
+    MicroBatcher,
     drifting_zipf_batch,
     run_loop,
+    run_microbatched_loop,
     serve_forward_loop,
+    serve_forward_microbatched,
 )
 from repro.serve.online import (  # noqa: F401
     OnlineConfig,

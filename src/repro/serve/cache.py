@@ -70,8 +70,8 @@ def build_cache(packed: PackedStore, priority: Array, k: int,
 
 
 def cached_lookup(packed: PackedStore, cache: HotRowCache, indices: Array,
-                  lookup_fn: LookupFn | None = None
-                  ) -> tuple[Array, Array]:
+                  lookup_fn: LookupFn | None = None,
+                  valid: Array | None = None) -> tuple[Array, Array]:
     """Cache-first gather: int (...,) -> (fp32 (..., D), scalar hits).
 
     Cache hits read ``cache.rows``; misses go through ``lookup_fn``
@@ -80,6 +80,11 @@ def cached_lookup(packed: PackedStore, cache: HotRowCache, indices: Array,
     gather touches only the miss set's rows.  Output is bit-identical to
     ``lookup_fn(packed, indices)`` for any cache contents built by
     ``build_cache``.
+
+    ``valid`` (bool, broadcastable to ``indices``) masks padded slots
+    of a micro-batch out of the *hit count* — the vectorised gather
+    itself still runs full-shape (padded rows are discarded by the
+    caller), keeping the jitted program shape-stable.
     """
     slot = jnp.take(cache.slot_of, indices, axis=0)
     hit = slot >= 0
@@ -87,4 +92,6 @@ def cached_lookup(packed: PackedStore, cache: HotRowCache, indices: Array,
     cold = (lookup_fn or ps.lookup)(packed, miss_idx)
     hot = jnp.take(cache.rows, jnp.clip(slot, 0, cache.rows.shape[0] - 1),
                    axis=0)
-    return jnp.where(hit[..., None], hot, cold), hit.sum()
+    counted = hit if valid is None else hit & jnp.broadcast_to(
+        valid, hit.shape)
+    return jnp.where(hit[..., None], hot, cold), counted.sum()

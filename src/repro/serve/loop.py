@@ -1,4 +1,4 @@
-"""Request loop + synthetic drifting-zipf serving workload.
+"""Request loop + micro-batching + synthetic drifting-zipf workload.
 
 ``drifting_zipf_batch`` draws per-field zipf-ranked indices whose hot
 set rotates linearly through each field's id space over the request
@@ -18,6 +18,16 @@ runs them off the serving thread).
 ``serve_forward_loop`` is the shared online driver behind
 ``repro.launch.serve --online`` and ``benchmarks/qps.py --online``:
 jitted cache-first forward + priority fold over a drifting-zipf stream.
+
+Micro-batching (``MicroBatcher`` / ``run_microbatched_loop`` /
+``serve_forward_microbatched``) replaces request-at-a-time execution:
+incoming single-user requests accumulate into **fixed-shape** (N, F)
+batches — padded with row 0 and a validity mask when the stream ends
+mid-batch, so the jitted forward never re-specialises — and each batch
+runs ONE forward, ONE vectorised priority fold, and ONE cache pass.
+The per-request Python + dispatch overhead that dominates small-request
+serving is amortised N ways; ``--serve-batch`` in the drivers selects N
+and ``benchmarks/qps.py --online`` sweeps it.
 """
 
 from __future__ import annotations
@@ -73,6 +83,111 @@ def drifting_zipf_batch(cardinalities, batch: int, request: int,
     ranks = rng.zipf(a, size=(batch, cards.size)).astype(np.int64) - 1
     shift = np.int64(np.floor(drift * request))
     return ((ranks + shift) % cards[None, :]).astype(np.int32)
+
+
+class MicroBatch(NamedTuple):
+    indices: np.ndarray   # (N, F) int32; padded slots hold row 0
+    valid: np.ndarray     # (N,) bool; False marks padding
+    count: int            # live requests in this batch
+
+
+class MicroBatcher:
+    """Accumulates single-request index vectors into fixed-shape batches.
+
+    ``add`` returns a full ``MicroBatch`` every ``capacity`` requests
+    and ``None`` otherwise; ``flush`` pads a partial tail batch (row 0
+    indices, ``valid=False``) so every emitted batch has the SAME
+    (capacity, F) shape — the jitted forward compiles once per
+    capacity, never per fill level.
+    """
+
+    def __init__(self, capacity: int, num_fields: int):
+        if capacity < 1:
+            raise ValueError("micro-batch capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.num_fields = int(num_fields)
+        self._buf = np.zeros((self.capacity, self.num_fields), np.int32)
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def add(self, request) -> MicroBatch | None:
+        req = np.asarray(request, np.int32).reshape(-1)
+        if req.shape[0] != self.num_fields:
+            raise ValueError(
+                f"request has {req.shape[0]} fields, expected "
+                f"{self.num_fields}")
+        self._buf[self._n] = req
+        self._n += 1
+        return self.flush() if self._n == self.capacity else None
+
+    def flush(self) -> MicroBatch | None:
+        if self._n == 0:
+            return None
+        n = self._n
+        valid = np.zeros((self.capacity,), bool)
+        valid[:n] = True
+        batch = MicroBatch(indices=self._buf.copy(), valid=valid, count=n)
+        self._buf[:] = 0
+        self._n = 0
+        return batch
+
+
+def run_microbatched_loop(server: OnlineServer,
+                          serve_fn: Callable[[MicroBatch], object],
+                          make_request: Callable[[int], np.ndarray],
+                          requests: int, serve_batch: int) -> LoopResult:
+    """Drive ``requests`` single-user requests through ``serve_fn`` in
+    fixed-shape micro-batches of ``serve_batch`` and time the batches.
+
+    ``make_request(r)`` yields one (F,) index vector; ``serve_fn``
+    receives a ``MicroBatch`` and is responsible for the forward AND for
+    ``server.observe(..., valid=..., count=...)``; its result is blocked
+    on for honest wall-clock.  QPS counts *requests* (not batches), so
+    numbers are comparable across ``serve_batch`` values.  Steady-state
+    follows the ``run_loop`` convention at micro-batch granularity:
+    second half of the batch stream, re-tier-affected batches excluded.
+    """
+    first = np.asarray(make_request(0), np.int32).reshape(-1)
+    batcher = MicroBatcher(serve_batch, first.shape[0])
+    lat, counts, retiered = [], [], []
+
+    def run_batch(mb: MicroBatch) -> None:
+        n_retiers = server.stats.retiers
+        t0 = time.perf_counter()
+        out = serve_fn(mb)
+        jax.block_until_ready(out)
+        lat.append(time.perf_counter() - t0)
+        counts.append(mb.count)
+        retiered.append(server.stats.retiers > n_retiers)
+
+    pending = batcher.add(first)
+    if pending is not None:
+        run_batch(pending)
+    for r in range(1, requests):
+        pending = batcher.add(make_request(r))
+        if pending is not None:
+            run_batch(pending)
+    tail = batcher.flush()
+    if tail is not None:
+        run_batch(tail)
+
+    lat_arr = np.asarray(lat)
+    cnt_arr = np.asarray(counts, np.float64)
+    warm = slice(1, None) if len(lat) > 1 else slice(None)
+    half = len(lat) // 2
+    steady = [i for i in range(half, len(lat))
+              if not (i == 0 or retiered[i] or retiered[i - 1])]
+    if not steady:
+        steady = list(range(half, len(lat)))
+    return LoopResult(
+        lat_s=tuple(lat),
+        qps=float(cnt_arr[warm].sum() / lat_arr[warm].sum()),
+        steady_qps=float(cnt_arr[steady].sum() / lat_arr[steady].sum()),
+        p50_us=float(np.percentile(lat_arr[warm] * 1e6, 50)),
+        p99_us=float(np.percentile(lat_arr[warm] * 1e6, 99)),
+        stats=server.stats.as_dict())
 
 
 def run_loop(server: OnlineServer,
@@ -132,7 +247,7 @@ def serve_forward_loop(server: OnlineServer, model, spec, params, *,
     def fwd(packed, cache, net, b):
         gidx = E.globalize(b["indices"], spec)
         emb, hits = cached_lookup(packed, cache, gidx, lfn)
-        return model.head(net, emb, b), hits
+        return model.head(net, emb, b), hits, gidx
 
     counter = {"r": 0}
 
@@ -145,9 +260,9 @@ def serve_forward_loop(server: OnlineServer, model, spec, params, *,
             rr = np.random.default_rng(10_000 + r)
             b["dense"] = jnp.asarray(rr.standard_normal(
                 (idx.shape[0], num_dense)).astype(np.float32))
-        out, hits = fwd(server.packed, server.cache, params, b)
+        out, hits, gidx = fwd(server.packed, server.cache, params, b)
         out.block_until_ready()
-        server.observe(E.globalize(b["indices"], spec), int(hits))
+        server.observe(gidx, int(hits))
         return out
 
     cards = np.asarray(spec.cardinalities, np.int64)
@@ -156,3 +271,59 @@ def serve_forward_loop(server: OnlineServer, model, spec, params, *,
         lambda r: drifting_zipf_batch(cards, batch, r, requests, a=a,
                                       drift=drift, seed=seed),
         requests, batch)
+
+
+def serve_forward_microbatched(server: OnlineServer, model, spec,
+                               params, *, serve_batch: int,
+                               requests: int, drift: float = 4.0,
+                               num_dense: int = 0, a: float = 1.2,
+                               seed: int = 0) -> LoopResult:
+    """Micro-batched online driver: one jitted forward per N requests.
+
+    Single-user drifting-zipf requests accumulate into fixed-shape
+    (serve_batch, F) batches (pad + mask); each batch runs one
+    cache-first forward through ``model.head`` and ONE vectorised
+    ``server.observe`` fold, with padded slots masked out of both the
+    hit count and the priority EMA.  The Eq. 7 EMA becomes one
+    count-weighted fold per micro-batch (N requests' access counts
+    enter a single decay step instead of N sequential steps); re-tiers
+    fire on the same request-counter boundaries as per-request serving
+    while ``serve_batch <= retier_every``, and boundaries spanned by
+    one batch coalesce into a single re-tier otherwise (see
+    ``OnlineServer.observe``).  The request stream depends only on the
+    seed, not on ``serve_batch``, so QPS across batch sizes compares
+    like-for-like.
+    """
+    lfn = server.lookup_fn()
+
+    @jax.jit
+    def fwd(packed, cache, net, b, valid):
+        gidx = E.globalize(b["indices"], spec)
+        emb, hits = cached_lookup(packed, cache, gidx, lfn,
+                                  valid=valid[:, None])
+        return model.head(net, emb, b), hits, gidx
+
+    counter = {"b": 0}
+
+    def serve_fn(mb: MicroBatch):
+        r = counter["b"]
+        counter["b"] += 1
+        b = {"indices": jnp.asarray(mb.indices),
+             "labels": jnp.zeros((mb.indices.shape[0],))}
+        if num_dense:
+            rr = np.random.default_rng(20_000 + r)
+            b["dense"] = jnp.asarray(rr.standard_normal(
+                (mb.indices.shape[0], num_dense)).astype(np.float32))
+        out, hits, gidx = fwd(server.packed, server.cache, params, b,
+                              jnp.asarray(mb.valid))
+        out.block_until_ready()
+        server.observe(gidx, int(hits), valid=mb.valid[:, None],
+                       count=mb.count)
+        return out
+
+    cards = np.asarray(spec.cardinalities, np.int64)
+    return run_microbatched_loop(
+        server, serve_fn,
+        lambda r: drifting_zipf_batch(cards, 1, r, requests, a=a,
+                                      drift=drift, seed=seed)[0],
+        requests, serve_batch)

@@ -29,11 +29,11 @@ import dataclasses
 from typing import NamedTuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.packed_store import (
     PackedStore,
-    lookup as packed_lookup,
     pack,
     packed_tiers,
     repack_delta,
@@ -97,9 +97,12 @@ class OnlineServer:
             self.packed = self.host_packed
 
     def lookup_fn(self):
-        """Miss-path gather matching the placement of ``self.packed``."""
+        """Miss-path gather matching the placement of ``self.packed``:
+        the fused tiled dequant-bag kernel where the backend compiles
+        it (TPU), its bit-identical jnp oracle elsewhere."""
         if self.mesh is None:
-            return packed_lookup
+            from repro.core.packed_store import lookup_fused
+            return lookup_fused
         from repro.dist.packed import sharded_lookup
         mesh, axis = self.mesh, self.axis
         return lambda pk, idx: sharded_lookup(pk, idx, mesh=mesh,
@@ -121,25 +124,51 @@ class OnlineServer:
         self.observe(indices, int(hits))
         return rows
 
-    def observe(self, indices: Array, hits: int | None = None) -> bool:
-        """Fold one served request batch into the online state.
+    def observe(self, indices: Array, hits: int | None = None, *,
+                valid: Array | None = None, count: int = 1) -> bool:
+        """Fold one served batch into the online state — vectorised.
 
         Updates the priority EMA with the served indices (Eq. 7, c- only
-        — labels don't exist at lookup time), bumps counters, and every
-        ``retier_every`` requests runs an incremental re-tier.  Returns
-        True when the packed store was repacked (payload shapes may have
-        changed — re-fetch ``server.packed`` / ``server.cache``).
+        — labels don't exist at lookup time), bumps counters, and when
+        the ``retier_every`` request boundary is crossed runs an
+        incremental re-tier.  Returns True when the packed store was
+        repacked (payload shapes may have changed — re-fetch
+        ``server.packed`` / ``server.cache``).
+
+        Micro-batched serving passes one *fused* batch per call:
+        ``count`` live requests folded in one vectorised update, with
+        ``valid`` (bool, broadcastable to ``indices``) masking the
+        padded slots out of both the priority fold and the lookup
+        counters.  The re-tier fires when the request counter crosses a
+        multiple of ``retier_every`` — exactly the per-request cadence
+        when ``count <= retier_every``.  A single call whose ``count``
+        spans SEVERAL boundaries coalesces them into ONE re-tier (the
+        store cannot re-tier mid-forward), so with
+        ``serve_batch > retier_every`` the adaptation rate is once per
+        micro-batch, not once per boundary.
         """
-        self.stats.requests += 1
-        self.stats.lookups += int(np.prod(np.shape(indices)))
+        before = self.stats.requests
+        self.stats.requests += count
+        if valid is None:
+            self.stats.lookups += int(np.prod(np.shape(indices)))
+            vmask = None
+        else:
+            # count host-side (valid is the batcher's numpy mask) — no
+            # device round-trip inside the timed serving path
+            vnp = np.broadcast_to(np.asarray(valid, bool),
+                                  np.shape(indices))
+            self.stats.lookups += int(vnp.sum())
+            vmask = jnp.asarray(vnp)
         if hits is not None:
             self.stats.hits += int(hits)
         pcfg = self.online.priority or self.cfg.priority
         self.store = self.store._replace(
-            priority=serve_update(self.store.priority, indices, pcfg))
-        if (self.online.retier_every
-                and self.stats.requests % self.online.retier_every == 0):
-            return self.retier()
+            priority=serve_update(self.store.priority, indices, pcfg,
+                                  valid=vmask))
+        if self.online.retier_every:
+            re = self.online.retier_every
+            if self.stats.requests // re > before // re:
+                return self.retier()
         return False
 
     # -- incremental re-tier -------------------------------------------

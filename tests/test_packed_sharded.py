@@ -89,6 +89,30 @@ def test_bag_lookup_all_bags_empty():
         np.asarray(out), np.zeros((5, packed.dim), np.float32))
 
 
+def test_sharded_fused_lookup_mesh1_bit_identical():
+    """Fused tiled-kernel sharded lookup on a 1-way mesh == the
+    single-device oracle, bit for bit; the rect bag path matches the
+    host fused bag exactly (no cross-shard partial sums at mesh=1)."""
+    from repro.dist.packed import (shard_packed, sharded_bag_lookup_rect,
+                                   sharded_lookup)
+    from repro.kernels.dequant_bag.ops import packed_bag_lookup
+
+    packed = _packed(seed=4)
+    mesh = jax.make_mesh((1,), ("model",))
+    sp = shard_packed(packed, mesh)
+    rng = np.random.default_rng(17)
+    idx = jnp.asarray(rng.integers(0, packed.vocab, (9, 5))
+                      .astype(np.int32))
+    out = sharded_lookup(sp, idx, mesh=mesh, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ps.lookup(packed, idx)))
+    w = jnp.asarray(rng.uniform(0, 1, (9, 5)).astype(np.float32))
+    bags = sharded_bag_lookup_rect(sp, idx, mesh=mesh, weights=w,
+                                   use_pallas=True)
+    host = packed_bag_lookup(packed, idx, weights=w, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(bags), np.asarray(host))
+
+
 def test_sharded_lookup_matches_oracle_4way():
     """shard_packed + sharded_{bag_,}lookup on a 4-device host mesh in a
     subprocess (device count must be set before jax init), vs the
@@ -131,6 +155,25 @@ for weights in (None, w):
     refb = ps.bag_lookup(packed, idx, seg, 9, weights=weights)
     np.testing.assert_allclose(np.asarray(outb), np.asarray(refb),
                                rtol=2e-5, atol=2e-5)
+
+# fused tiled-kernel paths: lookup is bit-identical (each row owned by
+# exactly one shard); rect bags match to psum partial-sum order
+from repro.dist.packed import sharded_bag_lookup_rect
+outf = sharded_lookup(sp, idx, mesh=mesh, use_pallas=True)
+np.testing.assert_array_equal(np.asarray(outf), np.asarray(ref))
+idx2 = idx.reshape(8, 8)
+w2 = w.reshape(8, 8)
+bagf = sharded_bag_lookup_rect(sp, idx2, mesh=mesh, weights=w2,
+                               use_pallas=True)
+bagj = sharded_bag_lookup_rect(sp, idx2, mesh=mesh, weights=w2,
+                               use_pallas=False)
+# k-sequential kernel accumulation vs XLA reduce order: allclose, and
+# bit-equal is still demanded for the K=1 lookup above
+np.testing.assert_allclose(np.asarray(bagf), np.asarray(bagj),
+                           rtol=1e-6, atol=1e-7)
+rows = np.asarray(ps.lookup(packed, idx2)) * np.asarray(w2)[..., None]
+np.testing.assert_allclose(np.asarray(bagf), rows.sum(axis=1),
+                           rtol=2e-5, atol=2e-5)
 print("SHARDED_PACKED_OK")
 """
     env = dict(os.environ)

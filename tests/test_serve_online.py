@@ -94,6 +94,36 @@ def test_repack_delta_tier_emptied_and_refilled():
             np.asarray(ps.unpack(pack(st, CFG))))
 
 
+def test_pack_and_repack_scale_dtypes_stay_fp32():
+    """Regression: scale columns must stay fp32 through pack AND the
+    repack_delta host round-trip (numpy promotes to float64 on contact
+    with python floats; a float64 scale column doubles serving scale
+    bytes and breaks delta-vs-full-pack bit-identity)."""
+    rng = np.random.default_rng(13)
+    st = _store(seed=11)
+    packed = pack(st, CFG)
+
+    def check(p, where):
+        assert p.scale8.dtype == jnp.float32, where
+        assert p.scale16.dtype == jnp.float32, where
+        assert p.payload8.dtype == jnp.int8, where
+        assert p.payload16.dtype == jnp.bfloat16, where
+        assert p.payload32.dtype == jnp.float32, where
+
+    check(packed, "pack")
+    for i in range(3):
+        st = _perturb(st, rng)
+        packed = ps.repack_delta(packed, st, CFG, np.arange(V))
+        check(packed, f"repack_delta[{i}]")
+    # _quantize_tier normalises even float64 host rows
+    from repro.core.packed_store import _quantize_tier
+    from repro.core.tiers import Tier
+    rows64 = rng.standard_normal((4, D))            # float64
+    for tier in (Tier.INT8, Tier.HALF):
+        _, s = _quantize_tier(rows64, tier, CFG)
+        assert s.dtype == np.float32, tier
+
+
 def test_hot_cache_bit_identical_and_hit_accounting():
     st = _store(seed=3)
     packed = pack(st, CFG)

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Validate a ``bench_qps/v1`` JSON file (BENCH_qps.json).
+
+    python tools/check_bench_schema.py [BENCH_qps.json]
+
+The schema is the stable contract between PRs: benchmarks emit it
+(``benchmarks/qps.py --online --serve-batch ...`` or
+``benchmarks/run.py --emit``), CI validates it, future PRs diff the
+sweep entries for regressions.  Documented in docs/serving.md.
+
+Exit 0 = valid; exit 1 prints every violation found.
+"""
+
+from __future__ import annotations
+
+import json
+import numbers
+import sys
+
+TOP_KEYS = {
+    "schema": str,
+    "benchmark": str,
+    "requests": numbers.Integral,
+    "cache_rows": numbers.Integral,
+    "retier_every": numbers.Integral,
+    "drift": numbers.Real,
+    "packed_fp32_ratio": numbers.Real,
+    "bytes_per_request_fp32": numbers.Integral,
+    "bytes_per_request_packed": numbers.Integral,
+    "sweep": list,
+}
+
+SWEEP_KEYS = {
+    "serve_batch": numbers.Integral,
+    "qps": numbers.Real,
+    "steady_qps": numbers.Real,
+    "p50_us": numbers.Real,
+    "p99_us": numbers.Real,
+    "requests": numbers.Integral,
+    "lookups": numbers.Integral,
+    "hits": numbers.Integral,
+    "cache_hit_rate": numbers.Real,
+    "retiers": numbers.Integral,
+    "rows_moved": numbers.Integral,
+    "bytes_per_request_fp32": numbers.Integral,
+    "bytes_per_request_packed": numbers.Integral,
+}
+
+
+def _check_keys(obj: dict, spec: dict, where: str, errors: list) -> None:
+    for key, typ in spec.items():
+        if key not in obj:
+            errors.append(f"{where}: missing key {key!r}")
+        elif isinstance(obj[key], bool) or not isinstance(obj[key], typ):
+            errors.append(f"{where}: {key!r} should be {typ.__name__}, "
+                          f"got {type(obj[key]).__name__}")
+
+
+def validate(rec: dict) -> list[str]:
+    errors: list[str] = []
+    _check_keys(rec, TOP_KEYS, "top-level", errors)
+    if rec.get("schema") != "bench_qps/v1":
+        errors.append(f"top-level: schema is {rec.get('schema')!r}, "
+                      "expected 'bench_qps/v1'")
+    sweep = rec.get("sweep")
+    if isinstance(sweep, list):
+        if not sweep:
+            errors.append("sweep: empty")
+        for i, entry in enumerate(sweep):
+            if not isinstance(entry, dict):
+                errors.append(f"sweep[{i}]: not an object")
+                continue
+            _check_keys(entry, SWEEP_KEYS, f"sweep[{i}]", errors)
+        batches = [e.get("serve_batch") for e in sweep
+                   if isinstance(e, dict)]
+        if len(set(batches)) != len(batches):
+            errors.append("sweep: duplicate serve_batch entries")
+        # the whole point of the record: byte traffic must not depend
+        # on the fusion factor
+        packed = {e.get("bytes_per_request_packed") for e in sweep
+                  if isinstance(e, dict)}
+        if len(packed) > 1:
+            errors.append("sweep: bytes_per_request_packed differs "
+                          f"across serve_batch values: {sorted(packed)}")
+    return errors
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_qps.json"
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable: {e}")
+        return 1
+    errors = validate(rec)
+    for err in errors:
+        print(f"{path}: {err}")
+    if not errors:
+        n = len(rec["sweep"])
+        print(f"{path}: valid bench_qps/v1 ({n} sweep entries)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
