@@ -1,0 +1,115 @@
+"""Hierarchical-store serving sweep: miss rate + QPS vs HBM budget.
+
+The SHARK setting that motivates `repro.store`: the packed table does
+NOT fit on the device.  This benchmark serves the SAME drifting-zipf
+single-user stream at a range of HBM budget fractions (hot set =
+`frac` of the fully-packed bytes; the warm level gets the same budget,
+the remainder spills to mmap'd cold shards) and records, per fraction,
+the steady-state QPS and where lookups were resolved: fp32 cache,
+device hot store, host RAM, or disk.
+
+Because placement is a pure priority-prefix (``budget.plan_placement``)
+a larger budget's hot set is a superset of a smaller one's, so
+``hier_miss_rate`` (warm+cold hits / lookups) falls monotonically as
+the fraction rises — ``tools/check_bench_schema.py`` enforces exactly
+that on the emitted ``bench_hier/v1`` record.
+
+    PYTHONPATH=src python -m benchmarks.hier [--fast] [--emit PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+from benchmarks.qps import _bench_store, write_bench_json
+from repro.core import pack
+
+BENCH_SCHEMA = "bench_hier/v1"
+
+SWEEP_KEYS = ("qps", "steady_qps", "p50_us", "p99_us", "lookups",
+              "cache_hit_rate", "hier_miss_rate", "warm_hits",
+              "cold_hits", "staged_rows", "migrations", "promoted",
+              "demoted", "hot_rows", "warm_rows", "cold_rows")
+
+
+def run_hier_sweep(fractions=(0.05, 0.15, 0.4, 1.0), requests=256,
+                   serve_batch=8, cache_rows=64, retier_every=64,
+                   drift=4.0, ratio=0.5, a=1.2, seed=0,
+                   store_dir=None) -> dict:
+    """One ``bench_hier/v1`` record over HBM budget fractions.
+
+    Every fraction serves the same stream from the same initial store;
+    ``cache_rows`` is kept small so the sweep actually exercises the
+    spill path (a huge fp32 cache would mask it).
+    """
+    from repro.serve import OnlineConfig, OnlineServer, serve_forward_hier
+    from repro.store import HierConfig
+
+    setup, spec, params, store, cfg = _bench_store(ratio)
+    fp32 = spec.total_rows * spec.dim * 4
+    full_bytes = pack(store, cfg).nbytes()
+    base_dir = store_dir or tempfile.mkdtemp(prefix="bench_hier_")
+
+    sweep = []
+    for frac in fractions:
+        budget = max(1, int(full_bytes * float(frac)))
+        server = OnlineServer(
+            store, cfg,
+            OnlineConfig(cache_rows=cache_rows,
+                         retier_every=retier_every),
+            hier=HierConfig(
+                hbm_budget_bytes=budget,
+                host_budget_bytes=budget,
+                store_dir=os.path.join(base_dir, f"frac_{frac}")))
+        result = serve_forward_hier(
+            server, setup.model, spec, params, serve_batch=serve_batch,
+            requests=requests, drift=drift, a=a,
+            num_dense=setup.ds.cfg.num_dense, seed=seed)
+        entry = {"hbm_budget_fraction": float(frac),
+                 "hbm_budget_bytes": budget}
+        d = result.as_dict()
+        entry.update({k: d[k] for k in SWEEP_KEYS})
+        sweep.append(entry)
+
+    return {"schema": BENCH_SCHEMA, "benchmark": "hier_budget_sweep",
+            "requests": requests, "serve_batch": serve_batch,
+            "cache_rows": cache_rows, "retier_every": retier_every,
+            "drift": drift, "full_store_bytes": int(full_bytes),
+            "packed_fp32_ratio": round(full_bytes / fp32, 4),
+            "sweep": sweep}
+
+
+def run(fast: bool = False) -> list[dict]:
+    """benchmarks.run entry: CSV rows from a reduced sweep."""
+    rec = run_hier_sweep(fractions=(0.1, 0.5) if fast else
+                         (0.05, 0.15, 0.4, 1.0),
+                         requests=64 if fast else 256)
+    return [{"metric": f"hier_frac{e['hbm_budget_fraction']}",
+             "value": e["steady_qps"],
+             "miss_rate": e["hier_miss_rate"],
+             "hot_rows": e["hot_rows"], "cold_rows": e["cold_rows"]}
+            for e in rec["sweep"]]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced budgets (CI)")
+    ap.add_argument("--fractions", default=None, metavar="F[,F...]")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--serve-batch", type=int, default=8)
+    ap.add_argument("--emit", default="BENCH_hier.json", metavar="PATH")
+    args = ap.parse_args()
+    fracs = tuple(float(x) for x in args.fractions.split(",")) \
+        if args.fractions else ((0.1, 0.5, 1.0) if args.fast
+                                else (0.05, 0.15, 0.4, 1.0))
+    rec = run_hier_sweep(
+        fractions=fracs,
+        requests=args.requests or (64 if args.fast else 256),
+        serve_batch=args.serve_batch)
+    write_bench_json(rec, args.emit)
+    print(json.dumps(rec))
+    print(f"wrote {args.emit}")

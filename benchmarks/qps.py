@@ -177,24 +177,15 @@ def _stream_bytes_per_request(packed, spec, requests: int, drift: float,
     must change wall-time, never traffic.  The online EMA fold is
     count-batched, so the *final* tier assignment may drift slightly
     with the fusion factor; pack-time bytes are the stable contract.
+    Thin wrapper over the shared ``serve.loop.stream_bytes_per_request``
+    (also used by the serve driver and ``benchmarks/qps_sharded.py``).
     """
     from repro.core.packed_store import packed_tiers
-    from repro.models import embedding as E
-    from repro.serve import drifting_zipf_batch
+    from repro.serve import stream_bytes_per_request
 
-    cards = np.asarray(spec.cardinalities, np.int64)
-    idx = np.stack([drifting_zipf_batch(cards, 1, r, requests, a=a,
-                                        drift=drift, seed=seed)[0]
-                    for r in range(requests)])              # (R, F)
-    gidx = np.asarray(E.globalize(jnp.asarray(idx), spec))
-    tiers = packed_tiers(packed)[gidx.reshape(-1)]
-    d = spec.dim
-    per_tier = np.array([d + 4, 2 * d + 4, 4 * d], np.int64)
-    packed_bytes = int((per_tier[tiers] + 4).sum())
-    return {
-        "bytes_per_request_fp32": int(gidx.size * d * 4 // requests),
-        "bytes_per_request_packed": packed_bytes // requests,
-    }
+    return stream_bytes_per_request(packed_tiers(packed), spec,
+                                    requests, drift=drift, a=a,
+                                    seed=seed)
 
 
 def run_online_sweep(serve_batches, requests=384, cache_rows=512,

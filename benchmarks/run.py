@@ -73,7 +73,8 @@ def main() -> None:
             finetune_steps=40 if fast else 150),
         "qps": lambda: qps.run(iters=5 if fast else 20),
         "qps_sharded": lambda: qps_sharded.run(
-            requests=4 if fast else 8, batch=128 if fast else 256),
+            requests=24 if fast else 48,
+            serve_batches=(8,) if fast else (1, 8)),
         "freq_error": lambda: freq_error.run(
             train_steps=100 if fast else 400),
         "roofline": roofline.run,

@@ -30,13 +30,36 @@ import jax
 import numpy as np
 
 
-def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
-    flat = {}
+def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    """Flatten to npz-storable arrays.
+
+    The .npy format has no bfloat16 (it loads back as raw ``|V2``
+    bytes with the dtype lost), so extension dtypes are stored as
+    their byte-identical uint16/uint8 view with the true dtype name
+    recorded in the returned ``dtypes`` map — which the manifest
+    carries and restore uses to re-view.  Python scalars flatten to
+    0-d arrays; ``_restore_one`` turns them back into scalars when the
+    template leaf is one.  This is what lets a ``PackedStore`` /
+    ``HierStore.state_tree()`` manifest (mixed numpy/jax/scalar
+    leaves) round-trip bit-identically.
+    """
+    flat, dtypes = {}, {}
     paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in paths_leaves:
         key = jax.tree_util.keystr(path)
-        flat[key] = np.asarray(leaf)
-    return flat
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":              # ml_dtypes (bfloat16, ...)
+            dtypes[key] = str(arr.dtype)
+            arr = np.ascontiguousarray(arr).view(
+                np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
+        flat[key] = arr
+    return flat, dtypes
+
+
+def _reviewed(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    import ml_dtypes
+    dt = getattr(ml_dtypes, dtype_name, None)
+    return arr.view(dt if dt is not None else np.dtype(dtype_name))
 
 
 class CheckpointManager:
@@ -61,11 +84,12 @@ class CheckpointManager:
                     self.dir, f".tmp_{step}_{uuid.uuid4().hex[:8]}")
                 final = os.path.join(self.dir, f"step_{step:010d}")
                 os.makedirs(tmp, exist_ok=True)
-                flat = _flatten(host_tree)
+                flat, dtypes = _flatten(host_tree)
                 np.savez(os.path.join(tmp, "host_0.npz"), **flat)
                 manifest = {
                     "step": step,
                     "keys": sorted(flat.keys()),
+                    "dtypes": dtypes,
                     "treedef": str(treedef),
                     "time": time.time(),
                     "extra": extra or {},
@@ -138,6 +162,7 @@ class CheckpointManager:
         path = os.path.join(self.dir, f"step_{step:010d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
+        dtypes = manifest.get("dtypes", {})
         data = np.load(os.path.join(path, "host_0.npz"))
         paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
@@ -146,10 +171,14 @@ class CheckpointManager:
             if key not in data:
                 raise KeyError(f"checkpoint missing {key}")
             arr = data[key]
+            if key in dtypes:                  # bf16 etc: re-view bytes
+                arr = _reviewed(arr, dtypes[key])
             if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
                 raise ValueError(
                     f"shape mismatch for {key}: ckpt {arr.shape} vs "
                     f"template {leaf.shape} — reshard before restore")
+            if not hasattr(leaf, "shape"):     # python scalar leaf
+                arr = type(leaf)(arr.item()) if isinstance(
+                    leaf, (int, float, bool)) else arr.item()
             leaves.append(arr)
-        del manifest
         return jax.tree_util.tree_unflatten(treedef, leaves)

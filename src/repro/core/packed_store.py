@@ -64,11 +64,24 @@ class PackedStore(NamedTuple):
     def dim(self) -> int:
         return self.payload32.shape[-1]
 
-    def nbytes(self) -> int:
-        total = 0
-        for leaf in self:
-            total += leaf.size * leaf.dtype.itemsize
-        return int(total)
+    def nbytes(self, by_tier: bool = False):
+        """Store bytes: total (default) or the per-tier breakdown.
+
+        ``by_tier=True`` returns ``{"int8", "half", "fp32",
+        "indirect"}`` — payload+scale bytes per precision tier plus the
+        shared indirection word — which is what the hierarchical
+        store's budget planner consumes (``repro.store.budget``).
+        Placeholder rows of empty tiers are counted: they are
+        physically allocated.
+        """
+        size = [leaf.size * leaf.dtype.itemsize for leaf in self]
+        per = {"int8": int(size[0] + size[1]),
+               "half": int(size[2] + size[3]),
+               "fp32": int(size[4]),
+               "indirect": int(size[5])}
+        if by_tier:
+            return per
+        return int(sum(per.values()))
 
 
 def pack(store: QATStore, cfg: FQuantConfig) -> PackedStore:
@@ -285,6 +298,110 @@ def repack_delta(packed: PackedStore, store: QATStore, cfg: FQuantConfig,
         scale16=jnp.asarray(scales[1], jnp.float32),
         payload32=jnp.asarray(payloads[2], jnp.float32),
         indirect=jnp.asarray(indirect))
+
+
+def live_counts(packed: PackedStore) -> np.ndarray:
+    """Per-tier live row counts (int64 (3,)), excluding the 1-row
+    placeholder an emptied tier keeps for shape sanity."""
+    ind = np.asarray(jax.device_get(packed.indirect))
+    return np.bincount(ind >> _TIER_SHIFT, minlength=3)[:3]
+
+
+def extract_rows(packed: PackedStore, rows) -> PackedStore:
+    """Host-side sub-store over ``rows`` (numpy leaves) — the row
+    *extraction* primitive of the hierarchical store.
+
+    Position ``i`` of the result is global row ``rows[i]``; quantized
+    payload bytes and scales are carried over untouched, so any lookup
+    on the sub-store is **bit-identical** to the same lookup on
+    ``packed`` at the corresponding global ids.  Empty tiers keep a
+    1-row zero-payload/unit-scale placeholder (never addressable).
+    """
+    host = jax.device_get(packed)
+    ind = np.asarray(host.indirect)
+    rows = np.asarray(rows, np.int64).reshape(-1)
+    code = ind[rows] if rows.size else np.zeros((0,), np.int32)
+    tier = code >> _TIER_SHIFT
+    loc = (code & _IDX_MASK).astype(np.int64)
+    dim = host.payload32.shape[-1]
+
+    payloads = [np.asarray(host.payload8), np.asarray(host.payload16),
+                np.asarray(host.payload32)]
+    scales = [_scale_f32(host.scale8), _scale_f32(host.scale16), None]
+    out_p, out_s = [], []
+    new_ind = np.zeros(rows.size, np.int32)
+    for t in range(3):
+        sel = np.nonzero(tier == t)[0]
+        if sel.size:
+            p = payloads[t][loc[sel]]
+            s = None if scales[t] is None else scales[t][loc[sel]]
+        else:
+            p = np.zeros((1, dim), payloads[t].dtype)
+            s = None if scales[t] is None else np.ones((1,), np.float32)
+        new_ind[sel] = ((t << _TIER_SHIFT)
+                        | np.arange(sel.size, dtype=np.int32))
+        out_p.append(p)
+        out_s.append(s)
+    return PackedStore(payload8=out_p[0], scale8=out_s[0],
+                       payload16=out_p[1], scale16=out_s[1],
+                       payload32=out_p[2], indirect=new_ind)
+
+
+def merge_stores(stores) -> PackedStore:
+    """N-way row concatenation (host numpy) — the row *insertion*
+    primitive behind ``concat_stores``.
+
+    Result position ``i`` is row ``i - Σ vocab(before)`` of the store
+    it falls in, in list order.  One ``np.concatenate`` per tier
+    (linear in total rows — a pairwise fold would re-copy earlier
+    stores quadratically); placeholder rows of emptied tiers are
+    dropped from the middle (later stores' local indices are rebased
+    past the running live counts), quantized bytes are preserved, so
+    lookups stay bit-identical to the sources.
+    """
+    if not stores:
+        raise ValueError("merge_stores needs at least one store")
+    hosts = [jax.device_get(s) for s in stores]
+    counts = np.stack([live_counts(h) for h in hosts])       # (S, 3)
+    offs = np.concatenate([np.zeros((1, 3), np.int64),
+                           np.cumsum(counts, axis=0)])       # (S+1, 3)
+    dim = np.asarray(hosts[0].payload32).shape[-1]
+
+    fields = (("payload8", "scale8"), ("payload16", "scale16"),
+              ("payload32", None))
+    out_p, out_s = [], []
+    for t, (pf, sf) in enumerate(fields):
+        live = [i for i in range(len(hosts)) if counts[i, t]]
+        if live:
+            p = np.concatenate(
+                [np.asarray(getattr(hosts[i], pf))[:int(counts[i, t])]
+                 for i in live], axis=0)
+            s = None if sf is None else np.concatenate(
+                [_scale_f32(getattr(hosts[i], sf))[:int(counts[i, t])]
+                 for i in live])
+        else:
+            p = np.zeros((1, dim),
+                         np.asarray(getattr(hosts[0], pf)).dtype)
+            s = None if sf is None else np.ones((1,), np.float32)
+        out_p.append(p)
+        out_s.append(s)
+
+    parts = []
+    for i, h in enumerate(hosts):
+        ind = np.asarray(h.indirect)
+        tier = ind >> _TIER_SHIFT
+        loc = (ind & _IDX_MASK).astype(np.int64) + offs[i, tier]
+        parts.append(((tier.astype(np.int64) << _TIER_SHIFT)
+                      | loc).astype(np.int32))
+    return PackedStore(payload8=out_p[0], scale8=out_s[0],
+                       payload16=out_p[1], scale16=out_s[1],
+                       payload32=out_p[2],
+                       indirect=np.concatenate(parts))
+
+
+def concat_stores(a: PackedStore, b: PackedStore) -> PackedStore:
+    """Append ``b``'s rows after ``a``'s: ``merge_stores([a, b])``."""
+    return merge_stores([a, b])
 
 
 def bag_lookup(packed: PackedStore, indices: Array, segment_ids: Array,

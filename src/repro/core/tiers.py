@@ -73,6 +73,19 @@ def tier_crossings(old_tiers, new_tiers):
     return changed, hist
 
 
+def row_bytes(tiers, dim: int):
+    """Per-row serving bytes (payload + scale + indirection word).
+
+    int64 numpy, same shape as ``tiers``.  This is the unit the
+    hierarchical store's budget planner packs against
+    (``repro.store.budget``) and sums to ``memory_bytes`` over a full
+    tier vector.
+    """
+    import numpy as np
+    per = np.array([dim + 8, 2 * dim + 8, 4 * dim + 4], np.int64)
+    return per[np.asarray(tiers).astype(np.int64)]
+
+
 def memory_bytes(tiers: Array, dim: int, include_overhead: bool = True) -> int:
     """Total embedding-table bytes under the tier-partitioned layout."""
     counts = tier_counts(tiers)

@@ -72,6 +72,28 @@ def shard_packed(packed: PackedStore, mesh,
                          for leaf, spec in zip(packed, specs)))
 
 
+def shard_nbytes(packed: PackedStore, n: int) -> int:
+    """Per-device bytes of ``packed`` row-sharded ``n`` ways.
+
+    Each payload/scale array pads up to a multiple of ``n`` and
+    contributes ``1/n`` of its padded bytes per device; the ``indirect``
+    word is replicated in full.  This is the quantity the hierarchical
+    store's budget planner charges against the per-device HBM budget
+    (``repro.store.budget.hot_shard_bytes`` computes the same number
+    from tier counts before the store exists — the two are
+    cross-checked by tests).
+    """
+    total = 0
+    for leaf, spec in zip(packed, packed_pspecs()):
+        rows = leaf.shape[0]
+        per_row = leaf.size // max(rows, 1) * leaf.dtype.itemsize
+        if spec == P():                       # replicated
+            total += rows * per_row
+        else:
+            total += -(-rows // n) * per_row  # padded shard share
+    return int(total)
+
+
 def unshard_packed(packed: PackedStore) -> PackedStore:
     """Host copy with the divisibility padding rows trimmed.
 

@@ -24,6 +24,15 @@ vectorised priority fold — ``--requests`` then counts single-user
 requests.  The serving gather is the fused tiled Pallas dequant-bag
 kernel on TPU (``packed_store.lookup_fused``), its jnp oracle on CPU.
 
+``--hbm-budget-mb B`` (with ``--online --serve-batch``) serves through
+the hierarchical store (``repro.store``): the device holds only the
+priority-hot rows under the per-device budget, the spill lives in host
+RAM (``--host-budget-mb``, 0 = unbounded) and mmap'd cold shards under
+``--store-dir``; warm/cold misses stage through one async fp32 buffer
+per micro-batch and re-tiering migrates rows between levels.
+``--verify-hier`` asserts bit-identity with a fully resident pack over
+the whole vocab after serving (the CI spill smoke).  docs/storage.md.
+
 The last stdout line is a machine-readable JSON record
 (qps / p50_us / p99_us / packed_mib / ... plus, online:
 cache_hit_rate / steady_qps / retiers / rows_moved) consumed by
@@ -66,9 +75,33 @@ def main() -> None:
                          "forward (--online; 0 = legacy request-at-a-"
                          "time batches of --batch users).  --requests "
                          "then counts single-user requests")
+    ap.add_argument("--hbm-budget-mb", type=float, default=0.0,
+                    help="serve through the hierarchical store "
+                         "(repro.store): device HBM holds only the "
+                         "priority-hot rows under this per-device "
+                         "budget, spill goes to host RAM / disk "
+                         "(--online --serve-batch; 0 = fully resident)")
+    ap.add_argument("--host-budget-mb", type=float, default=0.0,
+                    help="warm (host RAM) budget for the hierarchical "
+                         "store; 0 = unbounded (no cold level), "
+                         ">0 spills the remainder to mmap'd cold "
+                         "shards under --store-dir")
+    ap.add_argument("--store-dir", default=None,
+                    help="directory for the cold shard files + "
+                         "manifest (required when --host-budget-mb "
+                         "forces a cold level)")
+    ap.add_argument("--verify-hier", action="store_true",
+                    help="after serving, assert the hierarchical "
+                         "lookup is bit-identical to a fully "
+                         "device-resident pack of the live store over "
+                         "the whole vocab (CI spill smoke)")
     args = ap.parse_args()
     if args.serve_batch > 0 and not args.online:
         ap.error("--serve-batch requires --online")
+    if args.hbm_budget_mb > 0 and args.serve_batch <= 0:
+        ap.error("--hbm-budget-mb requires --online --serve-batch N")
+    if args.verify_hier and args.hbm_budget_mb <= 0:
+        ap.error("--verify-hier requires --hbm-budget-mb")
 
     if args.mesh > 1:
         flags = os.environ.get("XLA_FLAGS", "")
@@ -135,22 +168,45 @@ def main() -> None:
 
     if args.online:
         from repro.serve import (OnlineConfig, OnlineServer,
-                                 serve_forward_loop,
-                                 serve_forward_microbatched)
+                                 serve_forward_hier, serve_forward_loop,
+                                 serve_forward_microbatched,
+                                 stream_bytes_per_request)
 
+        hier_cfg = None
+        if args.hbm_budget_mb > 0:
+            from repro.store import HierConfig
+            host_budget = (int(args.host_budget_mb * 2 ** 20)
+                           if args.host_budget_mb > 0 else None)
+            hier_cfg = HierConfig(
+                hbm_budget_bytes=int(args.hbm_budget_mb * 2 ** 20),
+                host_budget_bytes=host_budget,
+                store_dir=args.store_dir)
         server = OnlineServer(
             store, cfg,
             OnlineConfig(cache_rows=args.cache_rows,
                          retier_every=args.retier_every),
-            mesh=mesh)
-        packed_mib = server.host_packed.nbytes() / 2 ** 20
-        print(f"packed {packed_mib:.2f} MiB "
-              f"({server.host_packed.nbytes() / fp32:.1%} of fp32), "
+            mesh=mesh, hier=hier_cfg)
+        if server.hier is not None:
+            packed_bytes = sum(server.hier.nbytes().values())
+            tiers_at_pack = server.hier.tiers.copy()
+            print(f"hier {packed_bytes / 2 ** 20:.2f} MiB total, "
+                  f"levels {server.hier.nbytes()} "
+                  f"rows {server.hier.counts()}")
+        else:
+            packed_bytes = server.host_packed.nbytes()
+            from repro.core.packed_store import packed_tiers
+            tiers_at_pack = packed_tiers(server.host_packed)
+        print(f"packed {packed_bytes / 2 ** 20:.2f} MiB "
+              f"({packed_bytes / fp32:.1%} of fp32), "
               f"cache {args.cache_rows} rows, "
               f"retier every {args.retier_every} requests")
         num_dense = arch.smoke_num_dense if arch.has_dense else 0
         if args.serve_batch > 0:
-            result = serve_forward_microbatched(
+            rec.update(stream_bytes_per_request(
+                tiers_at_pack, spec, args.requests, drift=args.drift))
+            fwd = (serve_forward_hier if server.hier is not None
+                   else serve_forward_microbatched)
+            result = fwd(
                 server, model, spec, params,
                 serve_batch=args.serve_batch, requests=args.requests,
                 drift=args.drift, num_dense=num_dense)
@@ -169,7 +225,6 @@ def main() -> None:
               f"retiers {server.stats.retiers} "
               f"rows moved {server.stats.rows_moved} (host CPU, "
               f"mesh={args.mesh})")
-        packed_bytes = server.host_packed.nbytes()
         rec.update(result.as_dict())
         rec.update({"cache_rows": args.cache_rows,
                     "retier_every": args.retier_every,
@@ -177,6 +232,30 @@ def main() -> None:
                     "serve_batch": args.serve_batch,
                     "packed_mib": round(packed_bytes / 2 ** 20, 3),
                     "packed_fp32_ratio": round(packed_bytes / fp32, 4)})
+        if server.hier is not None:
+            rec["hbm_budget_mb"] = args.hbm_budget_mb
+        if args.verify_hier:
+            from repro.core import packed_store as ps
+            from repro.store import hier_lookup
+
+            # bit-identity holds *at re-tier boundaries* (the
+            # repack_delta contract): the hier tiers date from the last
+            # migrate, while a fresh pack would use the live EMA.  Fold
+            # any post-migration priority movement in first, so the
+            # check is meaningful for any --requests/--retier-every
+            # combination.
+            server.retier()
+            probe = jnp.arange(server.hier.vocab)
+            ref = np.asarray(ps.lookup(pack(server.store, cfg), probe))
+            got = np.asarray(hier_lookup(server.hier, probe))
+            if not np.array_equal(ref, got):
+                raise SystemExit(
+                    "hier verify FAILED: hierarchical lookup is not "
+                    "bit-identical to the fully resident pack")
+            print(f"hier verify OK: {server.hier.vocab} rows "
+                  f"bit-identical across "
+                  f"{server.hier.counts()} after "
+                  f"{server.hier.stats.migrations} migrations")
         print(json.dumps(rec))
         return
 

@@ -12,16 +12,22 @@ Layers live, traffic-adaptive state over the offline artifacts of
   loop     request-loop timing harness + drifting-zipf workload synth
            + micro-batching (``MicroBatcher``: fixed-shape pad+mask
            fusion of single-user requests, one forward per N requests)
+           + the hierarchical-store forward (``serve_forward_hier``:
+           host staging of warm/cold misses + fused hot gather)
 
-Entry points: ``repro.launch.serve --online`` (driver) and
+Entry points: ``repro.launch.serve --online`` (driver;
+``--hbm-budget-mb`` switches to the hierarchical store) and
 ``benchmarks/qps.py --online`` (steady-state QPS + hit-rate JSON).
-See docs/serving.md for the knobs and docs/architecture.md for where
-this sits in the train -> pack -> serve dataflow.
+See docs/serving.md for the knobs, docs/storage.md for the three-level
+store, and docs/architecture.md for where this sits in the
+train -> pack -> serve dataflow.
 """
 
 from repro.serve.cache import (  # noqa: F401
     HotRowCache,
     build_cache,
+    cache_from_rows,
+    cache_select,
     cached_lookup,
     empty_cache,
 )
@@ -32,8 +38,10 @@ from repro.serve.loop import (  # noqa: F401
     drifting_zipf_batch,
     run_loop,
     run_microbatched_loop,
+    serve_forward_hier,
     serve_forward_loop,
     serve_forward_microbatched,
+    stream_bytes_per_request,
 )
 from repro.serve.online import (  # noqa: F401
     OnlineConfig,

@@ -50,23 +50,66 @@ def empty_cache(vocab: int, dim: int) -> HotRowCache:
                        slot_of=jnp.full((vocab,), -1, jnp.int32))
 
 
+def cache_from_rows(ids: Array, rows: Array, vocab: int) -> HotRowCache:
+    """Assemble a cache from already-dequantized rows.
+
+    The core constructor behind ``build_cache`` (flat store) and the
+    hierarchical store's cache build (rows gathered host-side across
+    levels): callers guarantee ``rows[i]`` is the exact dequantized
+    payload of global row ``ids[i]`` so the bit-identity contract
+    holds regardless of where the bytes came from.
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    k = ids.shape[0]
+    if k <= 0 or vocab <= 0:
+        dim = rows.shape[-1] if hasattr(rows, "shape") else 1
+        return empty_cache(vocab, dim)
+    slot_of = jnp.full((vocab,), -1, jnp.int32
+                       ).at[ids].set(jnp.arange(k, dtype=jnp.int32))
+    return HotRowCache(ids=ids, rows=jnp.asarray(rows, jnp.float32),
+                       slot_of=slot_of)
+
+
 def build_cache(packed: PackedStore, priority: Array, k: int,
                 lookup_fn: LookupFn | None = None) -> HotRowCache:
     """Populate with the current top-``k`` rows by priority score.
 
     Rebuilt after every incremental re-tier (the packed payloads the
     cache mirrors just changed) — see ``online.OnlineServer.retier``.
+    Under the hierarchical store this doubles as the *promotion-on-
+    pressure* path: warm/cold misses raise their rows' priority EMA, so
+    the next rebuild pulls the pressured rows into the fp32 cache (and
+    the migration pass pulls them into device HBM) — see
+    ``OnlineServer._rebuild_cache``.
     """
     k = int(min(k, packed.vocab))
     if k <= 0:
         return empty_cache(packed.vocab, packed.dim)
     _, ids = jax.lax.top_k(priority, k)
-    ids = ids.astype(jnp.int32)
-    rows = (lookup_fn or ps.lookup)(packed, ids)
-    slot_of = jnp.full((packed.vocab,), -1, jnp.int32
-                       ).at[ids].set(jnp.arange(k, dtype=jnp.int32))
-    return HotRowCache(ids=ids, rows=rows.astype(jnp.float32),
-                       slot_of=slot_of)
+    rows = (lookup_fn or ps.lookup)(packed, ids.astype(jnp.int32))
+    return cache_from_rows(ids, rows, packed.vocab)
+
+
+def cache_select(cache: HotRowCache, indices: Array, rows: Array,
+                 valid: Array | None = None) -> tuple[Array, Array]:
+    """Cache-first select over already-gathered fallback ``rows``:
+    positions resident in the cache read ``cache.rows``, the rest keep
+    ``rows``.  Returns (selected (..., D), scalar hit count, with
+    ``valid`` masking padding out of the count only).
+
+    The ONE implementation of the select+accounting step shared by the
+    hierarchical serving paths (``serve.loop.serve_forward_hier``'s
+    jitted forward and ``OnlineServer.lookup``'s eager hier branch);
+    ``cached_lookup`` below is its fused flat-store sibling, which also
+    redirects the miss gather.  Jit-safe: pure jnp ops.
+    """
+    slot = jnp.take(cache.slot_of, indices, axis=0)
+    hit = slot >= 0
+    cached = jnp.take(cache.rows,
+                      jnp.clip(slot, 0, cache.rows.shape[0] - 1), axis=0)
+    counted = hit if valid is None else hit & jnp.broadcast_to(
+        valid, hit.shape)
+    return jnp.where(hit[..., None], cached, rows), counted.sum()
 
 
 def cached_lookup(packed: PackedStore, cache: HotRowCache, indices: Array,

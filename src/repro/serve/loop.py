@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import embedding as E
-from repro.serve.cache import cached_lookup
+from repro.serve.cache import cache_select, cached_lookup
 from repro.serve.online import OnlineServer
 
 
@@ -327,3 +327,110 @@ def serve_forward_microbatched(server: OnlineServer, model, spec,
         lambda r: drifting_zipf_batch(cards, 1, r, requests, a=a,
                                       drift=drift, seed=seed)[0],
         requests, serve_batch)
+
+
+def serve_forward_hier(server: OnlineServer, model, spec, params, *,
+                       serve_batch: int, requests: int,
+                       drift: float = 4.0, num_dense: int = 0,
+                       a: float = 1.2, seed: int = 0) -> LoopResult:
+    """Micro-batched online driver over the hierarchical store.
+
+    Same stream and cadence contract as ``serve_forward_microbatched``,
+    with the forward split into the hier pipeline per batch:
+
+      1. host: resolve residency per index, dequantize warm/cold
+         misses into ONE fixed-shape staging buffer and ship it with a
+         single async ``jax.device_put`` (``HierStore.stage``);
+         positions the fp32 cache will serve are skipped entirely;
+      2. device (jit): cache-first select over [cache rows | staged
+         rows | fused hot-store gather] — bit-identical to a fully
+         resident ``cached_lookup``;
+      3. fold: one vectorised ``observe`` per batch.  Warm/cold misses
+         enter the same Eq. 7 EMA as every access, so pressured rows
+         climb the ranking and the next re-tier *migrates* them into
+         device HBM (``OnlineServer.retier`` -> ``HierStore.migrate``).
+
+    The returned ``LoopResult.stats`` carries the hier counters
+    (``warm_hits`` / ``cold_hits`` / ``staged_rows`` / ``migrations`` /
+    ``promoted`` / ``demoted`` and ``hier_miss_rate``) alongside the
+    cache stats.
+    """
+    from repro.store.hier import combine_rows
+
+    hier = server.hier
+    if hier is None:
+        raise ValueError("serve_forward_hier needs an OnlineServer "
+                         "built with hier=HierConfig(...)")
+    lfn = server.lookup_fn()
+    offsets = np.asarray(spec.offsets(), np.int64)
+
+    @jax.jit
+    def fwd(hot, cache, net, b, valid, hot_local, stage_slot, staging):
+        gidx = E.globalize(b["indices"], spec)
+        rows = combine_rows(hot, hot_local, stage_slot, staging, lfn)
+        emb, hits = cache_select(cache, gidx, rows, valid=valid[:, None])
+        return model.head(net, emb, b), hits, gidx
+
+    counter = {"b": 0}
+
+    def serve_fn(mb: MicroBatch):
+        r = counter["b"]
+        counter["b"] += 1
+        g = mb.indices.astype(np.int64) + offsets[None, :]
+        sb = hier.stage(g, skip=server.cache_mask[g], valid=mb.valid[:, None])
+        b = {"indices": jnp.asarray(mb.indices),
+             "labels": jnp.zeros((mb.indices.shape[0],))}
+        if num_dense:
+            rr = np.random.default_rng(20_000 + r)
+            b["dense"] = jnp.asarray(rr.standard_normal(
+                (mb.indices.shape[0], num_dense)).astype(np.float32))
+        out, hits, gidx = fwd(hier.hot_dev, server.cache, params, b,
+                              jnp.asarray(mb.valid), sb.hot_local,
+                              sb.stage_slot, sb.staging)
+        out.block_until_ready()
+        server.observe(gidx, int(hits), valid=mb.valid[:, None],
+                       count=mb.count)
+        return out
+
+    cards = np.asarray(spec.cardinalities, np.int64)
+    result = run_microbatched_loop(
+        server, serve_fn,
+        lambda r: drifting_zipf_batch(cards, 1, r, requests, a=a,
+                                      drift=drift, seed=seed)[0],
+        requests, serve_batch)
+    lookups = max(server.stats.lookups, 1)
+    hstats = hier.stats.as_dict()
+    hstats["hier_miss_rate"] = round(
+        (hier.stats.warm_hits + hier.stats.cold_hits) / lookups, 4)
+    hstats.update(hier.counts())
+    return result._replace(stats={**result.stats, **hstats})
+
+
+def stream_bytes_per_request(tiers, spec, requests: int,
+                             drift: float = 4.0, a: float = 1.2,
+                             seed: int = 0) -> dict:
+    """Mean HBM bytes per single-user request over the drifting-zipf
+    benchmark stream, against a fixed per-row tier assignment.
+
+    ``tiers`` is the (V,) Eq. 8 tier vector of the pack being measured
+    (``packed_store.packed_tiers`` or ``HierStore.tiers``).  Shared by
+    ``benchmarks/qps.py``, ``benchmarks/qps_sharded.py`` and the serve
+    driver so every ``bench_qps/v1`` producer computes the contract
+    identically: pack-time bytes are the stable cross-sweep quantity
+    (the online EMA may drift the *final* assignment).
+    """
+    from repro.core.tiers import row_bytes
+
+    cards = np.asarray(spec.cardinalities, np.int64)
+    idx = np.stack([drifting_zipf_batch(cards, 1, r, requests, a=a,
+                                        drift=drift, seed=seed)[0]
+                    for r in range(requests)])              # (R, F)
+    gidx = np.asarray(idx, np.int64) + np.asarray(
+        spec.offsets(), np.int64)[None, :]
+    packed_bytes = int(row_bytes(
+        np.asarray(tiers)[gidx.reshape(-1)], spec.dim).sum())
+    return {
+        "bytes_per_request_fp32": int(gidx.size * spec.dim * 4
+                                      // requests),
+        "bytes_per_request_packed": packed_bytes // requests,
+    }

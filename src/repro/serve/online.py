@@ -75,21 +75,38 @@ class OnlineServer:
 
     def __init__(self, store: QATStore, cfg: FQuantConfig,
                  online: OnlineConfig = OnlineConfig(), *, mesh=None,
-                 axis: str = "model"):
+                 axis: str = "model", hier=None):
+        """``hier`` (a ``repro.store.HierConfig``) switches the server
+        to the hierarchical store: the device holds only the
+        priority-hot rows under the HBM budget, spill lives in host RAM
+        / mmap'd cold shards, and ``retier`` migrates rows between
+        levels (``HierStore.migrate``) instead of delta-repacking a
+        fully resident store.  ``self.packed`` is then the *hot* device
+        store; drive the forward with ``serve.loop.serve_forward_hier``.
+        """
         self.store = store
         self.cfg = cfg
         self.online = online
         self.mesh = mesh
         self.axis = axis
         self.stats = ServeStats()
-        self.host_packed: PackedStore = pack(store, cfg)
+        self.hier = None
+        if hier is not None:
+            from repro.store import build_hier
+            self.hier = build_hier(store, cfg, hier, mesh=mesh,
+                                   axis=axis)
+            self.host_packed = None
+        else:
+            self.host_packed: PackedStore = pack(store, cfg)
         self._place()
         self._rebuild_cache()
 
     # -- placement -----------------------------------------------------
 
     def _place(self) -> None:
-        if self.mesh is not None:
+        if self.hier is not None:
+            self.packed = self.hier.hot_dev
+        elif self.mesh is not None:
             from repro.dist.packed import shard_packed
             self.packed = shard_packed(self.host_packed, self.mesh,
                                        self.axis)
@@ -99,7 +116,10 @@ class OnlineServer:
     def lookup_fn(self):
         """Miss-path gather matching the placement of ``self.packed``:
         the fused tiled dequant-bag kernel where the backend compiles
-        it (TPU), its bit-identical jnp oracle elsewhere."""
+        it (TPU), its bit-identical jnp oracle elsewhere.  In hier mode
+        this is the *hot-store* gather (``self.packed`` is the hot
+        device store); staged warm/cold rows merge in
+        ``store.hier.combine_rows``."""
         if self.mesh is None:
             from repro.core.packed_store import lookup_fused
             return lookup_fused
@@ -109,9 +129,39 @@ class OnlineServer:
                                               axis=axis)
 
     def _rebuild_cache(self) -> None:
-        # built from the host copy: K rows dequantized on one device
-        self.cache: HotRowCache = build_cache(
-            self.host_packed, self.store.priority, self.online.cache_rows)
+        if self.hier is not None:
+            # rows gathered host-side across levels (bit-identical to
+            # the device path) — warm/cold pressure rows enter here as
+            # soon as their EMA ranks them, one re-tier cadence before
+            # migration makes them device-resident
+            from repro.serve.cache import cache_from_rows
+            k = int(min(self.online.cache_rows, self.hier.vocab))
+            if k <= 0:
+                from repro.serve.cache import empty_cache
+                self.cache = empty_cache(self.hier.vocab, self.hier.dim)
+            else:
+                _, ids = jax.lax.top_k(self.store.priority, k)
+                ids = np.asarray(ids)
+                self.cache = cache_from_rows(
+                    jnp.asarray(ids, jnp.int32),
+                    jnp.asarray(self.hier.gather_fp32_host(ids)),
+                    self.hier.vocab)
+        else:
+            # built from the host copy: K rows dequantized on one device
+            self.cache: HotRowCache = build_cache(
+                self.host_packed, self.store.priority,
+                self.online.cache_rows)
+        # host-side membership mask: lets the hier staging path skip
+        # rows the fp32 cache will serve anyway (no double traffic);
+        # only the hier paths read it, so flat serving skips the
+        # O(vocab) rebuild
+        if self.hier is not None:
+            self.cache_mask = np.zeros(self.hier.vocab, bool)
+            ids = np.asarray(self.cache.ids)
+            if ids.size:
+                self.cache_mask[ids] = True
+        else:
+            self.cache_mask = None
 
     # -- request path --------------------------------------------------
 
@@ -119,6 +169,22 @@ class OnlineServer:
         """Eager cache-first gather + traffic fold.  int (...,) -> fp32
         (..., D), bit-identical to ``packed_store.lookup`` on a fresh
         full pack of the current store."""
+        if self.hier is not None:
+            # the eager form of serve.loop.serve_forward_hier's inner
+            # pipeline: cache hits are skipped from staging (they are
+            # neither staged nor counted as warm/cold hits — every
+            # lookup resolves from exactly one place)
+            from repro.serve.cache import cache_select
+            from repro.store.hier import combine_rows
+            g = np.asarray(indices, np.int64)
+            sb = self.hier.stage(g, skip=self.cache_mask[g])
+            rows = combine_rows(self.hier.hot_dev, sb.hot_local,
+                                sb.stage_slot, sb.staging,
+                                self.lookup_fn())
+            rows, hits = cache_select(self.cache, jnp.asarray(indices),
+                                      rows)
+            self.observe(indices, int(hits))
+            return rows
         rows, hits = cached_lookup(self.packed, self.cache, indices,
                                    self.lookup_fn())
         self.observe(indices, int(hits))
@@ -178,8 +244,18 @@ class OnlineServer:
 
         Equivalent to (but much cheaper than) ``pack(self.store,
         self.cfg)`` followed by re-placement.  Returns True if any row
-        migrated.
+        migrated.  In hier mode this is the *migration* step instead:
+        ``HierStore.migrate`` re-tiers crossed rows AND moves rows
+        between HBM / host RAM / disk by their live priority rank.
         """
+        if self.hier is not None:
+            moved = self.hier.migrate(self.store, self.cfg)
+            self.stats.retiers += 1
+            self.stats.rows_moved += moved["crossed"]
+            self._place()
+            self._rebuild_cache()
+            return bool(moved["promoted"] or moved["demoted"]
+                        or moved["crossed"])
         old = packed_tiers(self.host_packed)
         new = np.asarray(current_tiers(self.store, self.cfg))
         changed, _ = tier_crossings(old, new)

@@ -1,0 +1,39 @@
+"""repro.store — hierarchical embedding store (HBM / host RAM / disk).
+
+Places the tier-partitioned ``PackedStore`` rows across three levels
+under byte budgets, behind one lookup API that is bit-identical to a
+fully device-resident store:
+
+  budget    priority-driven placement planner (per-shard HBM budgets)
+  manifest  mmap'd cold shards + ``hier_store/v1`` manifest + the
+            host-side dequant mirror (``np_lookup``)
+  hier      ``HierStore``: build / stage / combine / migrate
+
+Entry points: ``repro.launch.serve --online --hbm-budget-mb N
+--store-dir D`` (driver) and ``benchmarks/hier.py`` (budget-fraction
+sweep).  See docs/storage.md.
+"""
+
+from repro.store.budget import (  # noqa: F401
+    COLD,
+    HOT,
+    WARM,
+    BudgetPlan,
+    hot_shard_bytes,
+    plan_placement,
+)
+from repro.store.hier import (  # noqa: F401
+    HierConfig,
+    HierStats,
+    HierStore,
+    StagedBatch,
+    build_hier,
+    combine_rows,
+    hier_bag_lookup,
+    hier_lookup,
+)
+from repro.store.manifest import (  # noqa: F401
+    ColdShards,
+    np_lookup,
+    write_cold_shards,
+)

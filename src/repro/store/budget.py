@@ -1,0 +1,122 @@
+"""Byte-budget placement planner for the hierarchical store.
+
+Given the live priority vector (Eq. 7) and the per-row precision tiers
+(Eq. 8), decide which rows live where:
+
+    HOT   device HBM, under ``hbm_budget_bytes`` (per shard when the
+          hot store is row-sharded over a mesh)
+    WARM  host RAM, under ``host_budget_bytes`` (None = unbounded:
+          everything that spills from HBM stays in RAM, cold is empty)
+    COLD  mmap'd disk shards (everything else)
+
+Placement is a pure function of (priority, tiers, budgets): rows are
+ranked by priority (ties broken by row id, so the plan is
+deterministic) and greedily packed into HOT then WARM by their
+serving-byte cost ``tiers.row_bytes`` — the same accounting as
+``PackedStore.nbytes(by_tier=True)`` modulo placeholder rows.  Because
+ranking is a pure prefix, a larger HBM budget always holds a superset
+of a smaller one's hot rows, which is what makes miss rate monotone in
+the budget fraction (``benchmarks/hier.py`` sweeps exactly that).
+
+Sharded accounting: when the hot store will be row-sharded ``n`` ways,
+each tier's row count pads up to a multiple of ``n``
+(``dist.packed.shard_packed``) and every device replicates the hot
+store's 4-byte indirection words, so the planner charges
+``hot_shard_bytes`` — the per-device cost — against the (per-device)
+HBM budget.  ``dist.packed.shard_nbytes`` measures the same quantity on
+a built store; the two are cross-checked by tests.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.tiers import row_bytes
+
+HOT, WARM, COLD = 0, 1, 2
+LEVEL_NAMES = ("hot", "warm", "cold")
+
+
+class BudgetPlan(NamedTuple):
+    level: np.ndarray     # int8 (V,) in {HOT, WARM, COLD}
+    hot_ids: np.ndarray   # int64, ascending — row order inside each level
+    warm_ids: np.ndarray
+    cold_ids: np.ndarray
+    hot_bytes: int        # per-shard device bytes of the hot set
+    warm_bytes: int
+    cold_bytes: int
+
+
+def hot_shard_bytes(tiers, dim: int, hot_n: int, n_shards: int = 1,
+                    order=None) -> int:
+    """Per-device bytes of a hot store holding the first ``hot_n`` rows
+    of ``order`` (default: rows ``0..hot_n``), row-sharded ``n_shards``
+    ways: padded per-tier payload+scale share plus the replicated
+    indirection words.  Empty tiers charge one placeholder row per
+    shard — ``extract_rows`` physically allocates it (and
+    ``shard_packed`` pads it out to one row per device), so the planner
+    must account for it or the built store would exceed the budget."""
+    t = np.asarray(tiers).astype(np.int64)
+    sel = t[np.asarray(order)[:hot_n]] if order is not None else t[:hot_n]
+    counts = np.bincount(sel, minlength=3)[:3]
+    per_shard = np.maximum(-(-counts // n_shards), 1)  # ceil + placeholder
+    payload = int(per_shard[0]) * (dim + 4) + \
+        int(per_shard[1]) * (2 * dim + 4) + int(per_shard[2]) * 4 * dim
+    return payload + hot_n * 4                  # indirect replicated
+
+
+def plan_placement(priority, tiers, dim: int, hbm_budget_bytes: int,
+                   host_budget_bytes: int | None = None,
+                   n_shards: int = 1) -> BudgetPlan:
+    """Rank rows by priority and pack greedily into the level budgets.
+
+    At least one row is always hot (the device store cannot be empty).
+    The warm level may come out empty when ``host_budget_bytes`` cannot
+    fit even the cheapest spilled row — all spill then goes cold.
+    ``hbm_budget_bytes`` is per device; ``host_budget_bytes=None``
+    disables the cold level entirely.
+    """
+    pri = np.asarray(priority, np.float64).reshape(-1)
+    t = np.asarray(tiers).astype(np.int64).reshape(-1)
+    v = pri.shape[0]
+    order = np.argsort(-pri, kind="stable")     # ties -> ascending id
+
+    # largest prefix whose PER-DEVICE cost fits: hot_shard_bytes is
+    # monotone in hot_n (payload shares divide by n, the replicated
+    # indirect does not), so binary-search it directly — a naive
+    # unsharded-bytes prefix would fill only ~1/n of each device's
+    # budget under an n-way mesh
+    lo, hi = 1, v
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if hot_shard_bytes(t, dim, mid, n_shards,
+                           order) <= hbm_budget_bytes:
+            lo = mid
+        else:
+            hi = mid - 1
+    hot_n = lo
+
+    spill = order[hot_n:]
+    if host_budget_bytes is None:
+        warm_n = spill.size
+    else:
+        scs = np.cumsum(row_bytes(t[spill], dim)) if spill.size else \
+            np.zeros((0,), np.int64)
+        warm_n = int(np.searchsorted(scs, host_budget_bytes,
+                                     side="right"))
+
+    level = np.full(v, COLD, np.int8)
+    level[order[:hot_n]] = HOT
+    level[spill[:warm_n]] = WARM
+
+    hot_ids = np.sort(order[:hot_n])
+    warm_ids = np.sort(spill[:warm_n])
+    cold_ids = np.sort(spill[warm_n:])
+    return BudgetPlan(
+        level=level, hot_ids=hot_ids, warm_ids=warm_ids,
+        cold_ids=cold_ids,
+        hot_bytes=hot_shard_bytes(t, dim, hot_n, n_shards, order),
+        warm_bytes=int(row_bytes(t[warm_ids], dim).sum()),
+        cold_bytes=int(row_bytes(t[cold_ids], dim).sum()))

@@ -1,0 +1,248 @@
+"""Cold level: mmap'd tier-partitioned shard files + ``hier_store/v1``
+manifest, and the host-side dequant mirror shared by every spill level.
+
+Each shard is a serialized ``PackedStore`` over a contiguous slice of
+the cold rows (cold-local order): six raw ``.npy`` files per shard
+directory, mmap'd back with ``np.load(..., mmap_mode="r")`` so a cold
+gather touches only the pages of the rows it reads.  bf16 payloads are
+stored as their raw uint16 bytes (numpy's .npy format has no bfloat16)
+with the true dtype recorded in the manifest and re-viewed on open —
+bit-exact by construction.
+
+The manifest (written LAST, same atomicity barrier as
+``repro.ckpt``) pins the format::
+
+    {"schema": "hier_store/v1", "dim": D, "rows": N,
+     "rows_per_shard": R, "payload16_dtype": "bfloat16",
+     "tier_counts": [n8, n16, n32], "nbytes": {...},
+     "shards": [{"dir": "shard_00000", "rows": R}, ...]}
+
+plus ``row_ids.npy`` (the global id of every cold-local row, ascending).
+
+``np_lookup`` is the host-side mirror of ``packed_store.lookup``:
+int8/bf16 -> fp32 widening and a single fp32 multiply per element are
+correctly rounded in both numpy and XLA, so staged rows are
+**bit-identical** to what the device gather would have produced — the
+property the whole hierarchy's oracle tests lean on.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import uuid
+
+import numpy as np
+
+from repro.core.packed_store import (
+    _IDX_MASK,
+    _TIER_SHIFT,
+    PackedStore,
+    extract_rows,
+    live_counts,
+    merge_stores,
+)
+
+SCHEMA = "hier_store/v1"
+MANIFEST = "manifest.json"
+_FIELDS = ("payload8", "scale8", "payload16", "scale16", "payload32",
+           "indirect")
+
+
+def np_lookup(packed: PackedStore, local_ids) -> np.ndarray:
+    """Host dequantizing gather, bit-identical to
+    ``packed_store.lookup`` on the same (numpy- or mmap-leaved) store.
+    int (N,) -> fp32 (N, D)."""
+    ind = np.asarray(packed.indirect)
+    ids = np.asarray(local_ids, np.int64).reshape(-1)
+    code = ind[ids] if ids.size else np.zeros((0,), np.int32)
+    tier = code >> _TIER_SHIFT
+    loc = (code & _IDX_MASK).astype(np.int64)
+    dim = np.asarray(packed.payload32).shape[-1]
+    out = np.empty((ids.size, dim), np.float32)
+
+    m = tier == 0
+    if m.any():
+        out[m] = (np.asarray(packed.payload8)[loc[m]].astype(np.float32)
+                  * np.asarray(packed.scale8, np.float32)[loc[m], None])
+    m = tier == 1
+    if m.any():
+        out[m] = (np.asarray(packed.payload16[loc[m]]).astype(np.float32)
+                  * np.asarray(packed.scale16, np.float32)[loc[m], None])
+    m = tier == 2
+    if m.any():
+        out[m] = np.asarray(packed.payload32)[loc[m]].astype(np.float32)
+    return out
+
+
+def _save_leaf(path: str, arr: np.ndarray) -> str | None:
+    """Write one payload array as raw .npy; non-native dtypes (bf16) go
+    to disk as their byte-identical uint16 view.  Returns the true
+    dtype name when a view was needed."""
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype.kind == "V":                   # ml_dtypes (bfloat16)
+        np.save(path, arr.view(np.uint16))
+        return str(arr.dtype)
+    np.save(path, arr)
+    return None
+
+
+def write_cold_shards(store_dir: str, cold: PackedStore,
+                      row_ids, rows_per_shard: int = 4096) -> dict:
+    """Serialize ``cold`` (host PackedStore over the cold rows, position
+    i = global row ``row_ids[i]``) into ``store_dir``.  Atomic: shards
+    land in a tmp dir, the manifest is written last, then one rename
+    publishes.  Returns the manifest dict."""
+    n = int(np.asarray(cold.indirect).shape[0])
+    rows_per_shard = max(1, int(rows_per_shard))
+    tmp = os.path.join(
+        os.path.dirname(os.path.abspath(store_dir)) or ".",
+        f".tmp_hier_{uuid.uuid4().hex[:8]}")
+    os.makedirs(tmp, exist_ok=True)
+
+    shards, p16_dtype = [], None
+    for k in range(-(-n // rows_per_shard) if n else 0):
+        ids = np.arange(k * rows_per_shard,
+                        min((k + 1) * rows_per_shard, n))
+        sub = extract_rows(cold, ids)
+        name = f"shard_{k:05d}"
+        sdir = os.path.join(tmp, name)
+        os.makedirs(sdir)
+        for f in _FIELDS:
+            viewed = _save_leaf(os.path.join(sdir, f + ".npy"),
+                                np.asarray(getattr(sub, f)))
+            if f == "payload16" and viewed:
+                p16_dtype = viewed
+        shards.append({"dir": name, "rows": int(ids.size)})
+
+    np.save(os.path.join(tmp, "row_ids.npy"),
+            np.asarray(row_ids, np.int64))
+    manifest = {
+        "schema": SCHEMA,
+        "dim": int(np.asarray(cold.payload32).shape[-1]),
+        "rows": n,
+        "rows_per_shard": rows_per_shard,
+        "payload16_dtype": p16_dtype
+        or str(np.asarray(cold.payload16).dtype),
+        "tier_counts": [int(c) for c in live_counts(cold)],
+        "nbytes": cold.nbytes(by_tier=True),
+        "shards": shards,
+    }
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # publish: move the previous generation ASIDE, rename the new one
+    # in, then delete the old (open mmaps into the old files stay valid
+    # until their fds close).  A crash between the two renames leaves
+    # store_dir absent with the previous generation intact under
+    # .old_* — ColdShards.__init__ recovers it.
+    old = None
+    if os.path.exists(store_dir):
+        old = f"{store_dir}.old_{uuid.uuid4().hex[:8]}"
+        os.rename(store_dir, old)
+    os.rename(tmp, store_dir)
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
+    return manifest
+
+
+class ColdShards:
+    """Open cold level: manifest + one mmap'd PackedStore per shard.
+
+    Rows are addressed by cold-local id; gathers group by shard so each
+    shard's mmap is fancy-indexed once (the OS pages in only the rows
+    touched).  The backing files are immutable between migrations —
+    a migration that changes the cold set rewrites the directory
+    (``write_cold_shards`` is atomic), which at production scale would
+    be an append-delta instead (see docs/storage.md).
+    """
+
+    def __init__(self, store_dir: str):
+        self.dir = store_dir
+        if not os.path.exists(os.path.join(store_dir, MANIFEST)):
+            self._recover(store_dir)
+        with open(os.path.join(store_dir, MANIFEST)) as f:
+            self.manifest = json.load(f)
+        if self.manifest.get("schema") != SCHEMA:
+            raise ValueError(
+                f"{store_dir}: schema "
+                f"{self.manifest.get('schema')!r} != {SCHEMA!r}")
+        self.rows = int(self.manifest["rows"])
+        self.rows_per_shard = int(self.manifest["rows_per_shard"])
+        self.row_ids = np.load(os.path.join(store_dir, "row_ids.npy"))
+        # resolve the RECORDED dtype (raises on an unknown name rather
+        # than silently decoding as bf16); kind "V" payloads were saved
+        # as their uint16 byte view
+        import ml_dtypes
+        name = self.manifest["payload16_dtype"]
+        p16 = getattr(ml_dtypes, name, None)
+        p16 = np.dtype(p16) if p16 is not None else np.dtype(name)
+        self._shards = []
+        for s in self.manifest["shards"]:
+            sdir = os.path.join(store_dir, s["dir"])
+            leaves = {f: np.load(os.path.join(sdir, f + ".npy"),
+                                 mmap_mode="r") for f in _FIELDS}
+            if p16.kind == "V":
+                leaves["payload16"] = leaves["payload16"].view(p16)
+            self._shards.append(PackedStore(**leaves))
+
+    @staticmethod
+    def _recover(store_dir: str) -> None:
+        """Crash recovery: a kill between ``write_cold_shards``' two
+        publish renames leaves ``store_dir`` absent and the previous
+        generation intact under ``<store_dir>.old_*`` — move the newest
+        complete one back into place."""
+        import glob
+        cands = [d for d in sorted(glob.glob(f"{store_dir}.old_*"),
+                                   key=os.path.getmtime)
+                 if os.path.exists(os.path.join(d, MANIFEST))]
+        if not cands or os.path.exists(store_dir):
+            return
+        os.rename(cands[-1], store_dir)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self._shards)
+
+    def nbytes(self) -> int:
+        return int(sum(self.manifest["nbytes"].values()))
+
+    def _by_shard(self, local_ids):
+        ids = np.asarray(local_ids, np.int64).reshape(-1)
+        shard = ids // self.rows_per_shard
+        loc = ids % self.rows_per_shard
+        return ids, shard, loc
+
+    def gather_fp32(self, local_ids) -> np.ndarray:
+        """Dequantized fp32 rows for cold-local ids (any order)."""
+        ids, shard, loc = self._by_shard(local_ids)
+        dim = int(self.manifest["dim"])
+        out = np.empty((ids.size, dim), np.float32)
+        for k in np.unique(shard):
+            m = shard == k
+            out[m] = np_lookup(self._shards[k], loc[m])
+        return out
+
+    def extract(self, local_ids) -> PackedStore:
+        """Quantized sub-store over cold-local ids, in the given order
+        (the promotion path: bytes move levels untouched)."""
+        ids, shard, loc = self._by_shard(local_ids)
+        parts, perm = [], np.empty(ids.size, np.int64)
+        base = 0
+        for k in np.unique(shard):
+            m = np.nonzero(shard == k)[0]
+            parts.append(extract_rows(self._shards[k], loc[m]))
+            perm[m] = base + np.arange(m.size)
+            base += m.size
+        if not parts:
+            dim = int(self.manifest["dim"])
+            return extract_rows(
+                PackedStore(
+                    payload8=np.zeros((1, dim), np.int8),
+                    scale8=np.ones((1,), np.float32),
+                    payload16=np.zeros((1, dim), np.float16),
+                    scale16=np.ones((1,), np.float32),
+                    payload32=np.zeros((1, dim), np.float32),
+                    indirect=np.zeros((0,), np.int32)),
+                np.zeros((0,), np.int64))
+        return extract_rows(merge_stores(parts), perm)

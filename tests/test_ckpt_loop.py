@@ -70,6 +70,70 @@ def test_shape_mismatch_rejected(tmp_path):
         mgr.restore({"a": jnp.ones((3, 3))})
 
 
+def _packed_fixture(seed=0):
+    from repro.core import FQuantConfig, pack
+    from repro.core import qat_store as qs
+    from repro.core.tiers import TierConfig
+
+    cfg = FQuantConfig(tiers=TierConfig(t8=5.0, t16=50.0),
+                       stochastic=False)
+    rng = np.random.default_rng(seed)
+    st = qs.init(jax.random.PRNGKey(seed), 96, 16, scale=0.05)
+    st = st._replace(priority=jnp.asarray(
+        (rng.pareto(1.2, 96) * 20).astype(np.float32)))
+    st = st._replace(table=qs.snap(
+        st.table, qs.current_tiers(st, cfg), cfg))
+    return st, cfg, pack(st, cfg)
+
+
+def _assert_bits_equal(tree_a, tree_b):
+    fa = jax.tree_util.tree_flatten_with_path(tree_a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(tree_b)[0]
+    assert len(fa) == len(fb)
+    for (pa, la), (_, lb) in zip(fa, fb):
+        if isinstance(la, (int, float, bool, str)):
+            assert la == lb and type(la) is type(lb), (pa, la, lb)
+        else:
+            a, b = np.asarray(la), np.asarray(lb)
+            assert a.dtype == b.dtype, (pa, a.dtype, b.dtype)
+            np.testing.assert_array_equal(
+                a.view(np.uint8).reshape(-1),
+                b.view(np.uint8).reshape(-1), err_msg=str(pa))
+
+
+def test_packed_store_roundtrips_bit_identical(tmp_path):
+    """A PackedStore (bf16 payloads — .npy has no bfloat16) survives
+    save -> restore with dtypes and bytes intact."""
+    _, _, packed = _packed_fixture()
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, packed)
+    restored, step = mgr.restore(packed)
+    assert step == 1
+    assert np.asarray(restored.payload16).dtype == \
+        np.asarray(packed.payload16).dtype
+    _assert_bits_equal(packed, restored)
+
+
+def test_hier_manifest_roundtrips_mixed_leaves(tmp_path):
+    """HierStore.state_tree(): mixed numpy / NamedTuple / python-scalar
+    / string leaves round-trip bit-identically (scalars come back as
+    scalars, not 0-d arrays)."""
+    from repro.store import HierConfig, build_hier
+
+    st, cfg, packed = _packed_fixture(1)
+    b = packed.nbytes() // 8
+    hier = build_hier(st, cfg, HierConfig(
+        hbm_budget_bytes=b, host_budget_bytes=b, rows_per_shard=16,
+        store_dir=str(tmp_path / "cold")))
+    tree = hier.state_tree()
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    mgr.save(7, tree)
+    restored, _ = mgr.restore(tree)
+    _assert_bits_equal(tree, restored)
+    assert isinstance(restored["vocab"], int)
+    assert restored["schema"] == "hier_store/v1"
+
+
 # ------------------------------------------------------------------ loop
 
 def _quadratic_problem(tmp_path, total=30, ckpt_every=10):

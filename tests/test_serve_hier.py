@@ -1,0 +1,180 @@
+"""Online serving over the hierarchical store: batch-for-batch
+bit-identity with a fully device-resident OnlineServer under drift,
+correct hit/miss accounting when lookups resolve from the warm/cold
+levels, and promotion of pressured rows into device HBM within one
+re-tier cadence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FQuantConfig
+from repro.core import qat_store as qs
+from repro.core.tiers import TierConfig
+from repro.serve import (
+    MicroBatcher,
+    OnlineConfig,
+    OnlineServer,
+    cached_lookup,
+    drifting_zipf_batch,
+)
+from repro.store import HOT, HierConfig
+from repro.store.hier import combine_rows
+
+V, D = 160, 24
+CFG = FQuantConfig(tiers=TierConfig(t8=5.0, t16=50.0), stochastic=False)
+
+
+def _store(seed=0):
+    rng = np.random.default_rng(seed)
+    st = qs.init(jax.random.PRNGKey(seed), V, D, scale=0.05)
+    pri = jnp.asarray((rng.pareto(1.2, V) * 20).astype(np.float32))
+    st = st._replace(priority=pri)
+    return st._replace(table=qs.snap(
+        st.table, qs.current_tiers(st, CFG), CFG))
+
+
+def _hier_cfg(tmp_path, st, frac=8):
+    from repro.core import pack
+    b = pack(st, CFG).nbytes() // frac
+    return HierConfig(hbm_budget_bytes=b, host_budget_bytes=b,
+                      rows_per_shard=16,
+                      store_dir=str(tmp_path / "cold"))
+
+
+def _hier_rows(srv, idx, valid):
+    """The serve_forward_hier inner math, minus the model head:
+    stage -> combine -> cache-first select.  Returns (rows, hits)."""
+    from repro.serve.cache import cache_select
+
+    g = np.asarray(idx, np.int64)
+    sb = srv.hier.stage(g, skip=srv.cache_mask[g],
+                        valid=valid[:, None])
+    rows = combine_rows(srv.hier.hot_dev, sb.hot_local, sb.stage_slot,
+                        sb.staging, srv.lookup_fn())
+    emb, hits = cache_select(srv.cache, jnp.asarray(idx), rows,
+                             valid=jnp.asarray(valid)[:, None])
+    return emb, int(hits)
+
+
+def test_hier_serving_matches_flat_serving_under_drift(tmp_path):
+    """Drive the SAME drifting-zipf micro-batch stream through a
+    hierarchical server and a fully resident one: served rows are
+    bit-identical every batch, priorities and re-tier cadence stay in
+    lockstep, and the hier miss accounting is internally consistent."""
+    st = _store(1)
+    online = OnlineConfig(cache_rows=24, retier_every=8)
+    flat = OnlineServer(st, CFG, online)
+    hsrv = OnlineServer(st, CFG, online, hier=_hier_cfg(tmp_path, st))
+    assert hsrv.hier.cold_ids.size > 0
+
+    batcher = MicroBatcher(4, 2)
+    mbs = []
+    for r in range(22):
+        mb = batcher.add(
+            drifting_zipf_batch((V, V), 1, r, 22, drift=2.0, seed=3)[0])
+        if mb is not None:
+            mbs.append(mb)
+    tail = batcher.flush()
+    if tail is not None:
+        mbs.append(tail)
+
+    for mb in mbs:
+        idx = jnp.asarray(mb.indices)
+        ref, fhits = cached_lookup(flat.packed, flat.cache, idx,
+                                   flat.lookup_fn(),
+                                   valid=jnp.asarray(mb.valid)[:, None])
+        got, hhits = _hier_rows(hsrv, mb.indices, mb.valid)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+        assert hhits == int(fhits)          # same cache, same hits
+        flat.observe(idx, int(fhits), valid=mb.valid[:, None],
+                     count=mb.count)
+        hsrv.observe(idx, hhits, valid=mb.valid[:, None],
+                     count=mb.count)
+
+    np.testing.assert_array_equal(np.asarray(flat.store.priority),
+                                  np.asarray(hsrv.store.priority))
+    assert flat.stats.retiers == hsrv.stats.retiers == 2
+    assert flat.stats.requests == hsrv.stats.requests == 22
+    assert flat.stats.lookups == hsrv.stats.lookups == 44
+    assert flat.stats.hits == hsrv.stats.hits
+    # hit accounting stays correct with warm/cold misses in the mix:
+    # every valid lookup resolved from exactly one place
+    hs = hsrv.hier.stats
+    spilled = hs.warm_hits + hs.cold_hits
+    assert 0 < spilled <= hsrv.stats.lookups - hsrv.stats.hits
+    device = hsrv.stats.lookups - hsrv.stats.hits - spilled
+    assert device >= 0
+    assert hs.migrations == hsrv.stats.retiers
+
+
+def test_pressured_rows_promoted_within_one_cadence(tmp_path):
+    """Rows served from the cold level climb the Eq. 7 EMA and become
+    device-resident at the next re-tier boundary."""
+    st = _store(2)
+    hsrv = OnlineServer(st, CFG,
+                        OnlineConfig(cache_rows=0, retier_every=4),
+                        hier=_hier_cfg(tmp_path, st))
+    hammered = hsrv.hier.cold_ids[:3].copy()
+    assert (hsrv.hier.level[hammered] != HOT).all()
+
+    idx = np.tile(hammered, 2)[:6].reshape(3, 2).astype(np.int64)
+    valid = np.ones(3, bool)
+    for _ in range(2):                      # 2 batches x count=2 -> 4 req
+        rows, hits = _hier_rows(hsrv, idx, valid)
+        jax.block_until_ready(rows)
+        hsrv.observe(jnp.asarray(idx), hits, valid=valid[:, None],
+                     count=2)
+    assert hsrv.stats.retiers == 1          # one cadence elapsed
+    assert (hsrv.hier.level[hammered] == HOT).all()
+    assert np.isin(hammered, hsrv.hier.hot_ids).all()
+    assert hsrv.hier.stats.promoted >= 3
+    # ... and they now resolve on-device: no new cold hits
+    before = hsrv.hier.stats.cold_hits
+    rows, _ = _hier_rows(hsrv, idx, valid)
+    jax.block_until_ready(rows)
+    assert hsrv.hier.stats.cold_hits == before
+
+
+def test_cache_skip_keeps_values_and_traffic_split(tmp_path):
+    """A warm/cold row resident in the fp32 cache is served from the
+    cache (no staging traffic), bit-identically."""
+    st = _store(3)
+    hsrv = OnlineServer(st, CFG,
+                        OnlineConfig(cache_rows=32, retier_every=0),
+                        hier=_hier_cfg(tmp_path, st))
+    cached_spill = np.asarray(hsrv.cache.ids)[
+        np.nonzero(hsrv.hier.level[np.asarray(hsrv.cache.ids)]
+                   != HOT)[0]]
+    assert cached_spill.size > 0            # cache reaches past HBM
+    idx = np.tile(cached_spill[:2], 2).reshape(2, 2)
+    valid = np.ones(2, bool)
+    before = hsrv.hier.stats.staged_rows
+    rows, hits = _hier_rows(hsrv, idx, valid)
+    assert hits == 4                        # every position a cache hit
+    assert hsrv.hier.stats.staged_rows == before   # nothing staged
+    np.testing.assert_array_equal(
+        np.asarray(rows),
+        hsrv.hier.gather_fp32_host(idx))
+
+
+def test_loop_result_carries_hier_stats(tmp_path):
+    """serve_forward_hier merges the hier counters into the record the
+    drivers/benchmarks serialize."""
+    from repro.serve.loop import LoopResult
+
+    st = _store(4)
+    hsrv = OnlineServer(st, CFG,
+                        OnlineConfig(cache_rows=8, retier_every=0),
+                        hier=_hier_cfg(tmp_path, st))
+    idx = np.stack([hsrv.hier.warm_ids[:2],
+                    hsrv.hier.cold_ids[:2]]).astype(np.int64)
+    rows, hits = _hier_rows(hsrv, idx, np.ones(2, bool))
+    hsrv.observe(jnp.asarray(idx), hits, count=2)
+    stats = {**hsrv.stats.as_dict(), **hsrv.hier.stats.as_dict()}
+    res = LoopResult(lat_s=(0.1,), qps=1.0, steady_qps=1.0,
+                     p50_us=1.0, p99_us=1.0, stats=stats)
+    d = res.as_dict()
+    for key in ("warm_hits", "cold_hits", "staged_rows", "promoted",
+                "demoted", "cache_hit_rate"):
+        assert key in d

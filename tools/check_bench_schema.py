@@ -1,12 +1,15 @@
 #!/usr/bin/env python
-"""Validate a ``bench_qps/v1`` JSON file (BENCH_qps.json).
+"""Validate a benchmark JSON file (``bench_qps/v1`` / ``bench_hier/v1``).
 
-    python tools/check_bench_schema.py [BENCH_qps.json]
+    python tools/check_bench_schema.py [BENCH_qps.json | BENCH_hier.json]
 
-The schema is the stable contract between PRs: benchmarks emit it
-(``benchmarks/qps.py --online --serve-batch ...`` or
-``benchmarks/run.py --emit``), CI validates it, future PRs diff the
-sweep entries for regressions.  Documented in docs/serving.md.
+The schemas are the stable contract between PRs: benchmarks emit them
+(``benchmarks/qps.py --online --serve-batch ...``,
+``benchmarks/qps_sharded.py``, ``benchmarks/run.py --emit``,
+``benchmarks/hier.py``), CI validates them, future PRs diff the sweep
+entries for regressions.  Documented in docs/serving.md and
+docs/storage.md.  The schema is picked from the record's ``"schema"``
+key.
 
 Exit 0 = valid; exit 1 prints every violation found.
 """
@@ -17,7 +20,7 @@ import json
 import numbers
 import sys
 
-TOP_KEYS = {
+QPS_TOP = {
     "schema": str,
     "benchmark": str,
     "requests": numbers.Integral,
@@ -30,7 +33,7 @@ TOP_KEYS = {
     "sweep": list,
 }
 
-SWEEP_KEYS = {
+QPS_SWEEP = {
     "serve_batch": numbers.Integral,
     "qps": numbers.Real,
     "steady_qps": numbers.Real,
@@ -46,6 +49,39 @@ SWEEP_KEYS = {
     "bytes_per_request_packed": numbers.Integral,
 }
 
+HIER_TOP = {
+    "schema": str,
+    "benchmark": str,
+    "requests": numbers.Integral,
+    "serve_batch": numbers.Integral,
+    "cache_rows": numbers.Integral,
+    "retier_every": numbers.Integral,
+    "drift": numbers.Real,
+    "packed_fp32_ratio": numbers.Real,
+    "full_store_bytes": numbers.Integral,
+    "sweep": list,
+}
+
+HIER_SWEEP = {
+    "hbm_budget_fraction": numbers.Real,
+    "hot_rows": numbers.Integral,
+    "warm_rows": numbers.Integral,
+    "cold_rows": numbers.Integral,
+    "qps": numbers.Real,
+    "steady_qps": numbers.Real,
+    "p50_us": numbers.Real,
+    "p99_us": numbers.Real,
+    "lookups": numbers.Integral,
+    "cache_hit_rate": numbers.Real,
+    "hier_miss_rate": numbers.Real,
+    "warm_hits": numbers.Integral,
+    "cold_hits": numbers.Integral,
+    "staged_rows": numbers.Integral,
+    "migrations": numbers.Integral,
+    "promoted": numbers.Integral,
+    "demoted": numbers.Integral,
+}
+
 
 def _check_keys(obj: dict, spec: dict, where: str, errors: list) -> None:
     for key, typ in spec.items():
@@ -56,13 +92,9 @@ def _check_keys(obj: dict, spec: dict, where: str, errors: list) -> None:
                           f"got {type(obj[key]).__name__}")
 
 
-def validate(rec: dict) -> list[str]:
-    errors: list[str] = []
-    _check_keys(rec, TOP_KEYS, "top-level", errors)
-    if rec.get("schema") != "bench_qps/v1":
-        errors.append(f"top-level: schema is {rec.get('schema')!r}, "
-                      "expected 'bench_qps/v1'")
+def _check_sweep(rec: dict, spec: dict, errors: list) -> list[dict]:
     sweep = rec.get("sweep")
+    entries = []
     if isinstance(sweep, list):
         if not sweep:
             errors.append("sweep: empty")
@@ -70,19 +102,64 @@ def validate(rec: dict) -> list[str]:
             if not isinstance(entry, dict):
                 errors.append(f"sweep[{i}]: not an object")
                 continue
-            _check_keys(entry, SWEEP_KEYS, f"sweep[{i}]", errors)
-        batches = [e.get("serve_batch") for e in sweep
-                   if isinstance(e, dict)]
-        if len(set(batches)) != len(batches):
-            errors.append("sweep: duplicate serve_batch entries")
-        # the whole point of the record: byte traffic must not depend
-        # on the fusion factor
-        packed = {e.get("bytes_per_request_packed") for e in sweep
-                  if isinstance(e, dict)}
-        if len(packed) > 1:
-            errors.append("sweep: bytes_per_request_packed differs "
-                          f"across serve_batch values: {sorted(packed)}")
+            _check_keys(entry, spec, f"sweep[{i}]", errors)
+            entries.append(entry)
+    return entries
+
+
+def _validate_qps(rec: dict) -> list[str]:
+    errors: list[str] = []
+    _check_keys(rec, QPS_TOP, "top-level", errors)
+    entries = _check_sweep(rec, QPS_SWEEP, errors)
+    batches = [e.get("serve_batch") for e in entries]
+    if len(set(batches)) != len(batches):
+        errors.append("sweep: duplicate serve_batch entries")
+    # the whole point of the record: byte traffic must not depend
+    # on the fusion factor
+    packed = {e.get("bytes_per_request_packed") for e in entries}
+    if len(packed) > 1:
+        errors.append("sweep: bytes_per_request_packed differs "
+                      f"across serve_batch values: {sorted(packed)}")
     return errors
+
+
+def _validate_hier(rec: dict) -> list[str]:
+    errors: list[str] = []
+    _check_keys(rec, HIER_TOP, "top-level", errors)
+    entries = _check_sweep(rec, HIER_SWEEP, errors)
+    fracs = [e.get("hbm_budget_fraction") for e in entries]
+    if len(set(fracs)) != len(fracs):
+        errors.append("sweep: duplicate hbm_budget_fraction entries")
+    # the whole point of the record: a bigger HBM budget holds a
+    # superset of a smaller one's hot rows (prefix placement), so the
+    # spill miss rate must fall (weakly) as the budget fraction rises
+    ok = [e for e in entries
+          if isinstance(e.get("hbm_budget_fraction"), numbers.Real)
+          and isinstance(e.get("hier_miss_rate"), numbers.Real)]
+    ok.sort(key=lambda e: e["hbm_budget_fraction"])
+    for lo, hi in zip(ok, ok[1:]):
+        if hi["hier_miss_rate"] > lo["hier_miss_rate"] + 1e-9:
+            errors.append(
+                "sweep: hier_miss_rate rises with the HBM budget "
+                f"fraction ({lo['hbm_budget_fraction']}: "
+                f"{lo['hier_miss_rate']} -> "
+                f"{hi['hbm_budget_fraction']}: {hi['hier_miss_rate']})")
+    return errors
+
+
+SCHEMAS = {
+    "bench_qps/v1": _validate_qps,
+    "bench_hier/v1": _validate_hier,
+}
+
+
+def validate(rec: dict) -> list[str]:
+    schema = rec.get("schema")
+    fn = SCHEMAS.get(schema)
+    if fn is None:
+        return [f"top-level: schema is {schema!r}, expected one of "
+                f"{sorted(SCHEMAS)}"]
+    return fn(rec)
 
 
 def main() -> int:
@@ -98,7 +175,7 @@ def main() -> int:
         print(f"{path}: {err}")
     if not errors:
         n = len(rec["sweep"])
-        print(f"{path}: valid bench_qps/v1 ({n} sweep entries)")
+        print(f"{path}: valid {rec['schema']} ({n} sweep entries)")
     return 1 if errors else 0
 
 
