@@ -14,7 +14,6 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import FQuantConfig, auc
 from repro.core import qat_store as qs

@@ -15,7 +15,6 @@ from benchmarks.common import BenchSetup, eval_auc, make_setup, train_fp32
 from repro.core import permutation, taylor
 from repro.core.baselines import gumbel as gumbel_lib
 from repro.core.baselines import lasso as lasso_lib
-from repro.optim.optimizers import apply_updates
 
 
 def _eval_batches(setup: BenchSetup, n=6, start=3000):

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import make_setup, train_fquant
-from repro.core import FQuantConfig
 from repro.core.baselines import uniform
 from repro.core.rowwise_quant import fake_quant_rowwise
 

@@ -36,10 +36,32 @@ def main() -> None:
                     help="write the micro-batched serving sweep as a "
                          "stable-schema bench_qps/v1 JSON file and skip "
                          "the CSV jobs")
+    ap.add_argument("--emit-pipeline", default=None, metavar="PATH",
+                    help="run the end-to-end train->prune->quantize->"
+                         "pack->serve pipeline and write its "
+                         "bench_pipeline/v1 record (repro.launch."
+                         "pipeline); skips the CSV jobs")
     ap.add_argument("--serve-batches", default="1,8,32",
                     help="fusion factors for --emit (comma-separated)")
     args = ap.parse_args()
     fast = args.fast
+
+    if args.emit_pipeline:
+        import json
+
+        from repro.launch.pipeline import (PipelineConfig, fast_config,
+                                           run_pipeline,
+                                           verify_failures)
+
+        cfg = fast_config() if fast else PipelineConfig()
+        rec = run_pipeline(cfg)
+        with open(args.emit_pipeline, "w") as f:
+            json.dump(rec, f, indent=1, sort_keys=True)
+        print(f"wrote {args.emit_pipeline}")
+        failures = verify_failures(rec)
+        if failures:
+            raise SystemExit(f"pipeline verify FAILED: {failures}")
+        return
 
     if args.emit:
         from benchmarks import qps

@@ -6,7 +6,6 @@ Sec. 4.3 (via degenerate tier configs).
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (

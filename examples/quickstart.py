@@ -109,7 +109,7 @@ def main():
     emb = packed_lookup(packed, E.globalize(test["indices"], spec))
     emb = emb * jmask[None, :, None]
     logits = model.head(params, emb, test)
-    print(f"serving AUC from the packed store: "
+    print("serving AUC from the packed store: "
           f"{float(auc(logits, test['labels'])):.4f}")
 
 

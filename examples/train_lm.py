@@ -78,7 +78,7 @@ def main():
     pri = res.state.priority
     planned = plan_thresholds_for_ratio(pri, cfg.d_model, 0.5)
     tiers = assign_tiers(pri, planned)
-    print(f"token-embedding memory at thresholds for 50% budget: "
+    print("token-embedding memory at thresholds for 50% budget: "
           f"{compression_ratio(tiers, cfg.d_model):.1%} of fp32")
     shutil.rmtree(ckpt_dir, ignore_errors=True)
 

@@ -242,6 +242,45 @@ def sharded_bag_lookup_rect(packed: PackedStore, indices: Array, *,
         packed, indices, weights)
 
 
+def sharded_lookup_train(table: Array, indices: Array, *, mesh,
+                         axis: str = "model",
+                         use_pallas: bool | None = None) -> Array:
+    """Differentiable row-sharded gather over the fp32 training table.
+
+    int (...,) -> fp32 (..., D), replicated.  The training twin of
+    ``sharded_lookup``: each shard runs ``bag_lookup_train`` (the
+    custom_vjp fused gather; other shards' slots carry weight 0 and are
+    skipped), one psum assembles the replicated embeddings.  Because
+    the local op carries the ``jax.custom_vjp``, differentiating
+    through this runs the Pallas scatter-add backward *per shard* —
+    each device accumulates gradients for exactly the rows it owns, and
+    the psum transposes to a replicated cotangent (no gradient
+    collective over the table rows).
+
+    The ``axis`` mesh size must divide ``table.shape[0]``
+    (``FieldSpec.total_rows`` is 512-padded for exactly this).
+    """
+    from repro.kernels.dequant_bag.autodiff import bag_lookup_train
+    if use_pallas is None:
+        use_pallas = not should_interpret()
+
+    def local(tbl, idx):
+        v_loc = tbl.shape[0]
+        i = jax.lax.axis_index(axis)
+        flat = idx.reshape(-1, 1)
+        loc = flat - i * v_loc
+        mine = (loc >= 0) & (loc < v_loc)
+        lc = jnp.clip(loc, 0, v_loc - 1)
+        bags = bag_lookup_train(tbl, lc, mine.astype(jnp.float32),
+                                use_pallas=use_pallas)
+        return jax.lax.psum(bags, axis)
+
+    out = shard_map(local, mesh=mesh,
+                    in_specs=(P(axis, None), P()),
+                    out_specs=P(), check_rep=False)(table, indices)
+    return out.reshape(*indices.shape, table.shape[1])
+
+
 def sharded_bag_lookup(packed: PackedStore, indices: Array,
                        segment_ids: Array, num_bags: int, *, mesh,
                        axis: str = "model",

@@ -1,1 +1,6 @@
+from repro.kernels.dequant_bag.autodiff import (  # noqa: F401
+    bag_grad_tpu,
+    bag_lookup_train,
+    lookup_train,
+)
 from repro.kernels.dequant_bag.ops import dequant_bag_tpu  # noqa: F401

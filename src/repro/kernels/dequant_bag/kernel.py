@@ -227,3 +227,196 @@ def dequant_bag_pallas_rowgrid(payload: Array, scales: Array,
         weights = jnp.ones((b, k), jnp.float32)
     return _rowgrid_call(payload, scales, indices, weights,
                          interpret=should_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# Backward: scatter-add of the bag cotangent into per-row gradients.
+#
+# The transpose of the forward gather: dtable[i] += coeff[b,k] * g[b]
+# for every slot with idx[b,k] == i, where coeff = weight * scale.  The
+# (V, D) gradient lives in HBM (ANY memory space, aliased onto a zeros
+# input so accumulation is read-modify-write); each slot's row slice is
+# DMA'd into a one-row VMEM scratch, accumulated, and DMA'd back.  TPU
+# grid steps run sequentially, so the RMW is race-free; slots are
+# drained in (b, k) lexicographic order — identical in the tiled and
+# rowgrid layouts, which makes the two kernels bit-equal and the result
+# invariant to (block_b, block_d).
+#
+# Unlike the forward, row DMAs here cannot be batch-issued ahead of the
+# waits: two slots of one tile may address the SAME row, and the second
+# read must observe the first write.  The D-blocked grid keeps the
+# write-combining traffic at exactly the touched-row bytes per column
+# stripe — the roofline-relevant quantity for the QAT backward.
+
+
+def _bag_grad_tiled_kernel(idx_ref, g_ref, coeff_ref, zeros_ref, out_ref,
+                           row_ref, sem, *, block_b: int, block_d: int,
+                           k: int):
+    del zeros_ref
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    d0 = j * block_d
+    nslots = block_b * k
+
+    def scatter(slot, carry):
+        b, kk = slot // k, slot % k
+        c = coeff_ref[b, kk]
+
+        @pl.when(c != 0.0)
+        def _():
+            row = idx_ref[i * block_b + b, kk]
+            src = out_ref.at[pl.ds(row, 1), pl.ds(d0, block_d)]
+            load = pltpu.make_async_copy(src, row_ref, sem)
+            load.start()
+            load.wait()
+            row_ref[...] += c * g_ref[pl.ds(b, 1), :]
+            store = pltpu.make_async_copy(row_ref, src, sem)
+            store.start()
+            store.wait()
+        return carry
+
+    jax.lax.fori_loop(0, nslots, scatter, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("vocab", "block_b", "block_d",
+                                    "interpret"))
+def _bag_grad_tiled_call(g: Array, coeff: Array, indices: Array, *,
+                         vocab: int, block_b: int, block_d: int,
+                         interpret: bool) -> Array:
+    b, k = indices.shape
+    d = g.shape[1]
+    indices = indices.astype(jnp.int32)
+    g = g.astype(jnp.float32)
+    coeff = coeff.astype(jnp.float32)
+
+    nb = -(-b // block_b)
+    bp = nb * block_b
+    if bp != b:
+        # grid padding: extra slots carry coeff 0 -> no DMA, no write
+        indices = jnp.pad(indices, ((0, bp - b), (0, 0)))
+        g = jnp.pad(g, ((0, bp - b), (0, 0)))
+        coeff = jnp.pad(coeff, ((0, bp - b), (0, 0)))
+    nd = -(-d // block_d)
+    dp = nd * block_d
+    if dp != d:
+        # non-dividing block_d: zero-pad the cotangent columns; the pad
+        # columns scatter zeros and are sliced off the result
+        g = jnp.pad(g, ((0, 0), (0, dp - d)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, nd),
+        in_specs=[
+            pl.BlockSpec((block_b, block_d), lambda i, j, idx: (i, j)),
+            pl.BlockSpec((block_b, k), lambda i, j, idx: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((1, block_d), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_bag_grad_tiled_kernel, block_b=block_b,
+                          block_d=block_d, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((vocab, dp), jnp.float32),
+        # operand 3 = the zeros buffer (after scalar-prefetch indices,
+        # g and coeff); aliasing it onto the output turns the kernel
+        # into an in-place accumulate
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(indices, g, coeff, jnp.zeros((vocab, dp), jnp.float32))
+    return out[:, :d]
+
+
+def bag_grad_pallas(g: Array, scales: Array | None, indices: Array,
+                    weights: Array | None, vocab: int,
+                    interpret: bool | None = None, *,
+                    block_b: int | None = None,
+                    block_d: int | None = None) -> Array:
+    """g (B, D) fp32, indices (B, K) -> dtable (vocab, D) fp32.
+
+    The scatter-add transpose of ``dequant_bag_pallas``; tiled
+    (B_block, D_block) grid with K looped in-kernel.  Block sizes
+    default to the forward's autotune-lite picker (the scratch here is
+    one fp32 row, strictly smaller than the forward's landing buffer).
+    """
+    b, k = indices.shape
+    d = g.shape[1]
+    coeff = jnp.ones((b, k), jnp.float32) if weights is None \
+        else weights.astype(jnp.float32)
+    if scales is not None:
+        coeff = coeff * jnp.take(scales, indices, axis=0)
+    from repro.kernels.dequant_bag.ops import resolve_block_sizes
+    block_b, block_d = resolve_block_sizes(b, k, d, 4, block_b, block_d)
+    return _bag_grad_tiled_call(g, coeff, indices, vocab=vocab,
+                                block_b=block_b, block_d=block_d,
+                                interpret=should_interpret(interpret))
+
+
+def _bag_grad_rowgrid_kernel(idx_ref, g_ref, coeff_ref, zeros_ref,
+                             out_ref, row_ref, sem):
+    del zeros_ref
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    c = coeff_ref[0, 0]
+
+    @pl.when(c != 0.0)
+    def _():
+        row = idx_ref[i, j]
+        src = out_ref.at[pl.ds(row, 1), :]
+        load = pltpu.make_async_copy(src, row_ref, sem)
+        load.start()
+        load.wait()
+        row_ref[...] += c * g_ref[...]
+        store = pltpu.make_async_copy(row_ref, src, sem)
+        store.start()
+        store.wait()
+
+
+@functools.partial(jax.jit, static_argnames=("vocab", "interpret"))
+def _bag_grad_rowgrid_call(g: Array, coeff: Array, indices: Array, *,
+                           vocab: int, interpret: bool) -> Array:
+    b, k = indices.shape
+    d = g.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, idx: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, idx: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        _bag_grad_rowgrid_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((vocab, d), jnp.float32),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(indices.astype(jnp.int32), g.astype(jnp.float32),
+      coeff.astype(jnp.float32), jnp.zeros((vocab, d), jnp.float32))
+
+
+def bag_grad_pallas_rowgrid(g: Array, scales: Array | None,
+                            indices: Array, weights: Array | None,
+                            vocab: int,
+                            interpret: bool | None = None) -> Array:
+    """(B, K)-grid scatter fallback: one slot RMW per grid step, full-D
+    row scratch.  Bit-identical to ``bag_grad_pallas`` (same (b, k)
+    accumulation order)."""
+    b, k = indices.shape
+    coeff = jnp.ones((b, k), jnp.float32) if weights is None \
+        else weights.astype(jnp.float32)
+    if scales is not None:
+        coeff = coeff * jnp.take(scales, indices, axis=0)
+    return _bag_grad_rowgrid_call(g, coeff, indices, vocab=vocab,
+                                  interpret=should_interpret(interpret))

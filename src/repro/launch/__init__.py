@@ -1,1 +1,23 @@
 """Launch entry points: mesh construction, dry-run, train/serve drivers."""
+
+from __future__ import annotations
+
+import os
+
+
+def force_host_device_count(n: int) -> None:
+    """Fake ``n`` host devices for a CPU-container mesh run.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to
+    ``XLA_FLAGS``, preserving whatever flags are already set.  MUST run
+    before jax first initialises (device count locks at first init) —
+    the drivers call it before their lazy ``import jax``; this module
+    itself stays jax-import-free for the same reason.  No-op for
+    ``n <= 1``.
+    """
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if flag not in flags.split():
+        os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()

@@ -28,7 +28,6 @@ Usage:
 
 import argparse
 import json
-import re
 import time
 import traceback
 

@@ -44,7 +44,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import numpy as np
@@ -103,11 +102,8 @@ def main() -> None:
     if args.verify_hier and args.hbm_budget_mb <= 0:
         ap.error("--verify-hier requires --hbm-budget-mb")
 
-    if args.mesh > 1:
-        flags = os.environ.get("XLA_FLAGS", "")
-        os.environ["XLA_FLAGS"] = (
-            f"{flags} --xla_force_host_platform_device_count="
-            f"{args.mesh}").strip()
+    from repro.launch import force_host_device_count
+    force_host_device_count(args.mesh)
 
     import jax
     import jax.numpy as jnp
@@ -253,7 +249,7 @@ def main() -> None:
                     "hier verify FAILED: hierarchical lookup is not "
                     "bit-identical to the fully resident pack")
             print(f"hier verify OK: {server.hier.vocab} rows "
-                  f"bit-identical across "
+                  "bit-identical across "
                   f"{server.hier.counts()} after "
                   f"{server.hier.stats.migrations} migrations")
         print(json.dumps(rec))

@@ -14,7 +14,7 @@ array for the `model` mesh axis instead of N tiny ones.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -74,7 +74,6 @@ def _routing(router_logits: Array, cfg: MoEConfig):
     weights = weights / jnp.maximum(
         weights.sum(axis=-1, keepdims=True), 1e-9)
     # load-balance aux (Switch eq. 4): E * sum_e f_e * p_e
-    t = probs.shape[0]
     me = probs.mean(axis=0)
     one_hot = jax.nn.one_hot(experts[:, 0], cfg.num_experts,
                              dtype=jnp.float32)

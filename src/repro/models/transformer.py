@@ -237,7 +237,6 @@ def decode_step(params: dict, cfg: LMConfig, token: Array, cache: dict,
     token: (B, 1) int32; cache: see init_cache; cache_len: () int32.
     Returns (logits (B, 1, V), new_cache).
     """
-    b = token.shape[0]
     x = jnp.take(params["embed"], token, axis=0).astype(cfg.compute_dtype)
     rope = L.rope_inv_freq(
         cfg.head_dim if cfg.attn == "gqa" else cfg.qk_rope_dim,

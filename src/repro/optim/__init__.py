@@ -11,6 +11,7 @@ from repro.optim.optimizers import (  # noqa: F401
     momentum,
     proximal_sgd,
     rowwise_adagrad,
+    rowwise_adagrad_table_update,
     sgd,
 )
 from repro.optim.grad_compress import (  # noqa: F401

@@ -224,6 +224,27 @@ def rowwise_adagrad(lr, eps: float = 1e-10, init_accum: float = 0.1,
     return Optimizer(init, update)
 
 
+def rowwise_adagrad_table_update(table: Array, accum: Array, grad: Array,
+                                 lr, step: Array | None = None,
+                                 eps: float = 1e-10
+                                 ) -> tuple[Array, Array]:
+    """One row-wise adagrad step on a single (V, D) table.
+
+    The single-leaf form of ``rowwise_adagrad`` for train steps that
+    compute the table gradient themselves (the fused scatter-add
+    backward kernel emits a dense (V, D) row gradient in which
+    untouched rows are exactly zero — their accumulator and values pass
+    through unchanged, so the update is sparse in effect).  Matches
+    ``rowwise_adagrad``'s update rule leaf-for-leaf.
+    """
+    eta = _resolve_lr(lr, step if step is not None
+                      else jnp.zeros((), jnp.int32))
+    g = grad.astype(jnp.float32)
+    accum = accum + jnp.mean(jnp.square(g), axis=-1)
+    upd = -eta * g / (jnp.sqrt(accum)[:, None] + eps)
+    return (table + upd).astype(table.dtype), accum
+
+
 def proximal_sgd(lr, lam: float, group_axes: int = -1) -> Optimizer:
     """SGD + block soft-threshold prox step (group LASSO, Li et al. [12])."""
 

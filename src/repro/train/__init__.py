@@ -1,3 +1,13 @@
 """Train/serve steps and the fault-tolerant loop."""
 
-from repro.train.steps import TrainState, make_train_step  # noqa: F401
+from repro.train.accum import (  # noqa: F401
+    TaylorAccum,
+    field_scores,
+    init_accum,
+    update_accum,
+)
+from repro.train.steps import (  # noqa: F401
+    TrainState,
+    make_compressed_train_step,
+    make_train_step,
+)

@@ -1,0 +1,104 @@
+"""In-training importance accumulators: Taylor field scores + row access.
+
+SHARK's two compression decisions are both *training-derived*, but the
+seed code computed them in separate offline passes: F-Permutation field
+scores (Eq. 2-4 first-order Taylor, ``core.taylor``) re-iterated the
+eval set after training, and the serving priority (Eq. 7) only started
+accumulating once traffic hit the packed store.  ``TaylorAccum`` folds
+both into the training step itself, from quantities the step already
+has in hand:
+
+  * ``field_score`` (F,) — running sum of the Eq. 4 error estimate
+    ``dLoss/de_i(x) . (E[e_i] - e_i(x))`` per field, using the
+    *streaming* field mean as E[e_i] (prequential: each batch is scored
+    against the mean of everything seen before it, then folded in).
+    ``field_scores()`` normalises by samples seen — the train-time
+    stand-in for ``taylor.fperm_scores`` that the pipeline prunes by.
+  * ``emb_mean`` (F, D) — the streaming E[e_i] itself (pass 1 of
+    F-Permutation, amortised into training).
+  * ``access`` (V,) — the Eq. 7 EMA folded exactly as serving folds it
+    (``priority.serve_update``: every access enters as c-), so the tier
+    assignment the pipeline packs with is continuous with what the
+    online server keeps updating after handoff.
+  * ``count`` () — samples folded (the score normaliser).
+
+Everything is a pure jit-able pytree op, so the accumulator shards with
+the train state (``access`` row-aligned with the table, the (F,)/(F, D)
+leaves replicated) and checkpoints through ``CheckpointManager`` like
+any other state leaf.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.priority import PriorityConfig, serve_update
+
+Array = jax.Array
+
+
+class TaylorAccum(NamedTuple):
+    field_score: Array   # (F,)  running sum of per-batch Eq. 4 scores
+    emb_mean: Array      # (F, D) streaming field means E[e_i]
+    access: Array        # (V,)  Eq. 7 serve-style access EMA
+    count: Array         # ()    samples folded
+
+
+def init_accum(vocab: int, num_fields: int, dim: int) -> TaylorAccum:
+    return TaylorAccum(
+        field_score=jnp.zeros((num_fields,), jnp.float32),
+        emb_mean=jnp.zeros((num_fields, dim), jnp.float32),
+        access=jnp.zeros((vocab,), jnp.float32),
+        count=jnp.zeros((), jnp.float32))
+
+
+def update_accum(acc: TaylorAccum, gidx: Array, emb: Array,
+                 g_emb: Array, pcfg: PriorityConfig = PriorityConfig(),
+                 valid: Array | None = None) -> TaylorAccum:
+    """Fold one training batch into the accumulator.
+
+    gidx (B, F) global row ids, emb (B, F, D) gathered embeddings,
+    g_emb (B, F, D) the loss cotangent w.r.t. ``emb`` — all three are
+    live values of the train step (no extra forward or backward).
+    ``valid`` (B,) masks padded samples out of every statistic.
+    """
+    b = emb.shape[0]
+    if valid is not None:
+        m = valid.astype(jnp.float32)
+        emb_stat = emb * m[:, None, None]
+        g_stat = g_emb * m[:, None, None]
+        n = m.sum()
+        batch_mean = emb_stat.sum(axis=0) / jnp.maximum(n, 1.0)
+    else:
+        emb_stat, g_stat = emb, g_emb
+        n = jnp.asarray(float(b), jnp.float32)
+        batch_mean = emb.mean(axis=0)
+
+    # streaming mean BEFORE this batch scores it (prequential Eq. 4):
+    # the first batches score against a still-forming mean, exactly like
+    # an online permutation test; fperm_scores' two-pass variant remains
+    # the offline reference.
+    delta = acc.emb_mean[None, :, :] - emb
+    score = jnp.einsum("bfd,bfd->f", g_stat, delta)
+
+    new_count = acc.count + n
+    w_old = jnp.where(new_count > 0, acc.count / jnp.maximum(new_count,
+                                                            1.0), 0.0)
+    w_new = jnp.where(new_count > 0, n / jnp.maximum(new_count, 1.0),
+                      0.0)
+    vmask = None if valid is None else jnp.broadcast_to(
+        valid[:, None], gidx.shape)
+    return TaylorAccum(
+        field_score=acc.field_score + score,
+        emb_mean=w_old * acc.emb_mean + w_new * batch_mean,
+        access=serve_update(acc.access, gidx, pcfg, valid=vmask),
+        count=new_count)
+
+
+def field_scores(acc: TaylorAccum) -> Array:
+    """Mean Eq. 4 score per field (the pruning ranking; lower = less
+    important, as in ``core.pruning``)."""
+    return acc.field_score / jnp.maximum(acc.count, 1.0)

@@ -29,7 +29,6 @@ import dataclasses
 import time
 from typing import Callable
 
-import jax
 import numpy as np
 
 from repro.ckpt.manager import CheckpointManager
@@ -108,9 +107,12 @@ def run(state: TrainState, step_fn: Callable, batch_fn: Callable,
         if (step + 1) % cfg.ckpt_every == 0:
             mgr.save(step + 1, state, blocking=not cfg.async_ckpt)
 
+    # drain any in-flight async save BEFORE deciding whether the final
+    # step is already on disk — the step-boundary save above may still
+    # be writing, and latest_step() only sees published manifests
+    mgr.wait()
     if mgr.latest_step() != cfg.total_steps:
         mgr.save(cfg.total_steps, state, blocking=True)
-    mgr.wait()
     return LoopResult(state=state, steps_run=cfg.total_steps - start,
                       resumed_from=resumed_from, losses=losses,
                       stragglers=stragglers, nan_skips=nan_skips)

@@ -33,6 +33,7 @@ class TrainState(NamedTuple):
     step: Array
     priority: Any = None      # fquant row priorities (or None)
     rng: Array | None = None
+    accum: Any = None         # train.accum.TaylorAccum (or None)
 
 
 class FQuantHook(NamedTuple):
@@ -181,6 +182,133 @@ def make_sparse_table_train_step(embed_fn: Callable, loss_from_emb: Callable,
                            "grad_norm": global_norm(g_dense)}
 
     step.init_state = init_sparse_state
+    return step
+
+
+def make_compressed_train_step(loss_from_emb: Callable,
+                               indices_fn: Callable, labels_fn: Callable,
+                               table_path: str, lr: float,
+                               num_fields: int,
+                               fq_cfg: FQuantConfig | None = None,
+                               dense_optimizer: Optimizer | None = None,
+                               mesh=None, axis: str = "model",
+                               use_pallas: bool | None = None,
+                               with_accum: bool = True,
+                               field_mask=None,
+                               eps: float = 1e-10) -> Callable:
+    """The end-to-end compression train step: serving kernels + Eq. 5-8
+    fold + in-training Taylor/access accumulation, in ONE backward.
+
+        emb      = lookup_train(table, gidx)        fused gather kernel
+        g_emb    = d loss / d emb                   head backward only
+        g_table  = emb_vjp(g_emb)                   fused SCATTER kernel
+                                                    (jax.custom_vjp)
+        table    = rowwise_adagrad(table, g_table)  touched rows only
+        priority = Eq. 7(priority, gidx, labels)    + Eq. 5-6 snap
+        accum    = Taylor Eq. 4 fold + Eq. 7 access EMA
+
+    ``field_mask`` (F,) zeroes pruned fields inside the loss (the
+    F-Permutation masking contract of ``core.pruning``): their emb and
+    therefore their table/Taylor gradients vanish, so post-prune
+    finetuning reuses this same step with a mask.
+
+    ``mesh`` switches the gather/scatter pair to the row-sharded form
+    (``dist.packed.sharded_lookup_train``: per-shard kernels under
+    shard_map, one (B*F, D) psum forward, replicated cotangent
+    backward) so ``--mesh N`` training runs the same step.  The table
+    must then be placed P(axis, None) and its row count divide the axis
+    size (FieldSpec.total_rows is 512-padded for exactly this).
+
+    State: ``TrainState`` with opt = (dense_opt_state, accum (V,)) and
+    ``accum`` = ``train.accum.TaylorAccum`` — both checkpoint through
+    ``CheckpointManager`` as ordinary state leaves.
+    """
+    from repro.kernels.dequant_bag.autodiff import lookup_train
+    from repro.optim import optimizers as opt_lib
+    from repro.train import accum as accum_lib
+    dense_optimizer = dense_optimizer or opt_lib.adam(lr)
+    pcfg = (fq_cfg.priority if fq_cfg is not None
+            else qat_store.FQuantConfig().priority)
+
+    if mesh is not None:
+        from repro.dist.packed import sharded_lookup_train
+
+        def gather(tbl, gidx):
+            return sharded_lookup_train(tbl, gidx, mesh=mesh, axis=axis,
+                                        use_pallas=use_pallas)
+    else:
+        def gather(tbl, gidx):
+            return lookup_train(tbl, gidx, use_pallas=use_pallas)
+
+    def init_compressed_state(params) -> TrainState:
+        dense = {k: v for k, v in params.items() if k != table_path}
+        vocab, dim = params[table_path].shape
+        opt = (dense_optimizer.init(dense),
+               jnp.full((vocab,), 0.1, jnp.float32))
+        pri = jnp.zeros((vocab,), jnp.float32) if fq_cfg else None
+        acc = (accum_lib.init_accum(vocab, num_fields, dim)
+               if with_accum else None)
+        return TrainState(params=params, opt=opt,
+                          step=jnp.zeros((), jnp.int32), priority=pri,
+                          rng=jax.random.PRNGKey(0), accum=acc)
+
+    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        params = state.params
+        table = params[table_path]
+        dense = {k: v for k, v in params.items() if k != table_path}
+        gidx = indices_fn(batch)                       # (B, F) global
+
+        # forward gather through the fused kernel; emb_vjp is the
+        # registered custom_vjp -> the Pallas scatter-add backward
+        emb, emb_vjp = jax.vjp(lambda t: gather(t, gidx), table)
+
+        def head_loss(dense_params, e):
+            if field_mask is not None:
+                e = e * jnp.asarray(field_mask,
+                                    jnp.float32)[None, :, None]
+            p = dict(dense_params)
+            p[table_path] = table       # heads must not touch the table
+            return loss_from_emb(p, e, batch).mean()
+
+        loss, (g_dense, g_emb) = jax.value_and_grad(
+            head_loss, argnums=(0, 1))(dense, emb)
+        (g_table,) = emb_vjp(g_emb)                    # scatter kernel
+
+        # ---- row-wise adagrad on the table (touched rows only: the
+        # scatter emits exact zeros for untouched rows) ---------------
+        dense_opt_state, accum_sq = state.opt
+        table, accum_sq = opt_lib.rowwise_adagrad_table_update(
+            table, accum_sq, g_table, lr, step=state.step, eps=eps)
+
+        # ---- dense params -------------------------------------------
+        upd, dense_opt_state = dense_optimizer.update(
+            g_dense, dense_opt_state, dense)
+        dense = apply_updates(dense, upd)
+
+        # ---- F-Quant fold: Eq. 7 priority + Eq. 5-6 sparse snap -----
+        priority = state.priority
+        if fq_cfg is not None:
+            store = qat_store.QATStore(table=table, priority=priority)
+            store = qat_store.post_step_sparse(
+                store, gidx, labels_fn(batch), fq_cfg,
+                seed=state.step.astype(jnp.uint32))
+            table, priority = store.table, store.priority
+
+        # ---- in-training Taylor + access accumulation ---------------
+        acc = state.accum
+        if acc is not None:
+            acc = accum_lib.update_accum(acc, gidx, emb, g_emb, pcfg)
+
+        params = dict(dense)
+        params[table_path] = table
+        new_state = TrainState(params=params,
+                               opt=(dense_opt_state, accum_sq),
+                               step=state.step + 1, priority=priority,
+                               rng=state.rng, accum=acc)
+        return new_state, {"loss": loss,
+                           "grad_norm": global_norm(g_dense)}
+
+    step.init_state = init_compressed_state
     return step
 
 

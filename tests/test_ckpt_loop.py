@@ -10,7 +10,7 @@ import pytest
 
 from repro.ckpt import CheckpointManager
 from repro.optim import adam
-from repro.train import TrainState, make_train_step
+from repro.train import make_train_step
 from repro.train.loop import LoopConfig, run
 from repro.train.steps import init_state
 

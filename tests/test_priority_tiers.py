@@ -1,6 +1,5 @@
 """Eq. 7 priority EMA + Eq. 8 tier assignment + memory accounting."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings

@@ -1,15 +1,16 @@
 #!/usr/bin/env python
-"""Validate a benchmark JSON file (``bench_qps/v1`` / ``bench_hier/v1``).
+"""Validate a benchmark JSON file (``bench_qps/v1`` / ``bench_hier/v1``
+/ ``bench_pipeline/v1``).
 
-    python tools/check_bench_schema.py [BENCH_qps.json | BENCH_hier.json]
+    python tools/check_bench_schema.py [BENCH_*.json]
 
 The schemas are the stable contract between PRs: benchmarks emit them
 (``benchmarks/qps.py --online --serve-batch ...``,
 ``benchmarks/qps_sharded.py``, ``benchmarks/run.py --emit``,
-``benchmarks/hier.py``), CI validates them, future PRs diff the sweep
-entries for regressions.  Documented in docs/serving.md and
-docs/storage.md.  The schema is picked from the record's ``"schema"``
-key.
+``benchmarks/hier.py``, ``repro.launch.pipeline --emit``), CI validates
+them, future PRs diff the entries for regressions.  Documented in
+docs/serving.md, docs/storage.md and docs/training.md.  The schema is
+picked from the record's ``"schema"`` key.
 
 Exit 0 = valid; exit 1 prints every violation found.
 """
@@ -87,9 +88,15 @@ def _check_keys(obj: dict, spec: dict, where: str, errors: list) -> None:
     for key, typ in spec.items():
         if key not in obj:
             errors.append(f"{where}: missing key {key!r}")
-        elif isinstance(obj[key], bool) or not isinstance(obj[key], typ):
+            continue
+        val = obj[key]
+        if typ is bool:
+            if not isinstance(val, bool):
+                errors.append(f"{where}: {key!r} should be bool, "
+                              f"got {type(val).__name__}")
+        elif isinstance(val, bool) or not isinstance(val, typ):
             errors.append(f"{where}: {key!r} should be {typ.__name__}, "
-                          f"got {type(obj[key]).__name__}")
+                          f"got {type(val).__name__}")
 
 
 def _check_sweep(rec: dict, spec: dict, errors: list) -> list[dict]:
@@ -147,9 +154,92 @@ def _validate_hier(rec: dict) -> list[str]:
     return errors
 
 
+PIPELINE_TOP = {
+    "schema": str,
+    "benchmark": str,
+    "arch": str,
+    "mesh": numbers.Integral,
+    "train_steps": numbers.Integral,
+    "batch": numbers.Integral,
+    "train_loss_first": numbers.Real,
+    "train_loss_last": numbers.Real,
+    "gradcheck_max_abs_err": numbers.Real,
+    "fields_total": numbers.Integral,
+    "fields_pruned": numbers.Integral,
+    "kept_memory_fraction": numbers.Real,
+    "tier_rows_int8": numbers.Integral,
+    "tier_rows_half": numbers.Integral,
+    "tier_rows_fp32": numbers.Integral,
+    "bytes_fp32": numbers.Integral,
+    "bytes_packed": numbers.Integral,
+    "compression_ratio": numbers.Real,
+    "eval_loss_fp32": numbers.Real,
+    "eval_loss_packed": numbers.Real,
+    "eval_auc_fp32": numbers.Real,
+    "eval_auc_packed": numbers.Real,
+    "serve_requests": numbers.Integral,
+    "serve_batch": numbers.Integral,
+    "steady_qps": numbers.Real,
+    "cache_hit_rate": numbers.Real,
+    "retiers": numbers.Integral,
+    "verify_pack_bit_identical": bool,
+    "verify_serve_bit_identical": bool,
+    "verify_grad_fp32_tolerance": bool,
+    "verify_accum_checkpointed": bool,
+    "stage_seconds": dict,
+}
+
+PIPELINE_STAGES = ("train", "prune", "quantize", "pack", "serve")
+
+
+def _validate_pipeline(rec: dict) -> list[str]:
+    errors: list[str] = []
+    _check_keys(rec, PIPELINE_TOP, "top-level", errors)
+    if errors:
+        return errors
+    # the whole point of the record: the pipeline must actually
+    # compress, and every end-to-end verification must have held
+    if rec["bytes_packed"] >= rec["bytes_fp32"]:
+        errors.append("bytes_packed >= bytes_fp32: pipeline did not "
+                      "compress")
+    ratio = rec["bytes_packed"] / max(rec["bytes_fp32"], 1)
+    if abs(rec["compression_ratio"] - ratio) > 1e-3:
+        errors.append(f"compression_ratio {rec['compression_ratio']} "
+                      f"inconsistent with byte counts ({ratio:.4f})")
+    for key in ("verify_pack_bit_identical", "verify_serve_bit_identical",
+                "verify_grad_fp32_tolerance",
+                "verify_accum_checkpointed"):
+        if rec[key] is not True:
+            errors.append(f"{key}: must be true")
+    if not 0 <= rec["fields_pruned"] < rec["fields_total"]:
+        errors.append("fields_pruned out of range")
+    # the tolerance judgement itself is the driver's (relative to the
+    # gradient scale; verify_grad_fp32_tolerance above) — here only
+    # sanity-check the recorded error is a valid measurement
+    if rec["gradcheck_max_abs_err"] < 0:
+        errors.append("gradcheck_max_abs_err negative")
+    if not 0.0 <= rec["cache_hit_rate"] <= 1.0:
+        errors.append("cache_hit_rate out of [0, 1]")
+    tiers = (rec["tier_rows_int8"], rec["tier_rows_half"],
+             rec["tier_rows_fp32"])
+    if min(tiers) < 0 or sum(tiers) <= 0:
+        errors.append("tier_rows_* invalid")
+    if rec["mesh"] < 1:
+        errors.append("mesh must be >= 1")
+    stages = rec["stage_seconds"]
+    for stage in PIPELINE_STAGES:
+        sec = stages.get(stage)
+        if not isinstance(sec, numbers.Real) or isinstance(sec, bool) \
+                or sec < 0:
+            errors.append(f"stage_seconds[{stage!r}] missing or "
+                          "invalid")
+    return errors
+
+
 SCHEMAS = {
     "bench_qps/v1": _validate_qps,
     "bench_hier/v1": _validate_hier,
+    "bench_pipeline/v1": _validate_pipeline,
 }
 
 
@@ -174,8 +264,10 @@ def main() -> int:
     for err in errors:
         print(f"{path}: {err}")
     if not errors:
-        n = len(rec["sweep"])
-        print(f"{path}: valid {rec['schema']} ({n} sweep entries)")
+        sweep = rec.get("sweep")
+        detail = (f"{len(sweep)} sweep entries" if isinstance(sweep, list)
+                  else "single record")
+        print(f"{path}: valid {rec['schema']} ({detail})")
     return 1 if errors else 0
 
 
