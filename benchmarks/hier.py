@@ -29,7 +29,10 @@ from repro.core import pack
 
 BENCH_SCHEMA = "bench_hier/v1"
 
-SWEEP_KEYS = ("qps", "steady_qps", "p50_us", "p99_us", "lookups",
+SWEEP_KEYS = ("qps", "steady_qps", "p50_us", "p95_us", "p99_us",
+              "lookups",
+              "latency_p50", "latency_p95", "latency_p99",
+              "p99_retier_attributed",
               "cache_hit_rate", "hier_miss_rate", "warm_hits",
               "cold_hits", "staged_rows", "migrations", "promoted",
               "demoted", "hot_rows", "warm_rows", "cold_rows")

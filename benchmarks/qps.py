@@ -31,13 +31,13 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import make_setup, train_fquant
+from repro import obs
 from repro.core import FQuantConfig, assign_tiers, pack
 from repro.core import qat_store as qs
 from repro.core.packed_store import lookup as packed_lookup
@@ -84,18 +84,18 @@ def run(batch=512, iters=20) -> list[dict]:
         return model.head(pp, emb, b)
 
     fwdq = jax.jit(fwd_packed)
-    fwd32(p32, batch_data).block_until_ready()
-    fwdq(params, packed, batch_data).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        r = fwd32(p32, batch_data)
-    r.block_until_ready()
-    t_fp32 = (time.perf_counter() - t0) / iters
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        r = fwdq(params, packed, batch_data)
-    r.block_until_ready()
-    t_packed = (time.perf_counter() - t0) / iters
+    jax.block_until_ready(fwd32(p32, batch_data))
+    jax.block_until_ready(fwdq(params, packed, batch_data))
+    with obs.timeblock("bench.fwd_fp32") as tb:
+        for _ in range(iters):
+            r = fwd32(p32, batch_data)
+        tb.sync(r)
+    t_fp32 = tb.seconds / iters
+    with obs.timeblock("bench.fwd_packed") as tb:
+        for _ in range(iters):
+            r = fwdq(params, packed, batch_data)
+        tb.sync(r)
+    t_packed = tb.seconds / iters
 
     ratio = fp32_bytes_req / packed_bytes_req
     return [

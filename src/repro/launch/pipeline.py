@@ -45,7 +45,8 @@ import dataclasses
 import json
 import os
 import shutil
-import time
+
+from repro import obs
 
 
 @dataclasses.dataclass
@@ -137,17 +138,17 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
     stage_s: dict = {}
 
     # ------------------------------------------------------------ train
-    t0 = time.perf_counter()
     train_dir = os.path.join(cfg.ckpt_dir, "train")
     if not cfg.resume and os.path.isdir(train_dir):
         shutil.rmtree(train_dir)
     loop_cfg = loop_lib.LoopConfig(
         total_steps=cfg.steps, ckpt_every=cfg.ckpt_every,
         ckpt_dir=train_dir, log_every=max(cfg.steps // 4, 1))
-    result = loop_lib.run(setup.state, jax.jit(setup.step), batch_fn,
-                          loop_cfg)
+    with obs.timeblock("pipeline.train") as tb:
+        result = loop_lib.run(setup.state, jax.jit(setup.step),
+                              batch_fn, loop_cfg)
     state = result.state
-    stage_s["train"] = round(time.perf_counter() - t0, 3)
+    stage_s["train"] = round(tb.seconds, 3)
 
     if result.losses:
         loss_first, loss_last = result.losses[0], result.losses[-1]
@@ -194,7 +195,7 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
     grad_ok = grad_err <= 1e-5 + 1e-4 * grad_scale
 
     # ------------------------------------------------------------ prune
-    t0 = time.perf_counter()
+    tb = obs.timeblock("pipeline.prune").start()
     scores = np.asarray(accum_lib.field_scores(state.accum))
     table_bytes = spec.table_bytes()
     mask = np.ones(spec.num_fields, bool)
@@ -226,14 +227,14 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
         hi = lo + int(spec.cardinalities[f])
         table[lo:hi] = 0.0
         priority[lo:hi] = 0.0
-    stage_s["prune"] = round(time.perf_counter() - t0, 3)
+    stage_s["prune"] = round(tb.stop(), 3)
     rec["fields_total"] = int(spec.num_fields)
     rec["fields_pruned"] = int(pruned.size)
     rec["kept_memory_fraction"] = round(
         memory_fraction(mask, table_bytes), 4)
 
     # -------------------------------------------------------- quantize
-    t0 = time.perf_counter()
+    tb = obs.timeblock("pipeline.quantize").start()
     pri = jnp.asarray(priority)
     tier_cfg = plan_thresholds_for_ratio(pri, spec.dim,
                                          cfg.target_ratio)
@@ -241,14 +242,14 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
     tiers = assign_tiers(pri, tier_cfg)
     table = qs.snap(jnp.asarray(table), tiers, final_cfg)
     store = QATStore(table=table, priority=pri)
-    stage_s["quantize"] = round(time.perf_counter() - t0, 3)
+    stage_s["quantize"] = round(tb.stop(), 3)
     counts = tier_counts(tiers)
     rec["tier_rows_int8"] = int(counts[0])
     rec["tier_rows_half"] = int(counts[1])
     rec["tier_rows_fp32"] = int(counts[2])
 
     # ------------------------------------------------------------ pack
-    t0 = time.perf_counter()
+    tb = obs.timeblock("pipeline.pack").start()
     packed = ps.pack(store, final_cfg)
     bytes_fp32 = spec.total_rows * spec.dim * 4
     bytes_packed = packed.nbytes()
@@ -263,7 +264,7 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
     verify_pack = (_bits_equal(restored_packed, packed)
                    and _bits_equal(restored_packed,
                                    ps.pack(store, final_cfg)))
-    stage_s["pack"] = round(time.perf_counter() - t0, 3)
+    stage_s["pack"] = round(tb.stop(), 3)
     rec["bytes_fp32"] = int(bytes_fp32)
     rec["bytes_packed"] = int(bytes_packed)
     rec["compression_ratio"] = round(bytes_packed / bytes_fp32, 4)
@@ -294,7 +295,7 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
     rec["eval_auc_packed"] = round(auc_packed, 5)
 
     # ----------------------------------------------------------- serve
-    t0 = time.perf_counter()
+    tb = obs.timeblock("pipeline.serve").start()
     from repro.serve import (OnlineConfig, OnlineServer,
                              serve_forward_microbatched)
     server = OnlineServer(
@@ -317,7 +318,7 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
     verify_serve = _bits_equal(
         ps.unpack(server.host_packed),
         ps.unpack(ps.pack(server.store, final_cfg)))
-    stage_s["serve"] = round(time.perf_counter() - t0, 3)
+    stage_s["serve"] = round(tb.stop(), 3)
     rec["serve_requests"] = int(cfg.serve_requests)
     rec["serve_batch"] = int(cfg.serve_batch)
     rec["steady_qps"] = round(loop_res.steady_qps, 1)
@@ -361,10 +362,21 @@ def main() -> None:
     ap.add_argument("--serve-requests", type=int, default=None)
     ap.add_argument("--emit", default=None, metavar="PATH",
                     help="also write the bench_pipeline/v1 record here")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable the repro.obs registry and write "
+                         "metrics_snapshot/v1 JSONL here (periodic "
+                         "flush every 16 train steps / served batches "
+                         "+ a final snapshot); docs/observability.md")
     args = ap.parse_args()
 
     from repro.launch import force_host_device_count
     force_host_device_count(args.mesh)
+
+    if args.metrics_out:
+        from repro.serve.loop import SERVE_PHASES
+        obs.enable()
+        obs.ensure_histograms(f"{p}_us" for p in SERVE_PHASES)
+        obs.set_sink(obs.JsonlSink(args.metrics_out, every=16))
 
     overrides = dict(arch=args.arch, mesh=args.mesh,
                      ckpt_dir=args.ckpt_dir, resume=args.resume,
@@ -378,6 +390,7 @@ def main() -> None:
         else PipelineConfig(**overrides)
 
     rec = run_pipeline(cfg)
+    obs.flush()
     if args.emit:
         with open(args.emit, "w") as f:
             json.dump(rec, f, indent=1, sort_keys=True)

@@ -44,9 +44,10 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import numpy as np
+
+from repro import obs
 
 
 def main() -> None:
@@ -94,6 +95,14 @@ def main() -> None:
                          "lookup is bit-identical to a fully "
                          "device-resident pack of the live store over "
                          "the whole vocab (CI spill smoke)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable the repro.obs registry and write "
+                         "metrics_snapshot/v1 JSONL here (one line "
+                         "every 16 served batches + a final snapshot); "
+                         "docs/observability.md")
+    ap.add_argument("--metrics-every", type=int, default=16,
+                    help="snapshot cadence in served batches for "
+                         "--metrics-out (0 = final snapshot only)")
     args = ap.parse_args()
     if args.serve_batch > 0 and not args.online:
         ap.error("--serve-batch requires --online")
@@ -107,6 +116,16 @@ def main() -> None:
 
     import jax
     import jax.numpy as jnp
+
+    if args.metrics_out:
+        from repro.serve.loop import SERVE_PHASES
+        obs.enable()
+        # pre-register the full phase catalog so snapshots carry every
+        # histogram even for phases this run never exercises (e.g.
+        # store.stage/migrate when the store is fully device-resident)
+        obs.ensure_histograms(f"{p}_us" for p in SERVE_PHASES)
+        obs.set_sink(obs.JsonlSink(args.metrics_out,
+                                   every=args.metrics_every))
 
     from repro import configs
     from repro.core import FQuantConfig, pack
@@ -252,6 +271,7 @@ def main() -> None:
                   "bit-identical across "
                   f"{server.hier.counts()} after "
                   f"{server.hier.stats.migrations} migrations")
+        obs.flush()
         print(json.dumps(rec))
         return
 
@@ -276,9 +296,10 @@ def main() -> None:
     lat = []
     for r in range(args.requests):
         batch = full_batch(uniform_batch(r), r)
-        t0 = time.perf_counter()
-        serve(packed, params, batch).block_until_ready()
-        lat.append(time.perf_counter() - t0)
+        with obs.timeblock("serve.request") as tb:
+            tb.sync(serve(packed, params, batch))
+        lat.append(tb.seconds)
+        obs.tick()
     lat_us = np.asarray(lat[1:] if len(lat) > 1 else lat) * 1e6
     p50 = float(np.percentile(lat_us, 50))
     p99 = float(np.percentile(lat_us, 99))
@@ -290,6 +311,7 @@ def main() -> None:
                 "p50_us": round(p50, 1), "p99_us": round(p99, 1),
                 "packed_mib": round(packed_mib, 3),
                 "packed_fp32_ratio": round(packed_bytes / fp32, 4)})
+    obs.flush()
     print(json.dumps(rec))
 
 

@@ -1,0 +1,49 @@
+"""repro.obs — metrics + tracing across serve/store/train.
+
+The observability layer SHARK's operational claims (30% QPS, tail
+latency under re-tiering) are measured against: a zero-dependency
+in-process metrics registry plus span tracing, instrumented through
+every hot path and exported as statsd lines or ``metrics_snapshot/v1``
+JSONL (``launch/serve.py --metrics-out`` / ``launch/pipeline.py
+--metrics-out``).
+
+  registry   counters / gauges / streaming histograms (fixed
+             log-spaced buckets, p50/p95/p99/max, exact cross-shard
+             merge) behind a disabled-by-default switch
+  trace      ``span("stage")`` nestable timed stages and
+             ``timeblock``, the one wall-clock idiom shared by the
+             serve, train and bench loops (``tb.sync(x)`` =
+             ``jax.block_until_ready`` inside the clock)
+  export     ``metrics_snapshot/v1`` snapshots, statsd line protocol,
+             and the periodic JSONL sink driven by ``tick()``
+
+Metric catalog + span taxonomy: docs/observability.md.
+"""
+
+from repro.obs.export import (  # noqa: F401
+    JsonlSink,
+    flush,
+    set_sink,
+    snapshot,
+    statsd_lines,
+    tick,
+)
+from repro.obs.registry import (  # noqa: F401
+    Histogram,
+    Registry,
+    disable,
+    enable,
+    enabled,
+    ensure_histograms,
+    gauge,
+    get_registry,
+    inc,
+    observe,
+)
+from repro.obs.trace import (  # noqa: F401
+    Span,
+    Timeblock,
+    current_path,
+    span,
+    timeblock,
+)

@@ -1,0 +1,104 @@
+"""Snapshot + statsd exporters for the metrics registry.
+
+``snapshot(reg)`` freezes the registry into one ``metrics_snapshot/v1``
+JSON record (validated by ``tools/check_bench_schema.py``):
+
+    {"schema": "metrics_snapshot/v1", "seq": N, "ticks": T,
+     "counters":   {name: number, ...},
+     "gauges":     {name: number, ...},
+     "histograms": {name: {count, sum, min, max, p50, p95, p99,
+                           buckets: {idx: count}}, ...}}
+
+``buckets`` carries the sparse log-bucket counts, so snapshots written
+by different replicas can be merged offline
+(``registry.Histogram.from_snapshot(...).merge``) and re-percentiled —
+the same mergeability contract as the in-process histograms.
+
+``statsd_lines(reg)`` renders the classic line protocol (counters
+``|c``, gauges ``|g``, histogram percentiles as derived gauges) for
+piping into any statsd-compatible collector.
+
+``JsonlSink`` appends snapshots to a JSONL file; attach one via
+``set_sink`` and call ``tick()`` once per loop iteration — every
+``every`` ticks (and on ``flush``) one snapshot line is written.  The
+serve/train loops call ``tick()`` unconditionally; without an attached
+sink (or with metrics disabled) it is a no-op flag check.
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.obs.registry import Registry, get_registry
+
+SCHEMA = "metrics_snapshot/v1"
+
+
+def snapshot(reg: Registry | None = None) -> dict:
+    reg = reg or get_registry()
+    reg.seq += 1
+    return {
+        "schema": SCHEMA,
+        "seq": int(reg.seq),
+        "ticks": int(reg.ticks),
+        "counters": {k: (int(v) if float(v).is_integer() else float(v))
+                     for k, v in sorted(reg.counters.items())},
+        "gauges": {k: float(v) for k, v in sorted(reg.gauges.items())},
+        "histograms": {k: h.snapshot()
+                       for k, h in sorted(reg.histograms.items())},
+    }
+
+
+def statsd_lines(reg: Registry | None = None) -> list[str]:
+    reg = reg or get_registry()
+    lines = [f"{k}:{v:g}|c" for k, v in sorted(reg.counters.items())]
+    lines += [f"{k}:{v:g}|g" for k, v in sorted(reg.gauges.items())]
+    for k, h in sorted(reg.histograms.items()):
+        for q in (50, 95, 99):
+            lines.append(f"{k}.p{q}:{h.percentile(q):g}|g")
+        lines.append(f"{k}.count:{h.count}|g")
+    return lines
+
+
+class JsonlSink:
+    """Appends one ``metrics_snapshot/v1`` line per flush."""
+
+    def __init__(self, path: str, every: int = 0):
+        """``every``: flush cadence in ticks (0 = only explicit
+        ``flush`` calls)."""
+        self.path = path
+        self.every = int(every)
+        open(path, "w").close()        # truncate: one run per file
+
+    def write(self, reg: Registry) -> None:
+        with open(self.path, "a") as f:
+            f.write(json.dumps(snapshot(reg), sort_keys=True) + "\n")
+
+
+_sink: JsonlSink | None = None
+
+
+def set_sink(sink: JsonlSink | None) -> None:
+    global _sink
+    _sink = sink
+
+
+def tick(n: int = 1) -> None:
+    """One loop-iteration heartbeat: drives the periodic in-loop flush.
+    No-op unless metrics are enabled AND a sink with a cadence is set.
+    """
+    reg = get_registry()
+    if not reg.enabled:
+        return
+    reg.ticks += n
+    if _sink is not None and _sink.every > 0 \
+            and reg.ticks % _sink.every == 0:
+        _sink.write(reg)
+
+
+def flush() -> None:
+    """Write one snapshot line now (if metrics are on and a sink is
+    attached)."""
+    reg = get_registry()
+    if reg.enabled and _sink is not None:
+        _sink.write(reg)

@@ -1,0 +1,155 @@
+"""Lightweight span tracing + the one shared wall-clock helper.
+
+``span(name)`` times a stage and records the duration (microseconds)
+into the default registry's histogram ``<name>_us``.  Spans nest —
+a thread-local stack tracks the active path (``Span.path`` is
+``"parent/child"``) — and are exception-safe: the duration records and
+the stack pops even when the body raises.  When the registry is
+disabled, ``span`` returns a shared no-op singleton: one flag check,
+zero allocation.
+
+``timeblock(name)`` is the repo's ONE timing idiom, unifying the
+hand-rolled ``time.perf_counter()`` blocks the serve/train/bench loops
+each grew independently.  Unlike ``span`` it ALWAYS measures (the
+loops need wall-clock for QPS whether or not metrics are on) and only
+the registry recording is gated.  ``tb.sync(value)`` is the one sync
+point: ``jax.block_until_ready`` on any pytree (replacing the
+inconsistent ``jax.block_until_ready(out)`` vs
+``out.block_until_ready()`` idioms that made cross-site latencies
+non-comparable).
+
+    with obs.timeblock("serve.request") as tb:
+        out = serve_fn(batch)
+        tb.sync(out)                 # device work drains inside the clock
+    lat_seconds = tb.seconds         # histogram gets serve.request_us
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.obs import registry as _reg
+
+_tls = threading.local()
+
+
+def _stack() -> list:
+    s = getattr(_tls, "stack", None)
+    if s is None:
+        s = _tls.stack = []
+    return s
+
+
+def _sync(value):
+    """Drain device work referenced by ``value`` (any pytree; None is a
+    no-op) so the enclosing clock measures finished work, not dispatch.
+    """
+    if value is not None:
+        import jax
+        jax.block_until_ready(value)
+    return value
+
+
+class Span:
+    """Timed stage: records ``<name>_us`` on exit (even on exception)."""
+
+    __slots__ = ("name", "path", "seconds", "_t0")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.path = name
+        self.seconds = 0.0
+
+    def __enter__(self) -> "Span":
+        s = _stack()
+        s.append(self.name)
+        self.path = "/".join(s)
+        self._t0 = time.perf_counter()
+        return self
+
+    def sync(self, value):
+        return _sync(value)
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.seconds = time.perf_counter() - self._t0
+        s = _stack()
+        if s and s[-1] == self.name:
+            s.pop()
+        reg = _reg.get_registry()
+        if reg.enabled:
+            reg.observe(self.name + "_us", self.seconds * 1e6)
+        return False
+
+
+class _NullSpan:
+    """Disabled-mode singleton: no clock, no stack, no recording."""
+
+    __slots__ = ()
+    name = path = ""
+    seconds = 0.0
+
+    def __enter__(self):
+        return self
+
+    @staticmethod
+    def sync(value):
+        return value
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def span(name: str):
+    """Context manager timing one stage into histogram ``<name>_us``.
+    Near-zero cost when the registry is disabled."""
+    if not _reg.get_registry().enabled:
+        return _NULL_SPAN
+    return Span(name)
+
+
+def current_path() -> str:
+    """The active span path ("a/b/c"), "" outside any span."""
+    return "/".join(_stack())
+
+
+class Timeblock:
+    """Always-on wall-clock (``seconds`` after exit); registry
+    recording of ``<name>_us`` only when metrics are enabled."""
+
+    __slots__ = ("name", "seconds", "_t0")
+
+    def __init__(self, name: str | None = None):
+        self.name = name
+        self.seconds = 0.0
+
+    def __enter__(self) -> "Timeblock":
+        self._t0 = time.perf_counter()
+        return self
+
+    def sync(self, value):
+        return _sync(value)
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.seconds = time.perf_counter() - self._t0
+        if self.name is not None:
+            reg = _reg.get_registry()
+            if reg.enabled:
+                reg.observe(self.name + "_us", self.seconds * 1e6)
+        return False
+
+    # explicit protocol for regions that don't nest as a `with` block
+    # (e.g. pipeline stages threaded through straight-line code)
+    def start(self) -> "Timeblock":
+        return self.__enter__()
+
+    def stop(self) -> float:
+        self.__exit__(None, None, None)
+        return self.seconds
+
+
+def timeblock(name: str | None = None) -> Timeblock:
+    return Timeblock(name)

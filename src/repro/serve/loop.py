@@ -32,33 +32,74 @@ and ``benchmarks/qps.py --online`` sweeps it.
 
 from __future__ import annotations
 
-import time
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import embedding as E
+from repro.obs.registry import Histogram
 from repro.serve.cache import cache_select, cached_lookup
 from repro.serve.online import OnlineServer
+
+# the serving span taxonomy (docs/observability.md): pre-registered by
+# the drivers when metrics are on, so every snapshot carries the full
+# per-phase histogram catalog even for phases that never fired (e.g.
+# stage/migrate when serving a fully resident store)
+SERVE_PHASES = ("serve.request", "serve.synth", "serve.stage",
+                "serve.lookup", "serve.combine", "serve.retier",
+                "store.stage", "store.migrate")
 
 
 class LoopResult(NamedTuple):
     lat_s: tuple          # per-request wall seconds
     qps: float            # whole stream minus the first request
     steady_qps: float     # second half, re-tier-affected requests excluded
-    p50_us: float
+    p50_us: float         # histogram-derived (obs.registry.Histogram)
+    p95_us: float
     p99_us: float
+    p99_retier_attributed: float  # fraction of the p99 tail's wall time
+                                  # spent inside retier/migrate
     stats: dict           # ServeStats.as_dict() snapshot
 
     def as_dict(self) -> dict:
         d = {"qps": round(self.qps, 1),
              "steady_qps": round(self.steady_qps, 1),
              "p50_us": round(self.p50_us, 1),
-             "p99_us": round(self.p99_us, 1)}
+             "p95_us": round(self.p95_us, 1),
+             "p99_us": round(self.p99_us, 1),
+             # bench_qps/v1 percentile columns (same values, the
+             # stable names the tail-latency items diff against)
+             "latency_p50": round(self.p50_us, 1),
+             "latency_p95": round(self.p95_us, 1),
+             "latency_p99": round(self.p99_us, 1),
+             "p99_retier_attributed": round(
+                 self.p99_retier_attributed, 4)}
         d.update(self.stats)
         return d
+
+
+def _latency_summary(lat_us: np.ndarray, retier_us: np.ndarray,
+                     warm: slice) -> tuple[float, float, float, float]:
+    """(p50, p95, p99, p99_retier_attributed) over the warm window.
+
+    Percentiles come from an ``obs`` streaming histogram — the same
+    estimator replicas merge across shards — not from the raw latency
+    list.  Attribution: of the batches at/above the p99 estimate, the
+    fraction of their summed wall time that was spent inside
+    ``OnlineServer.retier`` (delta re-tier or hier migration) — the
+    quantity the async-retier work must drive to ~0.
+    """
+    lw, rw = lat_us[warm], retier_us[warm]
+    hist = Histogram()
+    hist.record_many(lw)
+    p50, p95, p99 = (hist.percentile(q) for q in (50, 95, 99))
+    tail = lw >= p99
+    denom = float(lw[tail].sum())
+    attributed = float(rw[tail].sum()) / denom if denom > 0 else 0.0
+    return p50, p95, p99, float(min(max(attributed, 0.0), 1.0))
 
 
 def drifting_zipf_batch(cardinalities, batch: int, request: int,
@@ -151,16 +192,18 @@ def run_microbatched_loop(server: OnlineServer,
     """
     first = np.asarray(make_request(0), np.int32).reshape(-1)
     batcher = MicroBatcher(serve_batch, first.shape[0])
-    lat, counts, retiered = [], [], []
+    lat, counts, retiered, retier_s = [], [], [], []
 
     def run_batch(mb: MicroBatch) -> None:
         n_retiers = server.stats.retiers
-        t0 = time.perf_counter()
-        out = serve_fn(mb)
-        jax.block_until_ready(out)
-        lat.append(time.perf_counter() - t0)
+        r0 = server.stats.retier_seconds
+        with obs.timeblock("serve.request") as tb:
+            tb.sync(serve_fn(mb))
+        lat.append(tb.seconds)
         counts.append(mb.count)
         retiered.append(server.stats.retiers > n_retiers)
+        retier_s.append(server.stats.retier_seconds - r0)
+        obs.tick()
 
     pending = batcher.add(first)
     if pending is not None:
@@ -181,12 +224,14 @@ def run_microbatched_loop(server: OnlineServer,
               if not (i == 0 or retiered[i] or retiered[i - 1])]
     if not steady:
         steady = list(range(half, len(lat)))
+    p50, p95, p99, attributed = _latency_summary(
+        lat_arr * 1e6, np.asarray(retier_s) * 1e6, warm)
     return LoopResult(
         lat_s=tuple(lat),
         qps=float(cnt_arr[warm].sum() / lat_arr[warm].sum()),
         steady_qps=float(cnt_arr[steady].sum() / lat_arr[steady].sum()),
-        p50_us=float(np.percentile(lat_arr[warm] * 1e6, 50)),
-        p99_us=float(np.percentile(lat_arr[warm] * 1e6, 99)),
+        p50_us=p50, p95_us=p95, p99_us=p99,
+        p99_retier_attributed=attributed,
         stats=server.stats.as_dict())
 
 
@@ -204,27 +249,32 @@ def run_loop(server: OnlineServer,
     with their successor, which pays the recompile — from the
     steady-state window.
     """
-    lat, retiered = [], []
+    lat, retiered, retier_s = [], [], []
     for r in range(requests):
         idx = make_batch(r)
         n_retiers = server.stats.retiers
-        t0 = time.perf_counter()
-        out = serve_fn(idx)
-        jax.block_until_ready(out)
-        lat.append(time.perf_counter() - t0)
+        r0 = server.stats.retier_seconds
+        with obs.timeblock("serve.request") as tb:
+            tb.sync(serve_fn(idx))
+        lat.append(tb.seconds)
         retiered.append(server.stats.retiers > n_retiers)
+        retier_s.append(server.stats.retier_seconds - r0)
+        obs.tick()
     lat_arr = np.asarray(lat)
 
-    warm = lat_arr[1:] if len(lat) > 1 else lat_arr
+    warm_sl = slice(1, None) if len(lat) > 1 else slice(None)
+    warm = lat_arr[warm_sl]
     steady = [lat_arr[i] for i in range(len(lat) // 2, len(lat))
               if not (i == 0 or retiered[i] or retiered[i - 1])]
     steady = np.asarray(steady) if steady else lat_arr[len(lat) // 2:]
+    p50, p95, p99, attributed = _latency_summary(
+        lat_arr * 1e6, np.asarray(retier_s) * 1e6, warm_sl)
     return LoopResult(
         lat_s=tuple(lat),
         qps=batch / float(warm.mean()),
         steady_qps=batch / float(steady.mean()),
-        p50_us=float(np.percentile(warm * 1e6, 50)),
-        p99_us=float(np.percentile(warm * 1e6, 99)),
+        p50_us=p50, p95_us=p95, p99_us=p99,
+        p99_retier_attributed=attributed,
         stats=server.stats.as_dict())
 
 
@@ -254,15 +304,18 @@ def serve_forward_loop(server: OnlineServer, model, spec, params, *,
     def serve_fn(idx: np.ndarray):
         r = counter["r"]
         counter["r"] += 1
-        b = {"indices": jnp.asarray(idx),
-             "labels": jnp.zeros((idx.shape[0],))}
-        if num_dense:
-            rr = np.random.default_rng(10_000 + r)
-            b["dense"] = jnp.asarray(rr.standard_normal(
-                (idx.shape[0], num_dense)).astype(np.float32))
-        out, hits, gidx = fwd(server.packed, server.cache, params, b)
-        out.block_until_ready()
-        server.observe(gidx, int(hits))
+        with obs.span("serve.synth"):
+            b = {"indices": jnp.asarray(idx),
+                 "labels": jnp.zeros((idx.shape[0],))}
+            if num_dense:
+                rr = np.random.default_rng(10_000 + r)
+                b["dense"] = jnp.asarray(rr.standard_normal(
+                    (idx.shape[0], num_dense)).astype(np.float32))
+        with obs.span("serve.lookup"):
+            out, hits, gidx = fwd(server.packed, server.cache, params, b)
+            jax.block_until_ready(out)
+        with obs.span("serve.combine"):
+            server.observe(gidx, int(hits))
         return out
 
     cards = np.asarray(spec.cardinalities, np.int64)
@@ -308,17 +361,20 @@ def serve_forward_microbatched(server: OnlineServer, model, spec,
     def serve_fn(mb: MicroBatch):
         r = counter["b"]
         counter["b"] += 1
-        b = {"indices": jnp.asarray(mb.indices),
-             "labels": jnp.zeros((mb.indices.shape[0],))}
-        if num_dense:
-            rr = np.random.default_rng(20_000 + r)
-            b["dense"] = jnp.asarray(rr.standard_normal(
-                (mb.indices.shape[0], num_dense)).astype(np.float32))
-        out, hits, gidx = fwd(server.packed, server.cache, params, b,
-                              jnp.asarray(mb.valid))
-        out.block_until_ready()
-        server.observe(gidx, int(hits), valid=mb.valid[:, None],
-                       count=mb.count)
+        with obs.span("serve.synth"):
+            b = {"indices": jnp.asarray(mb.indices),
+                 "labels": jnp.zeros((mb.indices.shape[0],))}
+            if num_dense:
+                rr = np.random.default_rng(20_000 + r)
+                b["dense"] = jnp.asarray(rr.standard_normal(
+                    (mb.indices.shape[0], num_dense)).astype(np.float32))
+        with obs.span("serve.lookup"):
+            out, hits, gidx = fwd(server.packed, server.cache, params, b,
+                                  jnp.asarray(mb.valid))
+            jax.block_until_ready(out)
+        with obs.span("serve.combine"):
+            server.observe(gidx, int(hits), valid=mb.valid[:, None],
+                           count=mb.count)
         return out
 
     cards = np.asarray(spec.cardinalities, np.int64)
@@ -376,20 +432,25 @@ def serve_forward_hier(server: OnlineServer, model, spec, params, *,
     def serve_fn(mb: MicroBatch):
         r = counter["b"]
         counter["b"] += 1
-        g = mb.indices.astype(np.int64) + offsets[None, :]
-        sb = hier.stage(g, skip=server.cache_mask[g], valid=mb.valid[:, None])
-        b = {"indices": jnp.asarray(mb.indices),
-             "labels": jnp.zeros((mb.indices.shape[0],))}
-        if num_dense:
-            rr = np.random.default_rng(20_000 + r)
-            b["dense"] = jnp.asarray(rr.standard_normal(
-                (mb.indices.shape[0], num_dense)).astype(np.float32))
-        out, hits, gidx = fwd(hier.hot_dev, server.cache, params, b,
-                              jnp.asarray(mb.valid), sb.hot_local,
-                              sb.stage_slot, sb.staging)
-        out.block_until_ready()
-        server.observe(gidx, int(hits), valid=mb.valid[:, None],
-                       count=mb.count)
+        with obs.span("serve.stage"):
+            g = mb.indices.astype(np.int64) + offsets[None, :]
+            sb = hier.stage(g, skip=server.cache_mask[g],
+                            valid=mb.valid[:, None])
+        with obs.span("serve.synth"):
+            b = {"indices": jnp.asarray(mb.indices),
+                 "labels": jnp.zeros((mb.indices.shape[0],))}
+            if num_dense:
+                rr = np.random.default_rng(20_000 + r)
+                b["dense"] = jnp.asarray(rr.standard_normal(
+                    (mb.indices.shape[0], num_dense)).astype(np.float32))
+        with obs.span("serve.lookup"):
+            out, hits, gidx = fwd(hier.hot_dev, server.cache, params, b,
+                                  jnp.asarray(mb.valid), sb.hot_local,
+                                  sb.stage_slot, sb.staging)
+            jax.block_until_ready(out)
+        with obs.span("serve.combine"):
+            server.observe(gidx, int(hits), valid=mb.valid[:, None],
+                           count=mb.count)
         return out
 
     cards = np.asarray(spec.cardinalities, np.int64)

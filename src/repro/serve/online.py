@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.packed_store import (
     PackedStore,
     pack,
@@ -55,10 +56,15 @@ class OnlineConfig(NamedTuple):
 @dataclasses.dataclass
 class ServeStats:
     requests: int = 0
-    lookups: int = 0       # individual row lookups served
+    lookups: int = 0       # individual VALID row lookups served
+                           # (micro-batch padding excluded)
     hits: int = 0          # of which from the hot cache
     retiers: int = 0
     rows_moved: int = 0    # tier-crossing rows migrated by repack_delta
+    retier_seconds: float = 0.0  # wall time inside retier()/migrate —
+                                 # the loops diff this per request to
+                                 # attribute tail latency (always on:
+                                 # one perf_counter pair per re-tier)
 
     @property
     def hit_rate(self) -> float:
@@ -162,13 +168,46 @@ class OnlineServer:
                 self.cache_mask[ids] = True
         else:
             self.cache_mask = None
+        if obs.enabled():
+            self._export_gauges()
+
+    def _export_gauges(self) -> None:
+        """Occupancy gauges for the current placement (docs/
+        observability.md): precision-tier row counts always, per-level
+        row counts and bytes in hier mode.  Refreshed after every
+        (re)placement — build, retier, migrate."""
+        obs.gauge("serve.cache.rows", float(self.cache.capacity))
+        if self.hier is not None:
+            tiers = self.hier.tiers
+            for lev, n in self.hier.counts().items():
+                obs.gauge(f"store.{lev}", float(n))     # hot/warm/cold
+            for lev, nb in self.hier.nbytes().items():
+                obs.gauge(f"store.{lev}_bytes", float(nb))
+        else:
+            tiers = packed_tiers(self.host_packed)
+            obs.gauge("store.packed_bytes",
+                      float(self.host_packed.nbytes()))
+        counts = np.bincount(np.asarray(tiers).reshape(-1), minlength=3)
+        for name, n in zip(("int8", "half", "fp32"), counts):
+            obs.gauge(f"store.tier_rows_{name}", float(n))
 
     # -- request path --------------------------------------------------
 
-    def lookup(self, indices: Array) -> Array:
+    def lookup(self, indices: Array, *, valid: Array | None = None,
+               count: int | None = None) -> Array:
         """Eager cache-first gather + traffic fold.  int (...,) -> fp32
         (..., D), bit-identical to ``packed_store.lookup`` on a fresh
-        full pack of the current store."""
+        full pack of the current store.
+
+        ``valid`` (bool, broadcastable to ``indices``) masks padded
+        micro-batch slots out of the hit/lookup accounting AND the
+        priority fold — without it a padded batch served through this
+        eager path would dilute the cache hit-rate denominator and
+        feed phantom row-0 traffic into the Eq. 7 EMA.  ``count`` is
+        the number of live requests in the batch (defaults to 1, the
+        single-request contract).
+        """
+        count = 1 if count is None else count
         if self.hier is not None:
             # the eager form of serve.loop.serve_forward_hier's inner
             # pipeline: cache hits are skipped from staging (they are
@@ -177,17 +216,20 @@ class OnlineServer:
             from repro.serve.cache import cache_select
             from repro.store.hier import combine_rows
             g = np.asarray(indices, np.int64)
-            sb = self.hier.stage(g, skip=self.cache_mask[g])
+            sb = self.hier.stage(g, skip=self.cache_mask[g],
+                                 valid=valid)
             rows = combine_rows(self.hier.hot_dev, sb.hot_local,
                                 sb.stage_slot, sb.staging,
                                 self.lookup_fn())
-            rows, hits = cache_select(self.cache, jnp.asarray(indices),
-                                      rows)
-            self.observe(indices, int(hits))
+            rows, hits = cache_select(
+                self.cache, jnp.asarray(indices), rows,
+                valid=None if valid is None else jnp.asarray(valid))
+            self.observe(indices, int(hits), valid=valid, count=count)
             return rows
-        rows, hits = cached_lookup(self.packed, self.cache, indices,
-                                   self.lookup_fn())
-        self.observe(indices, int(hits))
+        rows, hits = cached_lookup(
+            self.packed, self.cache, indices, self.lookup_fn(),
+            valid=None if valid is None else jnp.asarray(valid))
+        self.observe(indices, int(hits), valid=valid, count=count)
         return rows
 
     def observe(self, indices: Array, hits: int | None = None, *,
@@ -216,17 +258,24 @@ class OnlineServer:
         before = self.stats.requests
         self.stats.requests += count
         if valid is None:
-            self.stats.lookups += int(np.prod(np.shape(indices)))
+            n_lookups = int(np.prod(np.shape(indices)))
             vmask = None
         else:
             # count host-side (valid is the batcher's numpy mask) — no
             # device round-trip inside the timed serving path
             vnp = np.broadcast_to(np.asarray(valid, bool),
                                   np.shape(indices))
-            self.stats.lookups += int(vnp.sum())
+            n_lookups = int(vnp.sum())
             vmask = jnp.asarray(vnp)
+        self.stats.lookups += n_lookups
         if hits is not None:
             self.stats.hits += int(hits)
+        if obs.enabled():
+            obs.inc("serve.requests", count)
+            obs.inc("serve.lookups", n_lookups)
+            if hits is not None:
+                obs.inc("serve.cache.hits", int(hits))
+            obs.gauge("serve.cache.hit_rate", self.stats.hit_rate)
         pcfg = self.online.priority or self.cfg.priority
         self.store = self.store._replace(
             priority=serve_update(self.store.priority, indices, pcfg,
@@ -247,11 +296,22 @@ class OnlineServer:
         migrated.  In hier mode this is the *migration* step instead:
         ``HierStore.migrate`` re-tiers crossed rows AND moves rows
         between HBM / host RAM / disk by their live priority rank.
+
+        Wall time accumulates into ``stats.retier_seconds`` (always —
+        the serve loops attribute tail latency from it) and into the
+        ``serve.retier_us`` histogram when metrics are on.
         """
+        with obs.timeblock("serve.retier") as tb:
+            moved = self._retier_locked()
+        self.stats.retier_seconds += tb.seconds
+        return moved
+
+    def _retier_locked(self) -> bool:
         if self.hier is not None:
             moved = self.hier.migrate(self.store, self.cfg)
             self.stats.retiers += 1
             self.stats.rows_moved += moved["crossed"]
+            obs.inc("serve.retier.rows_moved", moved["crossed"])
             self._place()
             self._rebuild_cache()
             return bool(moved["promoted"] or moved["demoted"]
@@ -264,6 +324,7 @@ class OnlineServer:
             self.host_packed = repack_delta(self.host_packed, self.store,
                                             self.cfg, changed)
             self.stats.rows_moved += int(changed.size)
+            obs.inc("serve.retier.rows_moved", int(changed.size))
             self._place()
         self._rebuild_cache()
         return bool(changed.size)

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import packed_store as ps
 from repro.core.packed_store import (
     _TIER_SHIFT,
@@ -172,6 +173,12 @@ class HierStore:
     # -- lookup path ---------------------------------------------------
 
     def stage(self, gidx, *, skip=None, valid=None) -> StagedBatch:
+        """Span-instrumented wrapper over ``_stage`` (histogram
+        ``store.stage_us`` + staging counters when metrics are on)."""
+        with obs.span("store.stage"):
+            return self._stage(gidx, skip=skip, valid=valid)
+
+    def _stage(self, gidx, *, skip=None, valid=None) -> StagedBatch:
         """Resolve residency per index and stage warm/cold misses.
 
         ``gidx``: int global row ids, any shape.  ``skip`` (bool, same
@@ -220,6 +227,14 @@ class HierStore:
         self.stats.staged_rows += int(uniq.size)
         self.stats.warm_hits += warm_hits
         self.stats.cold_hits += cold_hits
+        if obs.enabled():
+            # staged_rows counts DISTINCT rows shipped (the dedup'd DMA
+            # traffic); miss_dedup is what dedup saved vs naive staging
+            obs.inc("store.staged_rows", int(uniq.size))
+            obs.inc("store.miss_dedup", int(miss_pos.size - uniq.size))
+            obs.inc("store.warm_hits", warm_hits)
+            obs.inc("store.cold_hits", cold_hits)
+            obs.gauge("store.staging_bytes", float(rows.nbytes))
         return StagedBatch(
             hot_local=jnp.asarray(hot_local.reshape(g.shape)),
             stage_slot=jnp.asarray(stage_slot.reshape(g.shape)),
@@ -265,6 +280,22 @@ class HierStore:
         return extract_rows(merge_stores(parts), perm)
 
     def migrate(self, store: QATStore, cfg: FQuantConfig) -> dict:
+        """Span-instrumented wrapper over ``_migrate`` (histogram
+        ``store.migrate_us``, moved-row counters and per-level
+        occupancy gauges when metrics are on)."""
+        with obs.span("store.migrate"):
+            out = self._migrate(store, cfg)
+        if obs.enabled():
+            obs.inc("store.migrate.promoted", out["promoted"])
+            obs.inc("store.migrate.demoted", out["demoted"])
+            obs.inc("store.migrate.crossed", out["crossed"])
+            for k, v in self.counts().items():
+                obs.gauge(f"store.{k}", float(v))
+            for k, v in self.nbytes().items():
+                obs.gauge(f"store.{k}_bytes", float(v))
+        return out
+
+    def _migrate(self, store: QATStore, cfg: FQuantConfig) -> dict:
         """Priority-driven re-tier + re-place across levels.
 
         Recomputes Eq. 8 precision tiers and the budget placement from

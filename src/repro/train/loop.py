@@ -26,11 +26,11 @@ mechanisms are the real ones):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import numpy as np
 
+from repro import obs
 from repro.ckpt.manager import CheckpointManager
 from repro.train.steps import TrainState
 
@@ -78,10 +78,10 @@ def run(state: TrainState, step_fn: Callable, batch_fn: Callable,
 
     for step in range(start, cfg.total_steps):
         batch = batch_fn(step)
-        t0 = time.perf_counter()
-        new_state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        dt = time.perf_counter() - t0
+        with obs.timeblock("train.step") as tb:
+            new_state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])   # device sync: host readback
+        dt = tb.seconds
 
         if np.isfinite(loss):
             state = new_state
@@ -100,19 +100,28 @@ def run(state: TrainState, step_fn: Callable, batch_fn: Callable,
         med = float(np.median(durations))
         if len(durations) >= 5 and dt > cfg.straggler_factor * med:
             stragglers += 1
+            if obs.enabled():
+                obs.inc("train.stragglers")
 
         losses.append(loss)
+        if obs.enabled():
+            obs.inc("train.steps")
+            obs.gauge("train.loss", loss)
+        obs.tick()
         if metrics_cb and step % cfg.log_every == 0:
             metrics_cb(step, metrics)
         if (step + 1) % cfg.ckpt_every == 0:
-            mgr.save(step + 1, state, blocking=not cfg.async_ckpt)
+            with obs.span("train.ckpt_save"):
+                mgr.save(step + 1, state, blocking=not cfg.async_ckpt)
 
     # drain any in-flight async save BEFORE deciding whether the final
     # step is already on disk — the step-boundary save above may still
     # be writing, and latest_step() only sees published manifests
-    mgr.wait()
+    with obs.span("train.ckpt_drain"):
+        mgr.wait()
     if mgr.latest_step() != cfg.total_steps:
-        mgr.save(cfg.total_steps, state, blocking=True)
+        with obs.span("train.ckpt_save"):
+            mgr.save(cfg.total_steps, state, blocking=True)
     return LoopResult(state=state, steps_run=cfg.total_steps - start,
                       resumed_from=resumed_from, losses=losses,
                       stragglers=stragglers, nan_skips=nan_skips)

@@ -1,16 +1,22 @@
 #!/usr/bin/env python
-"""Validate a benchmark JSON file (``bench_qps/v1`` / ``bench_hier/v1``
-/ ``bench_pipeline/v1``).
+"""Validate benchmark / metrics JSON files (``bench_qps/v1`` /
+``bench_hier/v1`` / ``bench_pipeline/v1`` / ``metrics_snapshot/v1``).
 
-    python tools/check_bench_schema.py [BENCH_*.json]
+    python tools/check_bench_schema.py [FILE ...]
+
+Accepts any number of files (default ``BENCH_qps.json``).  ``.jsonl``
+files are validated line by line — every line must be a valid record
+(this is how ``--metrics-out`` snapshot streams are checked).
 
 The schemas are the stable contract between PRs: benchmarks emit them
 (``benchmarks/qps.py --online --serve-batch ...``,
 ``benchmarks/qps_sharded.py``, ``benchmarks/run.py --emit``,
-``benchmarks/hier.py``, ``repro.launch.pipeline --emit``), CI validates
-them, future PRs diff the entries for regressions.  Documented in
-docs/serving.md, docs/storage.md and docs/training.md.  The schema is
-picked from the record's ``"schema"`` key.
+``benchmarks/hier.py``, ``repro.launch.pipeline --emit``), the launch
+drivers emit metrics snapshots (``--metrics-out``), CI validates them,
+future PRs diff the entries for regressions.  Documented in
+docs/serving.md, docs/storage.md, docs/training.md and
+docs/observability.md.  The schema is picked from the record's
+``"schema"`` key.
 
 Exit 0 = valid; exit 1 prints every violation found.
 """
@@ -34,6 +40,17 @@ QPS_TOP = {
     "sweep": list,
 }
 
+# histogram-derived latency columns every online sweep entry carries
+# (serve.loop.LoopResult.as_dict); p99_retier_attributed is the
+# fraction of the p99 tail's wall time spent inside retier/migrate
+LATENCY_KEYS = {
+    "p95_us": numbers.Real,
+    "latency_p50": numbers.Real,
+    "latency_p95": numbers.Real,
+    "latency_p99": numbers.Real,
+    "p99_retier_attributed": numbers.Real,
+}
+
 QPS_SWEEP = {
     "serve_batch": numbers.Integral,
     "qps": numbers.Real,
@@ -48,6 +65,7 @@ QPS_SWEEP = {
     "rows_moved": numbers.Integral,
     "bytes_per_request_fp32": numbers.Integral,
     "bytes_per_request_packed": numbers.Integral,
+    **LATENCY_KEYS,
 }
 
 HIER_TOP = {
@@ -81,6 +99,7 @@ HIER_SWEEP = {
     "migrations": numbers.Integral,
     "promoted": numbers.Integral,
     "demoted": numbers.Integral,
+    **LATENCY_KEYS,
 }
 
 
@@ -114,10 +133,31 @@ def _check_sweep(rec: dict, spec: dict, errors: list) -> list[dict]:
     return entries
 
 
+def _is_num(v) -> bool:
+    return isinstance(v, numbers.Real) and not isinstance(v, bool)
+
+
+def _check_latency(entries: list[dict], errors: list) -> None:
+    """Shared latency-column invariants for online sweep entries."""
+    for i, e in enumerate(entries):
+        att = e.get("p99_retier_attributed")
+        if _is_num(att) and not 0.0 <= att <= 1.0:
+            errors.append(f"sweep[{i}]: p99_retier_attributed {att} "
+                          "out of [0, 1]")
+        ps = [e.get(k) for k in ("latency_p50", "latency_p95",
+                                 "latency_p99")]
+        if all(_is_num(p) for p in ps) and \
+                not (ps[0] <= ps[1] + 1e-9 <= ps[2] + 2e-9):
+            errors.append(f"sweep[{i}]: latency percentiles not "
+                          f"monotone (p50 {ps[0]} / p95 {ps[1]} / "
+                          f"p99 {ps[2]})")
+
+
 def _validate_qps(rec: dict) -> list[str]:
     errors: list[str] = []
     _check_keys(rec, QPS_TOP, "top-level", errors)
     entries = _check_sweep(rec, QPS_SWEEP, errors)
+    _check_latency(entries, errors)
     batches = [e.get("serve_batch") for e in entries]
     if len(set(batches)) != len(batches):
         errors.append("sweep: duplicate serve_batch entries")
@@ -134,6 +174,7 @@ def _validate_hier(rec: dict) -> list[str]:
     errors: list[str] = []
     _check_keys(rec, HIER_TOP, "top-level", errors)
     entries = _check_sweep(rec, HIER_SWEEP, errors)
+    _check_latency(entries, errors)
     fracs = [e.get("hbm_budget_fraction") for e in entries]
     if len(set(fracs)) != len(fracs):
         errors.append("sweep: duplicate hbm_budget_fraction entries")
@@ -236,10 +277,82 @@ def _validate_pipeline(rec: dict) -> list[str]:
     return errors
 
 
+METRICS_TOP = {
+    "schema": str,
+    "seq": numbers.Integral,
+    "ticks": numbers.Integral,
+    "counters": dict,
+    "gauges": dict,
+    "histograms": dict,
+}
+
+METRICS_HIST = {
+    "count": numbers.Integral,
+    "sum": numbers.Real,
+    "min": numbers.Real,
+    "max": numbers.Real,
+    "p50": numbers.Real,
+    "p95": numbers.Real,
+    "p99": numbers.Real,
+    "buckets": dict,
+}
+
+
+def _validate_metrics(rec: dict) -> list[str]:
+    """One ``metrics_snapshot/v1`` record (one ``--metrics-out`` JSONL
+    line): name -> number maps plus per-histogram summaries whose
+    percentiles must be ordered inside the [min, max] envelope and
+    whose sparse bucket counts must re-add to ``count`` (the offline
+    re-merge contract)."""
+    errors: list[str] = []
+    _check_keys(rec, METRICS_TOP, "top-level", errors)
+    if errors:
+        return errors
+    for kind in ("counters", "gauges"):
+        for name, val in rec[kind].items():
+            if not _is_num(val):
+                errors.append(f"{kind}[{name!r}]: not a number")
+        if kind == "counters":
+            for name, val in rec[kind].items():
+                if _is_num(val) and val < 0:
+                    errors.append(f"counters[{name!r}]: negative")
+    for name, h in rec["histograms"].items():
+        where = f"histograms[{name!r}]"
+        if not isinstance(h, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        _check_keys(h, METRICS_HIST, where, errors)
+        if any(e.startswith(where) for e in errors):
+            continue
+        n = h["count"]
+        if n < 0:
+            errors.append(f"{where}: negative count")
+        bsum = 0
+        for idx, c in h["buckets"].items():
+            if not (isinstance(c, numbers.Integral) and c > 0
+                    and str(idx).isdigit()):
+                errors.append(f"{where}: bad bucket {idx!r}: {c!r}")
+                break
+            bsum += int(c)
+        else:
+            if bsum != n:
+                errors.append(f"{where}: bucket counts sum to {bsum}, "
+                              f"count is {n}")
+        if n > 0 and not (h["min"] - 1e-9 <= h["p50"]
+                          <= h["p95"] + 1e-9 <= h["p99"] + 2e-9
+                          <= h["max"] + 3e-9):
+            errors.append(
+                f"{where}: percentiles not ordered within [min, max] "
+                f"(min {h['min']} p50 {h['p50']} p95 {h['p95']} "
+                f"p99 {h['p99']} max {h['max']})")
+    return errors
+
+
 SCHEMAS = {
     "bench_qps/v1": _validate_qps,
     "bench_hier/v1": _validate_hier,
     "bench_pipeline/v1": _validate_pipeline,
+    "metrics_snapshot/v1": _validate_metrics,
 }
 
 
@@ -252,23 +365,50 @@ def validate(rec: dict) -> list[str]:
     return fn(rec)
 
 
+def _load_records(path: str) -> list[dict]:
+    """One record per file, or one per line for ``.jsonl`` streams."""
+    with open(path) as f:
+        text = f.read()
+    if path.endswith(".jsonl"):
+        return [json.loads(line) for line in text.splitlines()
+                if line.strip()]
+    return [json.loads(text)]
+
+
 def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_qps.json"
-    try:
-        with open(path) as f:
-            rec = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"{path}: unreadable: {e}")
-        return 1
-    errors = validate(rec)
-    for err in errors:
-        print(f"{path}: {err}")
-    if not errors:
-        sweep = rec.get("sweep")
-        detail = (f"{len(sweep)} sweep entries" if isinstance(sweep, list)
-                  else "single record")
-        print(f"{path}: valid {rec['schema']} ({detail})")
-    return 1 if errors else 0
+    paths = sys.argv[1:] or ["BENCH_qps.json"]
+    failed = False
+    for path in paths:
+        try:
+            recs = _load_records(path)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable: {e}")
+            failed = True
+            continue
+        if not recs:
+            print(f"{path}: no records")
+            failed = True
+            continue
+        file_errors = 0
+        for ln, rec in enumerate(recs, 1):
+            where = f"{path}:{ln}" if len(recs) > 1 else path
+            errors = validate(rec)
+            for err in errors:
+                print(f"{where}: {err}")
+            file_errors += len(errors)
+        if file_errors:
+            failed = True
+        else:
+            rec = recs[-1]
+            sweep = rec.get("sweep")
+            if isinstance(sweep, list):
+                detail = f"{len(sweep)} sweep entries"
+            elif len(recs) > 1:
+                detail = f"{len(recs)} records"
+            else:
+                detail = "single record"
+            print(f"{path}: valid {rec['schema']} ({detail})")
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
