@@ -32,7 +32,8 @@ BENCH_SCHEMA = "bench_hier/v1"
 SWEEP_KEYS = ("qps", "steady_qps", "p50_us", "p95_us", "p99_us",
               "lookups",
               "latency_p50", "latency_p95", "latency_p99",
-              "p99_retier_attributed",
+              "p99_retier_attributed", "p99_while_retiering",
+              "swaps", "shadow_builds",
               "cache_hit_rate", "hier_miss_rate", "warm_hits",
               "cold_hits", "staged_rows", "migrations", "promoted",
               "demoted", "hot_rows", "warm_rows", "cold_rows")
@@ -41,7 +42,7 @@ SWEEP_KEYS = ("qps", "steady_qps", "p50_us", "p95_us", "p99_us",
 def run_hier_sweep(fractions=(0.05, 0.15, 0.4, 1.0), requests=256,
                    serve_batch=8, cache_rows=64, retier_every=64,
                    drift=4.0, ratio=0.5, a=1.2, seed=0,
-                   store_dir=None) -> dict:
+                   store_dir=None, retier_async=False) -> dict:
     """One ``bench_hier/v1`` record over HBM budget fractions.
 
     Every fraction serves the same stream from the same initial store;
@@ -62,7 +63,8 @@ def run_hier_sweep(fractions=(0.05, 0.15, 0.4, 1.0), requests=256,
         server = OnlineServer(
             store, cfg,
             OnlineConfig(cache_rows=cache_rows,
-                         retier_every=retier_every),
+                         retier_every=retier_every,
+                         retier_async=retier_async),
             hier=HierConfig(
                 hbm_budget_bytes=budget,
                 host_budget_bytes=budget,
@@ -71,6 +73,7 @@ def run_hier_sweep(fractions=(0.05, 0.15, 0.4, 1.0), requests=256,
             server, setup.model, spec, params, serve_batch=serve_batch,
             requests=requests, drift=drift, a=a,
             num_dense=setup.ds.cfg.num_dense, seed=seed)
+        server.drain_shadow()   # join any in-flight shadow build
         entry = {"hbm_budget_fraction": float(frac),
                  "hbm_budget_bytes": budget}
         d = result.as_dict()
@@ -80,7 +83,8 @@ def run_hier_sweep(fractions=(0.05, 0.15, 0.4, 1.0), requests=256,
     return {"schema": BENCH_SCHEMA, "benchmark": "hier_budget_sweep",
             "requests": requests, "serve_batch": serve_batch,
             "cache_rows": cache_rows, "retier_every": retier_every,
-            "drift": drift, "full_store_bytes": int(full_bytes),
+            "drift": drift, "retier_async": retier_async,
+            "full_store_bytes": int(full_bytes),
             "packed_fp32_ratio": round(full_bytes / fp32, 4),
             "sweep": sweep}
 
@@ -104,6 +108,9 @@ if __name__ == "__main__":
     ap.add_argument("--fractions", default=None, metavar="F[,F...]")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--serve-batch", type=int, default=8)
+    ap.add_argument("--retier-async", action="store_true",
+                    help="chunked shadow migration + atomic swap "
+                         "instead of the synchronous migrate")
     ap.add_argument("--emit", default="BENCH_hier.json", metavar="PATH")
     args = ap.parse_args()
     fracs = tuple(float(x) for x in args.fractions.split(",")) \
@@ -112,7 +119,7 @@ if __name__ == "__main__":
     rec = run_hier_sweep(
         fractions=fracs,
         requests=args.requests or (64 if args.fast else 256),
-        serve_batch=args.serve_batch)
+        serve_batch=args.serve_batch, retier_async=args.retier_async)
     write_bench_json(rec, args.emit)
     print(json.dumps(rec))
     print(f"wrote {args.emit}")

@@ -26,16 +26,19 @@ import sys
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 TOP_ECHO = ("requests", "cache_rows", "retier_every", "drift",
-            "packed_fp32_ratio", "bytes_per_request_fp32",
-            "bytes_per_request_packed")
-SWEEP_KEYS = ("serve_batch", "qps", "steady_qps", "p50_us", "p99_us",
+            "retier_async", "packed_fp32_ratio",
+            "bytes_per_request_fp32", "bytes_per_request_packed")
+SWEEP_KEYS = ("serve_batch", "qps", "steady_qps", "p50_us", "p95_us",
+              "p99_us", "latency_p50", "latency_p95", "latency_p99",
+              "p99_retier_attributed", "p99_while_retiering",
               "requests", "lookups", "hits", "cache_hit_rate",
-              "retiers", "rows_moved", "bytes_per_request_fp32",
-              "bytes_per_request_packed")
+              "retiers", "rows_moved", "swaps", "shadow_builds",
+              "bytes_per_request_fp32", "bytes_per_request_packed")
 
 
 def serve_record(mesh: int, requests: int, serve_batch: int,
-                 retier_every: int, arch: str = "dlrm-rm2") -> dict:
+                 retier_every: int, arch: str = "dlrm-rm2",
+                 retier_async: bool = False) -> dict:
     """One online micro-batched serve run in a subprocess -> its JSON
     record (the last stdout line)."""
     env = dict(os.environ)
@@ -46,6 +49,8 @@ def serve_record(mesh: int, requests: int, serve_batch: int,
            "--requests", str(requests), "--mesh", str(mesh),
            "--online", "--serve-batch", str(serve_batch),
            "--retier-every", str(retier_every)]
+    if retier_async:
+        cmd.append("--retier-async")
     r = subprocess.run(cmd, capture_output=True, text=True, env=env,
                        cwd=REPO)
     rec = None
@@ -60,12 +65,14 @@ def serve_record(mesh: int, requests: int, serve_batch: int,
 
 
 def mesh_bench(mesh: int, serve_batches=(1, 8), requests: int = 48,
-               retier_every: int = 24) -> dict:
+               retier_every: int = 24,
+               retier_async: bool = False) -> dict:
     """One validated ``bench_qps/v1`` record: serve_batch sweep at a
     fixed mesh size (the sweep axis must stay serve_batch — the schema
     pins bytes_per_request as sweep-invariant, which only holds when
     every entry serves the same stream against the same pack)."""
-    recs = [serve_record(mesh, requests, sb, retier_every)
+    recs = [serve_record(mesh, requests, sb, retier_every,
+                         retier_async=retier_async)
             for sb in serve_batches]
     out = {"schema": "bench_qps/v1",
            "benchmark": "qps_online_microbatch_sharded",
@@ -105,6 +112,8 @@ if __name__ == "__main__":
     ap.add_argument("--meshes", default="1,2,4")
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--serve-batches", default="1,8")
+    ap.add_argument("--retier-async", action="store_true",
+                    help="serve with the chunked shadow build + swap")
     ap.add_argument("--emit-dir", default=None, metavar="DIR",
                     help="write BENCH_qps_mesh<N>.json per mesh size "
                          "(validated bench_qps/v1)")
@@ -113,7 +122,8 @@ if __name__ == "__main__":
     sbs = tuple(int(x) for x in args.serve_batches.split(",")
                 if x.strip())
     for n in meshes:
-        rec = mesh_bench(n, sbs, requests=args.requests)
+        rec = mesh_bench(n, sbs, requests=args.requests,
+                         retier_async=args.retier_async)
         if args.emit_dir:
             path = os.path.join(args.emit_dir, f"BENCH_qps_mesh{n}.json")
             with open(path, "w") as f:

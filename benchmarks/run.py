@@ -43,6 +43,9 @@ def main() -> None:
                          "pipeline); skips the CSV jobs")
     ap.add_argument("--serve-batches", default="1,8,32",
                     help="fusion factors for --emit (comma-separated)")
+    ap.add_argument("--retier-async", action="store_true",
+                    help="--emit serves with the chunked shadow build "
+                         "+ swap instead of the synchronous repack")
     args = ap.parse_args()
     fast = args.fast
 
@@ -69,7 +72,8 @@ def main() -> None:
         rec = qps.run_online_sweep(
             qps._parse_serve_batches(args.serve_batches),
             requests=96 if fast else 384,
-            retier_every=32 if fast else 128)
+            retier_every=32 if fast else 128,
+            retier_async=args.retier_async)
         qps.write_bench_json(rec, args.emit)
         print(f"wrote {args.emit}")
         return

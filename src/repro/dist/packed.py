@@ -72,6 +72,24 @@ def shard_packed(packed: PackedStore, mesh,
                          for leaf, spec in zip(packed, specs)))
 
 
+def place_packed(packed: PackedStore, mesh=None,
+                 axis: str = "model") -> PackedStore:
+    """Device placement matching the serving path: ``shard_packed``
+    under a mesh, plain async ``device_put`` of every leaf otherwise.
+
+    The ONE placement helper the online server and the shadow-swap
+    staging share (``serve.shadow`` pre-places the finished shadow
+    store with this before the atomic swap, so the swap itself is a
+    pointer flip, not a transfer): dispatch is asynchronous in both
+    modes — the host returns before the copy lands and jit sequences
+    the transfer before first use.
+    """
+    if mesh is not None:
+        return shard_packed(packed, mesh, axis)
+    return PackedStore(*(jax.device_put(np.asarray(leaf))
+                         for leaf in packed))
+
+
 def shard_nbytes(packed: PackedStore, n: int) -> int:
     """Per-device bytes of ``packed`` row-sharded ``n`` ways.
 

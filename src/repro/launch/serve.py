@@ -16,6 +16,11 @@ fp32), every served batch is folded into the Eq. 7 priority EMA, and
 every ``--retier-every`` requests tier-crossing rows are migrated with
 ``packed_store.repack_delta`` (re-sharded under ``--mesh N``).  Payload
 shapes change at re-tier boundaries, so jit recompiles exactly there.
+``--retier-async`` moves the repack off the request path instead: a
+shadow generation builds in bounded chunks across requests (with the
+recompile pre-warmed on a side thread) and swaps in atomically —
+``--verify-swap`` asserts bit-identity with a synchronous repack at
+every swap (see ``repro.serve.shadow`` and docs/serving.md).
 
 ``--serve-batch N`` (with ``--online``) switches to the micro-batched
 pipeline: single-user requests accumulate into fixed-shape (N, F)
@@ -90,6 +95,20 @@ def main() -> None:
                     help="directory for the cold shard files + "
                          "manifest (required when --host-budget-mb "
                          "forces a cold level)")
+    ap.add_argument("--retier-async", action="store_true",
+                    help="shadow-build re-tiers off the request path "
+                         "(repro.serve.shadow): the boundary request "
+                         "opens a shadow store, later requests advance "
+                         "it in bounded chunks, and the finished "
+                         "generation is swapped in atomically")
+    ap.add_argument("--shadow-rows", type=int, default=512,
+                    help="shadow build budget in rows per served "
+                         "request (--retier-async)")
+    ap.add_argument("--verify-swap", action="store_true",
+                    help="at every shadow swap, assert the staged "
+                         "generation is bit-identical to a full pack() "
+                         "at the snapshot fold state (--retier-async; "
+                         "O(vocab) per swap — CI stress smoke)")
     ap.add_argument("--verify-hier", action="store_true",
                     help="after serving, assert the hierarchical "
                          "lookup is bit-identical to a fully "
@@ -110,6 +129,10 @@ def main() -> None:
         ap.error("--hbm-budget-mb requires --online --serve-batch N")
     if args.verify_hier and args.hbm_budget_mb <= 0:
         ap.error("--verify-hier requires --hbm-budget-mb")
+    if args.retier_async and not args.online:
+        ap.error("--retier-async requires --online")
+    if args.verify_swap and not args.retier_async:
+        ap.error("--verify-swap requires --retier-async")
 
     from repro.launch import force_host_device_count
     force_host_device_count(args.mesh)
@@ -199,7 +222,10 @@ def main() -> None:
         server = OnlineServer(
             store, cfg,
             OnlineConfig(cache_rows=args.cache_rows,
-                         retier_every=args.retier_every),
+                         retier_every=args.retier_every,
+                         retier_async=args.retier_async,
+                         shadow_rows_per_step=args.shadow_rows,
+                         verify_swap=args.verify_swap),
             mesh=mesh, hier=hier_cfg)
         if server.hier is not None:
             packed_bytes = sum(server.hier.nbytes().values())
@@ -233,6 +259,16 @@ def main() -> None:
                 requests=args.requests, drift=args.drift,
                 num_dense=num_dense)
             shape_note = f"{args.requests} requests x{args.batch}"
+        if args.retier_async:
+            # finish any in-flight shadow build synchronously so the
+            # process exits on a committed generation (verify_swap
+            # covers this final swap too)
+            server.drain_shadow()
+            print(f"shadow: {server.stats.shadow_builds} builds, "
+                  f"{server.stats.shadow_chunks} chunks, "
+                  f"{server.stats.swaps} swaps"
+                  + (" (bit-identity verified at every swap)"
+                     if args.verify_swap else ""))
         print(f"{shape_note}: "
               f"p50 {result.p50_us:.0f}us p99 {result.p99_us:.0f}us "
               f"steady {result.steady_qps:.0f} qps "
@@ -243,6 +279,7 @@ def main() -> None:
         rec.update(result.as_dict())
         rec.update({"cache_rows": args.cache_rows,
                     "retier_every": args.retier_every,
+                    "retier_async": args.retier_async,
                     "drift": args.drift,
                     "serve_batch": args.serve_batch,
                     "packed_mib": round(packed_bytes / 2 ** 20, 3),

@@ -14,6 +14,10 @@ Layers live, traffic-adaptive state over the offline artifacts of
            fusion of single-user requests, one forward per N requests)
            + the hierarchical-store forward (``serve_forward_hier``:
            host staging of warm/cold misses + fused hot gather)
+  shadow   copy-on-write shadow re-tier: ``ShadowRepack`` /
+           ``ShadowMigrate`` build the next store generation in bounded
+           chunks off the request path; ``OnlineServer`` swaps it in
+           atomically (``OnlineConfig.retier_async``)
 
 Entry points: ``repro.launch.serve --online`` (driver;
 ``--hbm-budget-mb`` switches to the hierarchical store) and
@@ -47,4 +51,8 @@ from repro.serve.online import (  # noqa: F401
     OnlineConfig,
     OnlineServer,
     ServeStats,
+)
+from repro.serve.shadow import (  # noqa: F401
+    ShadowMigrate,
+    ShadowRepack,
 )

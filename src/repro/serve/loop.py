@@ -50,7 +50,8 @@ from repro.serve.online import OnlineServer
 # stage/migrate when serving a fully resident store)
 SERVE_PHASES = ("serve.request", "serve.synth", "serve.stage",
                 "serve.lookup", "serve.combine", "serve.retier",
-                "store.stage", "store.migrate")
+                "serve.shadow.chunk", "serve.shadow.stage",
+                "serve.shadow.swap", "store.stage", "store.migrate")
 
 
 class LoopResult(NamedTuple):
@@ -62,6 +63,11 @@ class LoopResult(NamedTuple):
     p99_us: float
     p99_retier_attributed: float  # fraction of the p99 tail's wall time
                                   # spent inside retier/migrate
+    p99_while_retiering: float    # p99 over ONLY the requests that
+                                  # overlapped a re-tier: sync repack,
+                                  # shadow build/chunk/stage or swap
+                                  # (0.0 when the stream had none) —
+                                  # the number the tail budget gates
     stats: dict           # ServeStats.as_dict() snapshot
 
     def as_dict(self) -> dict:
@@ -76,14 +82,17 @@ class LoopResult(NamedTuple):
              "latency_p95": round(self.p95_us, 1),
              "latency_p99": round(self.p99_us, 1),
              "p99_retier_attributed": round(
-                 self.p99_retier_attributed, 4)}
+                 self.p99_retier_attributed, 4),
+             "p99_while_retiering": round(self.p99_while_retiering, 1)}
         d.update(self.stats)
         return d
 
 
 def _latency_summary(lat_us: np.ndarray, retier_us: np.ndarray,
-                     warm: slice) -> tuple[float, float, float, float]:
-    """(p50, p95, p99, p99_retier_attributed) over the warm window.
+                     warm: slice, window=None
+                     ) -> tuple[float, float, float, float, float]:
+    """(p50, p95, p99, p99_retier_attributed, p99_while_retiering) over
+    the warm window.
 
     Percentiles come from an ``obs`` streaming histogram — the same
     estimator replicas merge across shards — not from the raw latency
@@ -91,6 +100,12 @@ def _latency_summary(lat_us: np.ndarray, retier_us: np.ndarray,
     fraction of their summed wall time that was spent inside
     ``OnlineServer.retier`` (delta re-tier or hier migration) — the
     quantity the async-retier work must drive to ~0.
+
+    ``window`` (bool per batch, or None) marks batches that overlapped
+    re-tier activity — a synchronous repack, or any shadow
+    build/chunk/stage/swap; ``p99_while_retiering`` is the p99 over
+    ONLY those batches (0.0 when there are none), i.e. the tail a
+    client sees *while* the store is re-tiering.
     """
     lw, rw = lat_us[warm], retier_us[warm]
     hist = Histogram()
@@ -99,7 +114,15 @@ def _latency_summary(lat_us: np.ndarray, retier_us: np.ndarray,
     tail = lw >= p99
     denom = float(lw[tail].sum())
     attributed = float(rw[tail].sum()) / denom if denom > 0 else 0.0
-    return p50, p95, p99, float(min(max(attributed, 0.0), 1.0))
+    p99_while = 0.0
+    if window is not None:
+        ww = np.asarray(window, bool)[warm]
+        if ww.any():
+            wh = Histogram()
+            wh.record_many(lw[ww])
+            p99_while = float(wh.percentile(99))
+    return (p50, p95, p99, float(min(max(attributed, 0.0), 1.0)),
+            p99_while)
 
 
 def drifting_zipf_batch(cardinalities, batch: int, request: int,
@@ -192,17 +215,23 @@ def run_microbatched_loop(server: OnlineServer,
     """
     first = np.asarray(make_request(0), np.int32).reshape(-1)
     batcher = MicroBatcher(serve_batch, first.shape[0])
-    lat, counts, retiered, retier_s = [], [], [], []
+    lat, counts, retiered, retier_s, window = [], [], [], [], []
 
     def run_batch(mb: MicroBatch) -> None:
         n_retiers = server.stats.retiers
         r0 = server.stats.retier_seconds
+        c0 = server.stats.shadow_chunks
+        s0 = server.stats.swaps
+        active0 = server.shadow is not None
         with obs.timeblock("serve.request") as tb:
             tb.sync(serve_fn(mb))
         lat.append(tb.seconds)
         counts.append(mb.count)
         retiered.append(server.stats.retiers > n_retiers)
         retier_s.append(server.stats.retier_seconds - r0)
+        window.append(active0 or retiered[-1]
+                      or server.stats.shadow_chunks > c0
+                      or server.stats.swaps > s0)
         obs.tick()
 
     pending = batcher.add(first)
@@ -224,14 +253,15 @@ def run_microbatched_loop(server: OnlineServer,
               if not (i == 0 or retiered[i] or retiered[i - 1])]
     if not steady:
         steady = list(range(half, len(lat)))
-    p50, p95, p99, attributed = _latency_summary(
-        lat_arr * 1e6, np.asarray(retier_s) * 1e6, warm)
+    p50, p95, p99, attributed, p99_while = _latency_summary(
+        lat_arr * 1e6, np.asarray(retier_s) * 1e6, warm, window)
     return LoopResult(
         lat_s=tuple(lat),
         qps=float(cnt_arr[warm].sum() / lat_arr[warm].sum()),
         steady_qps=float(cnt_arr[steady].sum() / lat_arr[steady].sum()),
         p50_us=p50, p95_us=p95, p99_us=p99,
         p99_retier_attributed=attributed,
+        p99_while_retiering=p99_while,
         stats=server.stats.as_dict())
 
 
@@ -249,16 +279,22 @@ def run_loop(server: OnlineServer,
     with their successor, which pays the recompile — from the
     steady-state window.
     """
-    lat, retiered, retier_s = [], [], []
+    lat, retiered, retier_s, window = [], [], [], []
     for r in range(requests):
         idx = make_batch(r)
         n_retiers = server.stats.retiers
         r0 = server.stats.retier_seconds
+        c0 = server.stats.shadow_chunks
+        s0 = server.stats.swaps
+        active0 = server.shadow is not None
         with obs.timeblock("serve.request") as tb:
             tb.sync(serve_fn(idx))
         lat.append(tb.seconds)
         retiered.append(server.stats.retiers > n_retiers)
         retier_s.append(server.stats.retier_seconds - r0)
+        window.append(active0 or retiered[-1]
+                      or server.stats.shadow_chunks > c0
+                      or server.stats.swaps > s0)
         obs.tick()
     lat_arr = np.asarray(lat)
 
@@ -267,14 +303,15 @@ def run_loop(server: OnlineServer,
     steady = [lat_arr[i] for i in range(len(lat) // 2, len(lat))
               if not (i == 0 or retiered[i] or retiered[i - 1])]
     steady = np.asarray(steady) if steady else lat_arr[len(lat) // 2:]
-    p50, p95, p99, attributed = _latency_summary(
-        lat_arr * 1e6, np.asarray(retier_s) * 1e6, warm_sl)
+    p50, p95, p99, attributed, p99_while = _latency_summary(
+        lat_arr * 1e6, np.asarray(retier_s) * 1e6, warm_sl, window)
     return LoopResult(
         lat_s=tuple(lat),
         qps=batch / float(warm.mean()),
         steady_qps=batch / float(steady.mean()),
         p50_us=p50, p95_us=p95, p99_us=p99,
         p99_retier_attributed=attributed,
+        p99_while_retiering=p99_while,
         stats=server.stats.as_dict())
 
 
@@ -300,6 +337,15 @@ def serve_forward_loop(server: OnlineServer, model, spec, params, *,
         return model.head(net, emb, b), hits, gidx
 
     counter = {"r": 0}
+    last: dict = {}
+
+    # shadow staging pre-compiles the forward for the new payload
+    # shapes off-thread, so the post-swap request hits the jit cache
+    def _warm(staged) -> None:
+        if "b" in last:
+            jax.block_until_ready(
+                fwd(staged, server.cache, params, last["b"]))
+    server.warmup_fn = _warm
 
     def serve_fn(idx: np.ndarray):
         r = counter["r"]
@@ -311,6 +357,7 @@ def serve_forward_loop(server: OnlineServer, model, spec, params, *,
                 rr = np.random.default_rng(10_000 + r)
                 b["dense"] = jnp.asarray(rr.standard_normal(
                     (idx.shape[0], num_dense)).astype(np.float32))
+            last["b"] = b
         with obs.span("serve.lookup"):
             out, hits, gidx = fwd(server.packed, server.cache, params, b)
             jax.block_until_ready(out)
@@ -357,6 +404,14 @@ def serve_forward_microbatched(server: OnlineServer, model, spec,
         return model.head(net, emb, b), hits, gidx
 
     counter = {"b": 0}
+    last: dict = {}
+
+    def _warm(staged) -> None:
+        if "a" in last:
+            b, valid = last["a"]
+            jax.block_until_ready(
+                fwd(staged, server.cache, params, b, valid))
+    server.warmup_fn = _warm
 
     def serve_fn(mb: MicroBatch):
         r = counter["b"]
@@ -368,9 +423,11 @@ def serve_forward_microbatched(server: OnlineServer, model, spec,
                 rr = np.random.default_rng(20_000 + r)
                 b["dense"] = jnp.asarray(rr.standard_normal(
                     (mb.indices.shape[0], num_dense)).astype(np.float32))
+            valid = jnp.asarray(mb.valid)
+            last["a"] = (b, valid)
         with obs.span("serve.lookup"):
             out, hits, gidx = fwd(server.packed, server.cache, params, b,
-                                  jnp.asarray(mb.valid))
+                                  valid)
             jax.block_until_ready(out)
         with obs.span("serve.combine"):
             server.observe(gidx, int(hits), valid=mb.valid[:, None],
@@ -428,6 +485,15 @@ def serve_forward_hier(server: OnlineServer, model, spec, params, *,
         return model.head(net, emb, b), hits, gidx
 
     counter = {"b": 0}
+    last: dict = {}
+
+    def _warm(staged) -> None:
+        if "a" in last:
+            b, valid, hot_local, stage_slot, staging = last["a"]
+            jax.block_until_ready(
+                fwd(staged, server.cache, params, b, valid, hot_local,
+                    stage_slot, staging))
+    server.warmup_fn = _warm
 
     def serve_fn(mb: MicroBatch):
         r = counter["b"]
@@ -444,9 +510,12 @@ def serve_forward_hier(server: OnlineServer, model, spec, params, *,
                 b["dense"] = jnp.asarray(rr.standard_normal(
                     (mb.indices.shape[0], num_dense)).astype(np.float32))
         with obs.span("serve.lookup"):
+            valid = jnp.asarray(mb.valid)
+            last["a"] = (b, valid, sb.hot_local, sb.stage_slot,
+                         sb.staging)
             out, hits, gidx = fwd(hier.hot_dev, server.cache, params, b,
-                                  jnp.asarray(mb.valid), sb.hot_local,
-                                  sb.stage_slot, sb.staging)
+                                  valid, sb.hot_local, sb.stage_slot,
+                                  sb.staging)
             jax.block_until_ready(out)
         with obs.span("serve.combine"):
             server.observe(gidx, int(hits), valid=mb.valid[:, None],

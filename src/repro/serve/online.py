@@ -21,11 +21,21 @@ boundaries and nowhere else.
 Re-tiering itself is ``packed_store.repack_delta``: only tier-crossing
 rows migrate, everything else keeps its payload bytes, and the result is
 bit-identical to a fresh full ``pack`` of the same store.
+
+With ``OnlineConfig.retier_async`` the re-tier instead runs as a
+**shadow build** (``serve.shadow``): the boundary request only opens the
+shadow, every subsequent request advances it by a bounded row budget,
+and the finished generation is device-staged (with the driver's jitted
+forward pre-compiled on a warm-up thread) before one atomic pointer
+swap — the state machine is build -> chunk -> [verify ->] swap, with
+``discard_shadow`` as the crash-before-swap exit.  The swapped result is
+bit-identical to a synchronous re-tier at the snapshot fold state.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import NamedTuple
 
 import jax
@@ -51,6 +61,12 @@ class OnlineConfig(NamedTuple):
     cache_rows: int = 0      # top-K fp32 hot rows (0 = cache disabled)
     retier_every: int = 0    # requests between delta re-tiers (0 = never)
     priority: PriorityConfig | None = None  # None -> FQuantConfig's
+    retier_async: bool = False    # shadow-build re-tiers off the request
+                                  # path instead of synchronous repacks
+    shadow_rows_per_step: int = 512  # shadow build budget per live
+                                     # request (rows; scaled by batch)
+    verify_swap: bool = False     # O(V) bit-identity check vs pack() at
+                                  # the snapshot fold state, every swap
 
 
 @dataclasses.dataclass
@@ -65,6 +81,9 @@ class ServeStats:
                                  # the loops diff this per request to
                                  # attribute tail latency (always on:
                                  # one perf_counter pair per re-tier)
+    shadow_builds: int = 0   # shadow generations opened
+    shadow_chunks: int = 0   # bounded build steps taken on request path
+    swaps: int = 0           # shadow generations atomically swapped in
 
     @property
     def hit_rate(self) -> float:
@@ -73,7 +92,8 @@ class ServeStats:
     def as_dict(self) -> dict:
         return {"requests": self.requests, "lookups": self.lookups,
                 "hits": self.hits, "cache_hit_rate": round(self.hit_rate, 4),
-                "retiers": self.retiers, "rows_moved": self.rows_moved}
+                "retiers": self.retiers, "rows_moved": self.rows_moved,
+                "shadow_builds": self.shadow_builds, "swaps": self.swaps}
 
 
 class OnlineServer:
@@ -104,8 +124,33 @@ class OnlineServer:
             self.host_packed = None
         else:
             self.host_packed: PackedStore = pack(store, cfg)
+        # shadow re-tier state (OnlineConfig.retier_async)
+        self.shadow = None            # active ShadowRepack/ShadowMigrate
+        self._retier_pending = False  # boundary crossed while building
+        self._staged = None           # device-placed shadow, pre-swap
+        self.warmup_fn = None         # registered by the loop drivers:
+                                      # fn(staged_packed) pre-compiles
+                                      # the jitted forward for the new
+                                      # payload shapes
+        self._warmup = None           # in-flight staging thread
+        self._stage_err = None        # staging/verify failure, raised at swap
         self._place()
         self._rebuild_cache()
+        if online.retier_async:
+            self._prewarm_quantize()
+
+    def _prewarm_quantize(self) -> None:
+        """Compile the fixed-shape chunk-quantize pipeline off the
+        serving path.  Every shadow chunk quantizes at exactly the
+        ``shadow_rows_per_step`` pad shape (``quantize_rows`` pad_to
+        contract), so this one warm call means no chunk ever pays an
+        XLA compile on a serving request."""
+        from repro.core.packed_store import quantize_rows
+        dim = (self.hier.dim if self.hier is not None
+               else self.host_packed.payload32.shape[-1])
+        quantize_rows(np.zeros((3, dim), np.float32), np.arange(3),
+                      np.arange(3), self.cfg,
+                      pad_to=self.online.shadow_rows_per_step)
 
     # -- placement -----------------------------------------------------
 
@@ -283,8 +328,172 @@ class OnlineServer:
         if self.online.retier_every:
             re = self.online.retier_every
             if self.stats.requests // re > before // re:
-                return self.retier()
+                if not self.online.retier_async:
+                    return self.retier()
+                self._retier_pending = True
+        if self.online.retier_async:
+            return self._shadow_tick(count)
         return False
+
+    # -- shadow re-tier (async) ----------------------------------------
+
+    def begin_retier(self) -> bool:
+        """Open a shadow build against the current fold state.
+
+        The ``QATStore`` is an immutable NamedTuple — priority folds
+        ``_replace`` into a NEW store — so capturing ``self.store``
+        here IS the snapshot: the shadow's re-tier decision is frozen
+        while live folds keep drifting ``self.store`` forward (the
+        next build picks them up, same as a re-tier that ran at the
+        boundary).  Returns True when a shadow was opened.
+        """
+        if self.shadow is not None:     # one generation at a time
+            self._retier_pending = True
+            return False
+        from repro.serve.shadow import ShadowMigrate, ShadowRepack
+        snapshot = self.store
+        rows = self.online.shadow_rows_per_step
+        if self.hier is not None:
+            self.shadow = ShadowMigrate(self.hier, snapshot, self.cfg,
+                                        chunk_rows=rows)
+        else:
+            sh = ShadowRepack(self.host_packed, snapshot, self.cfg,
+                              chunk_rows=rows)
+            if sh.moved == 0:
+                # nothing crosses: match the synchronous no-move path
+                # (count the re-tier, refresh the cache, no swap)
+                self.stats.retiers += 1
+                self._rebuild_cache()
+                return False
+            self.shadow = sh
+        self.stats.shadow_builds += 1
+        obs.inc("serve.shadow.builds", 1)
+        return True
+
+    def _shadow_tick(self, count: int = 1) -> bool:
+        """One request's worth of shadow progress: open a pending
+        build, advance it by the per-step row budget, stage / swap when
+        ready.  Returns True when the live store was swapped (payload
+        shapes may have changed — re-fetch ``server.packed``)."""
+        if self.shadow is None and self._retier_pending:
+            self._retier_pending = False
+            self.begin_retier()
+        if self.shadow is None:
+            return False
+        with obs.timeblock("serve.retier") as tb:
+            swapped = self._shadow_advance(count)
+        self.stats.retier_seconds += tb.seconds
+        return swapped
+
+    def _shadow_advance(self, count: int) -> bool:
+        sh = self.shadow
+        if not sh.staged:
+            with obs.span("serve.shadow.chunk"):
+                sh.step(self.online.shadow_rows_per_step
+                        * max(int(count), 1))
+            self.stats.shadow_chunks += 1
+            if obs.enabled():
+                obs.gauge("serve.shadow.lag_rows",
+                          float(sh.remaining_rows))
+            if sh.staged:
+                # built on this very tick: stage the device transfer
+                # (and the jit warm-up) now, swap on a later tick so
+                # neither lands on a serving request
+                self._begin_staging()
+            return False
+        if self._warmup is None:
+            self._begin_staging()
+            return False
+        if self._warmup.is_alive():
+            return False
+        return self._swap()
+
+    def _begin_staging(self) -> None:
+        """Kick off the staging thread: device placement, the optional
+        bit-identity verify, and the forward-recompile warm-up all run
+        off the serving thread (XLA compilation and execution release
+        the GIL, and the jit cache is shared) — the swap tick that
+        follows is a pointer flip, not a ~100x-p50 stall."""
+        sh, fn = self.shadow, self.warmup_fn
+        verify = self.online.verify_swap
+
+        def _stage() -> None:
+            try:
+                with obs.span("serve.shadow.stage"):
+                    staged = sh.place(self.mesh, self.axis)
+                    if verify:
+                        sh.verify()
+                self._staged = staged
+            except Exception as e:          # surfaced by _swap
+                self._stage_err = e
+                return
+            if fn is not None:
+                try:
+                    fn(staged)
+                except Exception:
+                    pass    # a failed warm-up only costs a recompile
+        self._warmup = threading.Thread(target=_stage, daemon=True)
+        self._warmup.start()
+
+    def _swap(self) -> bool:
+        """Atomic generation flip: commit the staged shadow and rebuild
+        the hot cache.  The only point where live serving state
+        changes.  A verify failure on the staging thread surfaces here
+        — the shadow is discarded and the live store stays as-is."""
+        if self._stage_err is not None:
+            err = self._stage_err
+            self.discard_shadow()
+            raise err
+        with obs.span("serve.shadow.swap"):
+            moved = self.shadow.commit(self, self._staged)
+        self.shadow = None
+        self._staged = None
+        self._warmup = None
+        self.stats.retiers += 1
+        self.stats.swaps += 1
+        self.stats.rows_moved += int(moved)
+        obs.inc("serve.retier.rows_moved", int(moved))
+        obs.inc("serve.shadow.swaps", 1)
+        self._rebuild_cache()
+        return True
+
+    def drain_shadow(self) -> bool:
+        """Synchronously finish any in-flight (or pending) shadow and
+        swap it in — loop teardown and verification paths.  Returns
+        True when a swap happened."""
+        if self.shadow is None and self._retier_pending:
+            self._retier_pending = False
+            self.begin_retier()
+        if self.shadow is None:
+            return False
+        with obs.timeblock("serve.retier") as tb:
+            while not self.shadow.staged:
+                self.shadow.step(1 << 30)
+                self.stats.shadow_chunks += 1
+            if self._warmup is None:
+                self._begin_staging()
+            self._warmup.join()
+            out = self._swap()
+        self.stats.retier_seconds += tb.seconds
+        return out
+
+    def discard_shadow(self) -> None:
+        """Crash-before-swap: drop the shadow generation entirely.  The
+        live store (and any cold-shard mmaps) is untouched — serving
+        continues on the old generation as if the build never started.
+        """
+        if self._warmup is not None and self._warmup.is_alive():
+            # let the staging thread finish its XLA work before the
+            # shadow objects it references go away (an interpreter
+            # exiting under a live compile aborts the process)
+            self._warmup.join()
+        if self.shadow is not None:
+            self.shadow.discard()
+        self.shadow = None
+        self._staged = None
+        self._warmup = None
+        self._stage_err = None
+        self._retier_pending = False
 
     # -- incremental re-tier -------------------------------------------
 
@@ -300,7 +509,14 @@ class OnlineServer:
         Wall time accumulates into ``stats.retier_seconds`` (always —
         the serve loops attribute tail latency from it) and into the
         ``serve.retier_us`` histogram when metrics are on.
+
+        A synchronous re-tier supersedes any in-flight shadow build:
+        the shadow is discarded (its snapshot is stale next to the
+        store this call re-tiers from) and the live store repacked in
+        one step.
         """
+        if self.shadow is not None or self._retier_pending:
+            self.discard_shadow()
         with obs.timeblock("serve.retier") as tb:
             moved = self._retier_locked()
         self.stats.retier_seconds += tb.seconds

@@ -1,0 +1,298 @@
+"""Shadow-store re-tiering: copy-on-write repack off the request path.
+
+The synchronous re-tier (``packed_store.repack_delta`` /
+``HierStore.migrate``) stalls serving for the whole rebuild — the
+committed benches put the p99 tail at 55-99x the p50 because one
+request pays the entire repack.  This module splits the rebuild into a
+**shadow generation** built in bounded chunks while requests keep
+hitting the live store, then swapped in atomically:
+
+    begin    snapshot the fold state (the ``QATStore`` is an immutable
+             NamedTuple — capturing the reference freezes priorities)
+             and freeze the re-tier decision against it
+    chunk    each serve step advances the build by a bounded row budget
+             (``OnlineConfig.shadow_rows_per_step`` rows per live
+             request); the live store is never written — ``repack``'s
+             copy-on-write twin
+    verify   (optional) assert the finished shadow is bit-identical to
+             a synchronous ``pack`` at the snapshot fold state
+    swap     one pointer flip inside ``OnlineServer`` — the shadow was
+             already device-placed (and the driver's jitted forward
+             pre-compiled by a warm-up thread) while requests were
+             still served from the old generation
+    discard  at any point before the swap: drop the shadow, the live
+             store is untouched (crash-before-swap safety)
+
+Bit-identity invariant (enforced by ``tests/test_shadow_swap.py`` at
+every chunk boundary): after ``k`` processed mover rows the shadow
+materializes to exactly ``repack_delta(live, snapshot, cfg,
+movers[:k])``, and the final swap equals a synchronous repack at the
+snapshot fold state.  Priorities folded *after* the snapshot are
+simply picked up by the next build — the same semantics as a re-tier
+that ran at the boundary request.
+
+``ShadowMigrate`` is the hierarchical twin: it drives the exact pieces
+``HierStore._migrate`` runs synchronously (``plan_retier`` /
+``build_rows`` / ``commit_retier``), chunking the level builds by rows
+and the cold-generation IO by shards (``manifest.ShardWriter``, one
+shard per step, published atomically at the swap).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import packed_store as ps
+from repro.core.packed_store import PackedStore, extract_rows, merge_stores
+from repro.core.qat_store import FQuantConfig, QATStore, current_tiers
+from repro.store.hier import HierStore, RetierPlan
+from repro.store.manifest import ColdShards, ShardWriter, np_lookup
+
+
+class ShadowRepack:
+    """Chunked copy-on-write twin of ``repack_delta`` for the flat
+    (fully resident) store.
+
+    Freezes the mover set once (``tier_crossings`` of the live pack vs
+    the snapshot's Eq. 8 tiers), quantizes it in bounded chunks
+    (``quantize_rows`` — row-wise, so chunking cannot change bytes),
+    and assembles the final store in ONE O(V) finalize step: surviving
+    rows carry their live payload bytes (``extract_rows``), quantized
+    chunks append (``merge_stores``), a permutation restores global-id
+    addressing.  The live store is read, never written.
+    """
+
+    def __init__(self, packed: PackedStore, snapshot: QATStore,
+                 cfg: FQuantConfig, chunk_rows: int = 512):
+        self.live = packed
+        self.snapshot = snapshot
+        self.cfg = cfg
+        # fixed quantize granularity: every chunk runs at exactly this
+        # pad shape, so after one warm call (OnlineServer pre-warms at
+        # construction) no chunk ever pays an XLA compile on-path
+        self.chunk_rows = max(int(chunk_rows), 1)
+        self.table = np.asarray(snapshot.table, np.float32)
+        old = ps.packed_tiers(packed).astype(np.int64)
+        self.new_tiers = np.asarray(
+            current_tiers(snapshot, cfg)).astype(np.int64)
+        self.movers = np.nonzero(old != self.new_tiers)[0]
+        self.pos = 0
+        self._chunks: list[PackedStore] = []
+        self.result: PackedStore | None = None
+
+    @property
+    def moved(self) -> int:
+        return int(self.movers.size)
+
+    @property
+    def remaining_rows(self) -> int:
+        return int(self.movers.size - self.pos)
+
+    @property
+    def staged(self) -> bool:
+        return self.result is not None
+
+    def step(self, budget: int) -> bool:
+        """Advance by <= ``budget`` mover rows (>= 1) in sub-chunks of
+        ``chunk_rows``; materialize the final store when the mover set
+        drains.  Returns ``staged``."""
+        if self.result is not None:
+            return True
+        budget = max(int(budget), 1)
+        while budget > 0 and self.pos < self.movers.size:
+            take = min(budget, self.chunk_rows)
+            chunk = self.movers[self.pos:self.pos + take]
+            self._chunks.append(ps.quantize_rows(
+                self.table, chunk, self.new_tiers, self.cfg,
+                pad_to=self.chunk_rows))
+            self.pos += int(chunk.size)
+            budget -= int(chunk.size)
+        if self.pos >= self.movers.size:
+            self.result = self.materialize()
+        return self.result is not None
+
+    def materialize(self) -> PackedStore:
+        """The store as if swapped NOW: processed movers re-tiered,
+        everything else (including not-yet-processed movers) carrying
+        its live bytes — lookup-bit-identical to ``repack_delta(live,
+        snapshot, cfg, movers[:pos])``, the per-chunk-boundary
+        invariant the stress harness asserts."""
+        done = self.movers[:self.pos]
+        vocab = self.live.vocab
+        mask = np.zeros(vocab, bool)
+        mask[done] = True
+        keep = np.nonzero(~mask)[0]
+        perm = np.empty(vocab, np.int64)
+        perm[keep] = np.arange(keep.size)
+        perm[done] = keep.size + np.arange(done.size)
+        parts = [extract_rows(self.live, keep)] + self._chunks
+        return extract_rows(merge_stores(parts), perm)
+
+    def place(self, mesh=None, axis: str = "model") -> PackedStore:
+        """Device placement of the finished shadow (async dispatch) —
+        staged ahead of the swap so the swap is a pointer flip."""
+        from repro.dist.packed import place_packed
+        return place_packed(self.result, mesh, axis)
+
+    def verify(self) -> None:
+        """Assert the finished shadow is bit-identical to a synchronous
+        full ``pack`` at the snapshot fold state (O(V) — gate it)."""
+        ref = np.asarray(ps.unpack(ps.pack(self.snapshot, self.cfg)))
+        got = np.asarray(ps.unpack(self.result))
+        if not np.array_equal(ref, got):
+            raise AssertionError(
+                "shadow swap verify FAILED: shadow store is not "
+                "bit-identical to pack() at the snapshot fold state")
+
+    def commit(self, server, staged: PackedStore | None) -> int:
+        """Flip the server's live store to the shadow generation."""
+        server.host_packed = self.result
+        server.packed = (staged if staged is not None
+                         else self.place(server.mesh, server.axis))
+        return self.moved
+
+    def discard(self) -> None:
+        """Nothing on disk for the flat store — dropping the object is
+        the whole discard; the live store was never written."""
+
+
+class ShadowMigrate:
+    """Chunked twin of ``HierStore.migrate``: same plan, same builders,
+    same commit — only the schedule differs.
+
+    ``step`` order: (1) level builds — hot, then warm, then cold ids in
+    bounded row chunks; (2) cold-generation IO — ONE shard per step
+    into ``ShardWriter``'s hidden tmp dir (the live generation and any
+    concurrent ``manifest`` reader see nothing until the swap
+    publishes); (3) staged.  ``commit`` publishes the cold dir
+    atomically and runs ``HierStore.commit_retier`` — the one mutation
+    point the synchronous path uses too, so the two are bit-identical
+    by construction.
+    """
+
+    def __init__(self, hier: HierStore, snapshot: QATStore,
+                 cfg: FQuantConfig, chunk_rows: int = 512):
+        self.hier = hier
+        self.snapshot = snapshot
+        self.cfg = cfg
+        self.chunk_rows = max(int(chunk_rows), 1)
+        self.rp: RetierPlan = hier.plan_retier(snapshot, cfg)
+        plan = self.rp.plan
+        self._cold_needed = bool(plan.cold_ids.size
+                                 and hier.cold_changed(self.rp))
+        if self._cold_needed and hier.cfg.store_dir is None:
+            raise ValueError("cold spill requires store_dir")
+        self._levels = [("hot", plan.hot_ids), ("warm", plan.warm_ids)]
+        if self._cold_needed:
+            self._levels.append(("cold", plan.cold_ids))
+        self._built: dict[str, list] = {n: [] for n, _ in self._levels}
+        self._pos = {n: 0 for n, _ in self._levels}
+        self.results: dict[str, PackedStore] = {}
+        self.writer: ShardWriter | None = None
+        self.total_rows = int(sum(ids.size for _, ids in self._levels))
+        self.done_rows = 0
+        self.staged = False
+
+    @property
+    def moved(self) -> int:
+        return int(self.rp.crossed.sum())
+
+    @property
+    def remaining_rows(self) -> int:
+        return self.total_rows - self.done_rows
+
+    def step(self, budget: int) -> bool:
+        """<= ``budget`` rows of level-build work (in ``chunk_rows``
+        sub-chunks so every quantize hits the pre-warmed shape set), or
+        one cold shard write.  Returns ``staged``."""
+        if self.staged:
+            return True
+        budget = max(int(budget), 1)
+        while budget > 0 and self.done_rows < self.total_rows:
+            for name, ids in self._levels:
+                p = self._pos[name]
+                if p < ids.size:
+                    take = min(budget, self.chunk_rows)
+                    chunk = ids[p:p + take]
+                    self._built[name].append(self.hier.build_rows(
+                        chunk, self.rp, self.cfg,
+                        quant_pad=self.chunk_rows))
+                    self._pos[name] = p + int(chunk.size)
+                    self.done_rows += int(chunk.size)
+                    budget -= int(chunk.size)
+                    break
+        if self.done_rows < self.total_rows:
+            return False
+        for name, _ in self._levels:
+            if name not in self.results:
+                # consecutive chunks merge back into the one-shot
+                # build, position i = ids[i] (HierStore.build_rows)
+                self.results[name] = (
+                    merge_stores(self._built[name]) if self._built[name]
+                    else self.hier.build_rows(np.zeros((0,), np.int64),
+                                              self.rp, self.cfg))
+                self._built[name] = []
+        for name in ("hot", "warm"):
+            if name not in self.results:
+                self.results[name] = self.hier.build_rows(
+                    np.zeros((0,), np.int64), self.rp, self.cfg)
+        if self._cold_needed:
+            if self.writer is None:
+                self.writer = ShardWriter(
+                    self.hier.cfg.store_dir, self.results["cold"],
+                    self.rp.plan.cold_ids, self.hier.cfg.rows_per_shard)
+            if self.writer.write_next():
+                return False
+        self.staged = True
+        return True
+
+    def place(self, mesh=None, axis: str = "model") -> PackedStore:
+        """Device placement of the new hot store (async dispatch)."""
+        from repro.dist.packed import place_packed
+        return place_packed(self.results["hot"], mesh, axis)
+
+    def verify(self) -> None:
+        """Assert the built generation resolves every row bit-identically
+        to a fully resident ``pack`` at the snapshot fold state."""
+        plan = self.rp.plan
+        ref = np.asarray(ps.unpack(ps.pack(self.snapshot, self.cfg)))
+        got = np.empty_like(ref)
+        for name, ids in (("hot", plan.hot_ids), ("warm", plan.warm_ids)):
+            if ids.size:
+                got[ids] = np_lookup(self.results[name],
+                                     np.arange(ids.size))
+        if plan.cold_ids.size:
+            if self._cold_needed:
+                got[plan.cold_ids] = np_lookup(
+                    self.results["cold"], np.arange(plan.cold_ids.size))
+            else:
+                # cold set untouched by the plan: live shards serve it
+                got[plan.cold_ids] = self.hier.cold.gather_fp32(
+                    np.arange(plan.cold_ids.size))
+        if not np.array_equal(ref, got):
+            raise AssertionError(
+                "shadow migrate verify FAILED: staged generation is "
+                "not bit-identical to pack() at the snapshot fold "
+                "state")
+
+    def commit(self, server, staged: PackedStore | None) -> int:
+        """Publish the cold generation and flip the hier state (the
+        same ``commit_retier`` the synchronous path runs)."""
+        new_cold = self.hier.cold
+        if self._cold_needed:
+            self.writer.publish()
+            new_cold = ColdShards(self.hier.cfg.store_dir)
+        elif not self.rp.plan.cold_ids.size:
+            new_cold = None
+        out = self.hier.commit_retier(self.rp, self.results["hot"],
+                                      self.results["warm"], new_cold,
+                                      hot_dev=staged)
+        server._place()
+        return out["crossed"]
+
+    def discard(self) -> None:
+        """Drop the unpublished cold tmp dir; the live generation (and
+        any open mmaps into it) stays exactly as it was."""
+        if self.writer is not None:
+            self.writer.abort()
+            self.writer = None

@@ -41,13 +41,11 @@ import numpy as np
 from repro import obs
 from repro.core import packed_store as ps
 from repro.core.packed_store import (
-    _TIER_SHIFT,
     PackedStore,
     extract_rows,
     merge_stores,
 )
 from repro.core.qat_store import FQuantConfig, QATStore, current_tiers
-from repro.core.tiers import Tier
 from repro.store.budget import COLD, HOT, WARM, plan_placement
 from repro.store.manifest import ColdShards, np_lookup, write_cold_shards
 
@@ -88,30 +86,21 @@ class StagedBatch(NamedTuple):
     staged: int           # distinct rows actually staged
 
 
-def _quantize_subset(table: np.ndarray, ids: np.ndarray,
-                     tiers: np.ndarray, cfg: FQuantConfig) -> PackedStore:
-    """Quantize fp32 table rows ``ids`` into a sub-store (position i =
-    ids[i]), byte-identical to what ``pack`` produces for them."""
-    dim = table.shape[1]
-    t = tiers[ids]
-    out_p, out_s = [], []
-    new_ind = np.zeros(ids.size, np.int32)
-    for tv, tier in enumerate((Tier.INT8, Tier.HALF, Tier.FP32)):
-        sel = np.nonzero(t == tv)[0]
-        if sel.size:
-            p, s = ps._quantize_tier(table[ids[sel]], tier, cfg)
-        else:
-            p, s = ps._quantize_tier(np.zeros((1, dim), np.float32),
-                                     tier, cfg)
-            if tv != 2:
-                s = np.ones((1,), np.float32)
-        new_ind[sel] = ((tv << _TIER_SHIFT)
-                        | np.arange(sel.size, dtype=np.int32))
-        out_p.append(p)
-        out_s.append(s if tv != 2 else None)
-    return PackedStore(payload8=out_p[0], scale8=out_s[0],
-                       payload16=out_p[1], scale16=out_s[1],
-                       payload32=out_p[2], indirect=new_ind)
+# row-wise quantization shared with the flat store: any subset is
+# byte-identical to quantizing inside a full pack() batch
+_quantize_subset = ps.quantize_rows
+
+
+class RetierPlan(NamedTuple):
+    """Frozen migration decision: everything ``migrate`` derives from
+    one (priority, tiers) snapshot.  Computing it once and building
+    from it — whether in one shot (``_migrate``) or in bounded chunks
+    (``serve.shadow.ShadowMigrate``) — is what makes the async path
+    bit-identical to the synchronous one *by construction*."""
+    table: np.ndarray        # fp32 (V, D) snapshot of the QAT table
+    new_tiers: np.ndarray    # int8 (V,) Eq. 8 tiers at the fold state
+    plan: object             # budget.BudgetPlan (hot/warm/cold ids)
+    crossed: np.ndarray      # bool (V,) precision changed vs packed
 
 
 @dataclasses.dataclass
@@ -295,6 +284,96 @@ class HierStore:
                 obs.gauge(f"store.{k}_bytes", float(v))
         return out
 
+    def plan_retier(self, store: QATStore, cfg: FQuantConfig
+                    ) -> RetierPlan:
+        """Freeze one migration decision from the current fold state:
+        Eq. 8 tiers, the budget placement and the crossed-row mask.
+        Pure read — live state is untouched until ``commit_retier``."""
+        new_tiers = np.asarray(current_tiers(store, cfg)).astype(np.int8)
+        n_shards = 1 if self.mesh is None else self.mesh.shape[self.axis]
+        plan = plan_placement(np.asarray(store.priority), new_tiers,
+                              self.dim, self.cfg.hbm_budget_bytes,
+                              self.cfg.host_budget_bytes, n_shards)
+        return RetierPlan(table=np.asarray(store.table, np.float32),
+                          new_tiers=new_tiers, plan=plan,
+                          crossed=new_tiers != self.tiers)
+
+    def build_rows(self, ids: np.ndarray, rp: RetierPlan,
+                   cfg: FQuantConfig,
+                   quant_pad: int | None = None) -> PackedStore:
+        """One level's store (or any consecutive chunk of it) under the
+        frozen plan: unchanged-precision rows carry their quantized
+        bytes from whichever LIVE level holds them, crossed rows
+        re-quantize from the snapshot table exactly as ``pack`` would.
+        Position ``i`` = ``ids[i]``, so consecutive chunks of a level's
+        id list ``merge_stores`` back into the one-shot build —
+        lookup-bit-identically (chunking only permutes payload order
+        *within* a tier, which ``indirect`` hides).  ``quant_pad`` is
+        forwarded to ``quantize_rows`` so chunked callers keep one
+        compiled shape set (``serve.shadow.ShadowMigrate``)."""
+        if not ids.size:
+            return extract_rows(self.hot_host, np.zeros((0,), np.int64))
+        keep_pos = np.nonzero(~rp.crossed[ids])[0]
+        req_pos = np.nonzero(rp.crossed[ids])[0]
+        parts, perm = [], np.empty(ids.size, np.int64)
+        base = 0
+        if keep_pos.size:
+            parts.append(self._gather_quantized(ids[keep_pos]))
+            perm[keep_pos] = base + np.arange(keep_pos.size)
+            base += keep_pos.size
+        if req_pos.size:
+            parts.append(_quantize_subset(rp.table, ids[req_pos],
+                                          rp.new_tiers, cfg,
+                                          pad_to=quant_pad))
+            perm[req_pos] = base + np.arange(req_pos.size)
+        return extract_rows(merge_stores(parts), perm)
+
+    def cold_changed(self, rp: RetierPlan) -> bool:
+        """Whether the plan moves/re-tiers any cold row (the live cold
+        shards can be reused verbatim otherwise)."""
+        plan = rp.plan
+        return (plan.cold_ids.size != self.cold_ids.size
+                or not np.array_equal(plan.cold_ids, self.cold_ids)
+                or bool(rp.crossed[plan.cold_ids].any()))
+
+    def commit_retier(self, rp: RetierPlan, new_hot: PackedStore,
+                      new_warm: PackedStore,
+                      new_cold: ColdShards | None,
+                      hot_dev: PackedStore | None = None) -> dict:
+        """Atomically flip the live state to the built generation.
+
+        The ONE mutation point shared by the synchronous ``migrate``
+        and the chunked shadow path (``serve.shadow.ShadowMigrate``):
+        everything before this is built off to the side, so a crash or
+        discard before the commit leaves the live store untouched.
+        ``new_cold`` must already be published under ``cfg.store_dir``
+        (or be the reused live object / None when the plan has no cold
+        level).  ``hot_dev``, when given, is an already-placed device
+        copy of ``new_hot`` (the shadow path stages the transfer ahead
+        of the swap) and skips the blocking ``place()``.
+        """
+        plan = rp.plan
+        promoted = int((plan.level < self.level).sum())
+        demoted = int((plan.level > self.level).sum())
+        self.cold = new_cold
+        self.hot_host, self.warm = new_hot, new_warm
+        self.hot_ids, self.warm_ids = plan.hot_ids, plan.warm_ids
+        self.cold_ids = plan.cold_ids
+        self.level = plan.level
+        self.slot = np.zeros(self.vocab, np.int64)
+        for ids in (plan.hot_ids, plan.warm_ids, plan.cold_ids):
+            self.slot[ids] = np.arange(ids.size)
+        self.tiers = rp.new_tiers
+        if hot_dev is not None:
+            self.hot_dev = hot_dev
+        else:
+            self.place()
+        self.stats.migrations += 1
+        self.stats.promoted += promoted
+        self.stats.demoted += demoted
+        return {"promoted": promoted, "demoted": demoted,
+                "crossed": int(rp.crossed.sum())}
+
     def _migrate(self, store: QATStore, cfg: FQuantConfig) -> dict:
         """Priority-driven re-tier + re-place across levels.
 
@@ -307,65 +386,27 @@ class HierStore:
         cold set changed.  Bit-identity contract: afterwards, lookups
         equal ``pack(store, cfg)`` lookups — same contract as
         ``repack_delta``, now across levels.
+
+        Implemented as plan -> build -> commit over the same pieces the
+        chunked shadow migration drives (``plan_retier`` /
+        ``build_rows`` / ``commit_retier``), so the synchronous and
+        async paths are identical by construction.
         """
-        table = np.asarray(store.table, np.float32)
-        new_tiers = np.asarray(current_tiers(store, cfg)).astype(np.int8)
-        n_shards = 1 if self.mesh is None else self.mesh.shape[self.axis]
-        plan = plan_placement(np.asarray(store.priority), new_tiers,
-                              self.dim, self.cfg.hbm_budget_bytes,
-                              self.cfg.host_budget_bytes, n_shards)
-        crossed = new_tiers != self.tiers
-
-        def build(ids: np.ndarray) -> PackedStore:
-            if not ids.size:
-                return extract_rows(self.hot_host,
-                                    np.zeros((0,), np.int64))
-            keep_pos = np.nonzero(~crossed[ids])[0]
-            req_pos = np.nonzero(crossed[ids])[0]
-            parts, perm = [], np.empty(ids.size, np.int64)
-            base = 0
-            if keep_pos.size:
-                parts.append(self._gather_quantized(ids[keep_pos]))
-                perm[keep_pos] = base + np.arange(keep_pos.size)
-                base += keep_pos.size
-            if req_pos.size:
-                parts.append(_quantize_subset(table, ids[req_pos],
-                                              new_tiers, cfg))
-                perm[req_pos] = base + np.arange(req_pos.size)
-            return extract_rows(merge_stores(parts), perm)
-
-        new_hot = build(plan.hot_ids)
-        new_warm = build(plan.warm_ids)
-        promoted = int((plan.level < self.level).sum())
-        demoted = int((plan.level > self.level).sum())
-
-        cold_changed = (plan.cold_ids.size != self.cold_ids.size
-                        or not np.array_equal(plan.cold_ids,
-                                              self.cold_ids)
-                        or bool(crossed[plan.cold_ids].any()))
-        if plan.cold_ids.size and cold_changed:
+        rp = self.plan_retier(store, cfg)
+        plan = rp.plan
+        new_hot = self.build_rows(plan.hot_ids, rp, cfg)
+        new_warm = self.build_rows(plan.warm_ids, rp, cfg)
+        new_cold = self.cold
+        if plan.cold_ids.size and self.cold_changed(rp):
             if self.cfg.store_dir is None:
                 raise ValueError("cold spill requires store_dir")
-            write_cold_shards(self.cfg.store_dir, build(plan.cold_ids),
+            write_cold_shards(self.cfg.store_dir,
+                              self.build_rows(plan.cold_ids, rp, cfg),
                               plan.cold_ids, self.cfg.rows_per_shard)
-            self.cold = ColdShards(self.cfg.store_dir)
+            new_cold = ColdShards(self.cfg.store_dir)
         elif not plan.cold_ids.size:
-            self.cold = None
-
-        self.hot_host, self.warm = new_hot, new_warm
-        self.hot_ids, self.warm_ids = plan.hot_ids, plan.warm_ids
-        self.cold_ids = plan.cold_ids
-        self.level = plan.level
-        self.slot = np.zeros(self.vocab, np.int64)
-        for ids in (plan.hot_ids, plan.warm_ids, plan.cold_ids):
-            self.slot[ids] = np.arange(ids.size)
-        self.tiers = new_tiers
-        self.place()
-        self.stats.migrations += 1
-        self.stats.promoted += promoted
-        self.stats.demoted += demoted
-        return {"promoted": promoted, "demoted": demoted,
-                "crossed": int(crossed.sum())}
+            new_cold = None
+        return self.commit_retier(rp, new_hot, new_warm, new_cold)
 
     # -- checkpointing -------------------------------------------------
 

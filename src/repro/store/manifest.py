@@ -88,54 +88,13 @@ def _save_leaf(path: str, arr: np.ndarray) -> str | None:
     return None
 
 
-def write_cold_shards(store_dir: str, cold: PackedStore,
-                      row_ids, rows_per_shard: int = 4096) -> dict:
-    """Serialize ``cold`` (host PackedStore over the cold rows, position
-    i = global row ``row_ids[i]``) into ``store_dir``.  Atomic: shards
-    land in a tmp dir, the manifest is written last, then one rename
-    publishes.  Returns the manifest dict."""
-    n = int(np.asarray(cold.indirect).shape[0])
-    rows_per_shard = max(1, int(rows_per_shard))
-    tmp = os.path.join(
-        os.path.dirname(os.path.abspath(store_dir)) or ".",
-        f".tmp_hier_{uuid.uuid4().hex[:8]}")
-    os.makedirs(tmp, exist_ok=True)
-
-    shards, p16_dtype = [], None
-    for k in range(-(-n // rows_per_shard) if n else 0):
-        ids = np.arange(k * rows_per_shard,
-                        min((k + 1) * rows_per_shard, n))
-        sub = extract_rows(cold, ids)
-        name = f"shard_{k:05d}"
-        sdir = os.path.join(tmp, name)
-        os.makedirs(sdir)
-        for f in _FIELDS:
-            viewed = _save_leaf(os.path.join(sdir, f + ".npy"),
-                                np.asarray(getattr(sub, f)))
-            if f == "payload16" and viewed:
-                p16_dtype = viewed
-        shards.append({"dir": name, "rows": int(ids.size)})
-
-    np.save(os.path.join(tmp, "row_ids.npy"),
-            np.asarray(row_ids, np.int64))
-    manifest = {
-        "schema": SCHEMA,
-        "dim": int(np.asarray(cold.payload32).shape[-1]),
-        "rows": n,
-        "rows_per_shard": rows_per_shard,
-        "payload16_dtype": p16_dtype
-        or str(np.asarray(cold.payload16).dtype),
-        "tier_counts": [int(c) for c in live_counts(cold)],
-        "nbytes": cold.nbytes(by_tier=True),
-        "shards": shards,
-    }
-    with open(os.path.join(tmp, MANIFEST), "w") as f:
-        json.dump(manifest, f, indent=1)
-    # publish: move the previous generation ASIDE, rename the new one
-    # in, then delete the old (open mmaps into the old files stay valid
-    # until their fds close).  A crash between the two renames leaves
-    # store_dir absent with the previous generation intact under
-    # .old_* — ColdShards.__init__ recovers it.
+def publish_dir(tmp: str, store_dir: str) -> None:
+    """Atomic publish of a fully written generation directory: move the
+    previous generation ASIDE, rename the new one in, then delete the
+    old (open mmaps into the old files stay valid until their fds
+    close).  A crash between the two renames leaves ``store_dir``
+    absent with the previous generation intact under ``.old_*`` —
+    ``ColdShards.__init__`` recovers it."""
     old = None
     if os.path.exists(store_dir):
         old = f"{store_dir}.old_{uuid.uuid4().hex[:8]}"
@@ -143,7 +102,103 @@ def write_cold_shards(store_dir: str, cold: PackedStore,
     os.rename(tmp, store_dir)
     if old is not None:
         shutil.rmtree(old, ignore_errors=True)
-    return manifest
+
+
+class ShardWriter:
+    """Incremental cold-generation writer: one shard per ``write_next``
+    call, manifest + atomic publish at the end.
+
+    The chunked sibling of ``write_cold_shards`` (which is now a
+    begin/drain/publish of this class): the async shadow migration
+    (``serve.shadow.ShadowMigrate``) writes ONE shard per serve step so
+    cold IO never lands on a single request, then publishes at the
+    swap.  Everything happens inside a hidden tmp dir next to
+    ``store_dir``; until ``publish()`` the live generation (and any
+    reader mid-reload) is untouched, and ``abort()`` discards the tmp
+    dir without a trace — the crash-before-swap contract.
+    """
+
+    def __init__(self, store_dir: str, cold: PackedStore, row_ids,
+                 rows_per_shard: int = 4096):
+        self.store_dir = store_dir
+        self.cold = cold
+        self.row_ids = np.asarray(row_ids, np.int64)
+        self.rows = int(np.asarray(cold.indirect).shape[0])
+        self.rows_per_shard = max(1, int(rows_per_shard))
+        self.num_shards = (-(-self.rows // self.rows_per_shard)
+                           if self.rows else 0)
+        self.tmp = os.path.join(
+            os.path.dirname(os.path.abspath(store_dir)) or ".",
+            f".tmp_hier_{uuid.uuid4().hex[:8]}")
+        os.makedirs(self.tmp, exist_ok=True)
+        self._next = 0
+        self._p16_dtype = None
+        self._published = False
+
+    @property
+    def shards_left(self) -> int:
+        return self.num_shards - self._next
+
+    def write_next(self) -> bool:
+        """Write one shard; True while shards remain after this call."""
+        k = self._next
+        if k >= self.num_shards:
+            return False
+        ids = np.arange(k * self.rows_per_shard,
+                        min((k + 1) * self.rows_per_shard, self.rows))
+        sub = extract_rows(self.cold, ids)
+        sdir = os.path.join(self.tmp, f"shard_{k:05d}")
+        os.makedirs(sdir)
+        for f in _FIELDS:
+            viewed = _save_leaf(os.path.join(sdir, f + ".npy"),
+                                np.asarray(getattr(sub, f)))
+            if f == "payload16" and viewed:
+                self._p16_dtype = viewed
+        self._next = k + 1
+        return self._next < self.num_shards
+
+    def publish(self) -> dict:
+        """Drain remaining shards, write the manifest LAST, atomically
+        swap the generation in.  Returns the manifest dict."""
+        while self._next < self.num_shards:
+            self.write_next()
+        np.save(os.path.join(self.tmp, "row_ids.npy"), self.row_ids)
+        manifest = {
+            "schema": SCHEMA,
+            "dim": int(np.asarray(self.cold.payload32).shape[-1]),
+            "rows": self.rows,
+            "rows_per_shard": self.rows_per_shard,
+            "payload16_dtype": self._p16_dtype
+            or str(np.asarray(self.cold.payload16).dtype),
+            "tier_counts": [int(c) for c in live_counts(self.cold)],
+            "nbytes": self.cold.nbytes(by_tier=True),
+            "shards": [{"dir": f"shard_{k:05d}",
+                        "rows": int(min((k + 1) * self.rows_per_shard,
+                                        self.rows)
+                                    - k * self.rows_per_shard)}
+                       for k in range(self.num_shards)],
+        }
+        with open(os.path.join(self.tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=1)
+        publish_dir(self.tmp, self.store_dir)
+        self._published = True
+        return manifest
+
+    def abort(self) -> None:
+        """Discard the unpublished generation (idempotent, safe after
+        publish — the tmp dir no longer exists then)."""
+        if not self._published:
+            shutil.rmtree(self.tmp, ignore_errors=True)
+
+
+def write_cold_shards(store_dir: str, cold: PackedStore,
+                      row_ids, rows_per_shard: int = 4096) -> dict:
+    """Serialize ``cold`` (host PackedStore over the cold rows, position
+    i = global row ``row_ids[i]``) into ``store_dir``.  Atomic: shards
+    land in a tmp dir, the manifest is written last, then one rename
+    publishes.  Returns the manifest dict."""
+    return ShardWriter(store_dir, cold, row_ids, rows_per_shard
+                       ).publish()
 
 
 class ColdShards:

@@ -286,6 +286,148 @@ def test_hier_stage_counts_and_dedup(tmp_path):
     assert sb3.staged == 1 and sb3.warm_hits == 0 and sb3.cold_hits == 1
 
 
+# ------------------------------------------------------- fault paths
+
+def test_stage_empty_batch_and_all_hot_miss_free(tmp_path):
+    """Staging-buffer corner cases: an EMPTY index batch and an all-hot
+    batch both stage zero rows, leave every hit counter untouched, and
+    the (placeholder) staging buffer never leaks into results."""
+    st = _store(12)
+    hier, packed = _hier(st, tmp_path)
+    base = dict(hier.stats.as_dict())
+
+    sb = hier.stage(np.zeros((0,), np.int64))
+    assert sb.staged == 0 and sb.warm_hits == 0 and sb.cold_hits == 0
+    assert sb.staging.shape[0] >= 1          # fixed non-empty buffer
+    out = hier_lookup(hier, np.zeros((0,), np.int64))
+    assert out.shape == (0, D)
+
+    hot_batch = hier.hot_ids[:8]
+    sb = hier.stage(hot_batch)
+    assert sb.staged == 0 and sb.warm_hits == 0 and sb.cold_hits == 0
+    assert (np.asarray(sb.stage_slot) == -1).all()
+    np.testing.assert_array_equal(
+        np.asarray(hier_lookup(hier, jnp.asarray(hot_batch))),
+        np.asarray(ps.lookup(packed, jnp.asarray(hot_batch))))
+    # an all-skip batch (every position a cache hit) stages nothing and
+    # counts nothing, even though the rows are warm/cold misses
+    mixed = np.array([int(hier.warm_ids[0]), int(hier.cold_ids[0])])
+    sb = hier.stage(mixed, skip=np.ones(2, bool))
+    assert sb.staged == 0 and sb.warm_hits == 0 and sb.cold_hits == 0
+    after = hier.stats.as_dict()
+    assert after["warm_hits"] == base["warm_hits"]
+    assert after["cold_hits"] == base["cold_hits"]
+    assert after["staged_rows"] == base["staged_rows"]
+
+
+def test_bag_lookup_empty_bag_zero_not_stale(tmp_path):
+    """A bag no index maps to must come back exactly zero — not a row
+    from the shared staging buffer — and match the flat-store result."""
+    st = _store(13)
+    hier, packed = _hier(st, tmp_path)
+    idx = np.concatenate([hier.cold_ids[:4], hier.warm_ids[:4]])
+    seg = np.array([0, 0, 2, 2, 3, 3, 5, 5], np.int32)   # bags 1, 4 empty
+    out = np.asarray(hier_bag_lookup(hier, jnp.asarray(idx),
+                                     jnp.asarray(seg), 6))
+    np.testing.assert_array_equal(
+        out, np.asarray(ps.bag_lookup(packed, jnp.asarray(idx),
+                                      jnp.asarray(seg), 6)))
+    assert (out[1] == 0).all() and (out[4] == 0).all()
+
+
+def test_promote_then_demote_same_row_counts_once_each(tmp_path):
+    """One row rides a full promote+demote round trip inside one retier
+    cadence (two migrations before any serving): each leg counts the
+    row EXACTLY once in promoted/demoted, the staging/miss counters
+    never move (migration is not a lookup), and the row's quantized
+    bytes land back bit-identical."""
+    st = _store(14)
+    hier, packed = _hier(st, tmp_path)
+    row = int(hier.cold_ids[0])
+    before = np.asarray(ps.lookup(packed, jnp.asarray([row])))
+    stage_base = {k: v for k, v in hier.stats.as_dict().items()
+                  if k in ("staged_rows", "warm_hits", "cold_hits")}
+
+    pri = np.asarray(st.priority).copy()
+    pri2 = pri.copy()
+    pri2[row] = pri.max() * 10              # cold -> hot AND tier cross
+    moved_up = hier.migrate(st._replace(priority=jnp.asarray(pri2)), CFG)
+    assert hier.level[row] == HOT
+    assert moved_up["promoted"] >= 1
+    p_after_up, d_after_up = hier.stats.promoted, hier.stats.demoted
+
+    moved_dn = hier.migrate(st._replace(priority=jnp.asarray(pri)), CFG)
+    assert hier.level[row] != HOT
+    assert moved_dn["demoted"] >= 1
+    # each migration's deltas equal its return — nothing double-counted
+    assert hier.stats.promoted == p_after_up + moved_dn["promoted"]
+    assert hier.stats.demoted == d_after_up + moved_dn["demoted"]
+    for k, v in stage_base.items():
+        assert hier.stats.as_dict()[k] == v, k
+    # priorities restored -> same tiers -> byte-identical round trip
+    np.testing.assert_array_equal(
+        np.asarray(hier_lookup(hier, jnp.asarray([row]))), before)
+    np.testing.assert_array_equal(
+        np.asarray(hier_lookup(hier, jnp.arange(V))),
+        np.asarray(ps.lookup(packed, jnp.arange(V))))
+
+
+def test_manifest_reload_mid_migration(tmp_path):
+    """Re-opening the cold manifest while a NEW generation is half
+    written must see only the live generation: the unpublished shards
+    live in a hidden tmp dir, abort removes them without a trace, and a
+    reload after publish sees exactly the new row set while already
+    open mmaps keep serving the old one."""
+    import glob as _glob
+
+    from repro.store.manifest import ShardWriter
+
+    st = _store(15)
+    hier, packed = _hier(st, tmp_path)
+    store_dir = hier.cfg.store_dir
+    live_ids = hier.cold_ids.copy()
+
+    # plan a migration that reshuffles the cold set (priority reversal)
+    st2 = st._replace(priority=jnp.asarray(
+        np.asarray(st.priority)[::-1].copy()))
+    rp = hier.plan_retier(st2, CFG)
+    assert hier.cold_changed(rp)
+    new_ids = rp.plan.cold_ids
+    writer = ShardWriter(store_dir, hier.build_rows(new_ids, rp, CFG),
+                         new_ids, rows_per_shard=16)
+    writer.write_next()                      # mid-migration: 1+ shards
+    assert _glob.glob(os.path.join(str(tmp_path), "**", ".tmp_hier_*"),
+                      recursive=True)
+
+    reload_mid = ColdShards(store_dir)       # manifest reload NOW
+    np.testing.assert_array_equal(reload_mid.row_ids, live_ids)
+    probe = np.arange(live_ids.size)
+    np.testing.assert_array_equal(
+        reload_mid.gather_fp32(probe),
+        np.asarray(ps.lookup(packed, jnp.asarray(live_ids))))
+
+    writer.abort()                           # crash-before-swap leg
+    assert not _glob.glob(os.path.join(str(tmp_path), "**",
+                                       ".tmp_hier_*"), recursive=True)
+    np.testing.assert_array_equal(ColdShards(store_dir).row_ids,
+                                  live_ids)
+
+    # second writer runs to publish: reload sees the NEW generation...
+    w2 = ShardWriter(store_dir, hier.build_rows(new_ids, rp, CFG),
+                     new_ids, rows_per_shard=16)
+    w2.publish()
+    w2.abort()                               # idempotent after publish
+    reload_new = ColdShards(store_dir)
+    np.testing.assert_array_equal(reload_new.row_ids, new_ids)
+    np.testing.assert_array_equal(
+        reload_new.gather_fp32(np.arange(new_ids.size)),
+        np.asarray(ps.lookup(pack(st2, CFG), jnp.asarray(new_ids))))
+    # ...while the PREVIOUS generation's open mmaps stay valid
+    np.testing.assert_array_equal(
+        reload_mid.gather_fp32(probe),
+        np.asarray(ps.lookup(packed, jnp.asarray(live_ids))))
+
+
 def test_hier_mesh4_oracle_subprocess(tmp_path):
     """Three-level lookup on a 4-way mesh == single-device flat pack,
     bit for bit, before and after a promote/demote migration."""

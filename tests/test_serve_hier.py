@@ -174,9 +174,11 @@ def test_loop_result_carries_hier_stats(tmp_path):
     stats = {**hsrv.stats.as_dict(), **hsrv.hier.stats.as_dict()}
     res = LoopResult(lat_s=(0.1,), qps=1.0, steady_qps=1.0,
                      p50_us=1.0, p95_us=1.0, p99_us=1.0,
-                     p99_retier_attributed=0.0, stats=stats)
+                     p99_retier_attributed=0.0,
+                     p99_while_retiering=0.0, stats=stats)
     d = res.as_dict()
     for key in ("warm_hits", "cold_hits", "staged_rows", "promoted",
                 "demoted", "cache_hit_rate", "latency_p50",
-                "latency_p95", "latency_p99", "p99_retier_attributed"):
+                "latency_p95", "latency_p99", "p99_retier_attributed",
+                "p99_while_retiering"):
         assert key in d

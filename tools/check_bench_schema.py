@@ -34,6 +34,7 @@ QPS_TOP = {
     "cache_rows": numbers.Integral,
     "retier_every": numbers.Integral,
     "drift": numbers.Real,
+    "retier_async": bool,
     "packed_fp32_ratio": numbers.Real,
     "bytes_per_request_fp32": numbers.Integral,
     "bytes_per_request_packed": numbers.Integral,
@@ -42,14 +43,22 @@ QPS_TOP = {
 
 # histogram-derived latency columns every online sweep entry carries
 # (serve.loop.LoopResult.as_dict); p99_retier_attributed is the
-# fraction of the p99 tail's wall time spent inside retier/migrate
+# fraction of the p99 tail's wall time spent inside retier/migrate,
+# p99_while_retiering the p99 over only the warm batches that
+# overlapped shadow build / swap work (0.0 when there were none)
 LATENCY_KEYS = {
     "p95_us": numbers.Real,
     "latency_p50": numbers.Real,
     "latency_p95": numbers.Real,
     "latency_p99": numbers.Real,
     "p99_retier_attributed": numbers.Real,
+    "p99_while_retiering": numbers.Real,
 }
+
+# with --retier-async the re-tier runs as a chunked shadow build off
+# the request path; the whole point is the tail, so entries must hold
+# the p99 (overall AND during re-tiering) to this multiple of the p50
+RETIER_TAIL_BUDGET = 10.0
 
 QPS_SWEEP = {
     "serve_batch": numbers.Integral,
@@ -63,6 +72,8 @@ QPS_SWEEP = {
     "cache_hit_rate": numbers.Real,
     "retiers": numbers.Integral,
     "rows_moved": numbers.Integral,
+    "swaps": numbers.Integral,
+    "shadow_builds": numbers.Integral,
     "bytes_per_request_fp32": numbers.Integral,
     "bytes_per_request_packed": numbers.Integral,
     **LATENCY_KEYS,
@@ -76,6 +87,7 @@ HIER_TOP = {
     "cache_rows": numbers.Integral,
     "retier_every": numbers.Integral,
     "drift": numbers.Real,
+    "retier_async": bool,
     "packed_fp32_ratio": numbers.Real,
     "full_store_bytes": numbers.Integral,
     "sweep": list,
@@ -99,6 +111,8 @@ HIER_SWEEP = {
     "migrations": numbers.Integral,
     "promoted": numbers.Integral,
     "demoted": numbers.Integral,
+    "swaps": numbers.Integral,
+    "shadow_builds": numbers.Integral,
     **LATENCY_KEYS,
 }
 
@@ -153,11 +167,38 @@ def _check_latency(entries: list[dict], errors: list) -> None:
                           f"p99 {ps[2]})")
 
 
+def _check_tail_budget(rec: dict, entries: list[dict],
+                       errors: list) -> None:
+    """Async re-tiering's contract: the p99 tail — overall and over the
+    batches that overlapped shadow work — stays within
+    ``RETIER_TAIL_BUDGET`` x the p50.  Enforced only on records that
+    actually re-tiered asynchronously (``retier_async`` true and a
+    positive cadence); the synchronous path is what this budget exists
+    to indict."""
+    if rec.get("retier_async") is not True:
+        return
+    cadence = rec.get("retier_every")
+    if not (isinstance(cadence, numbers.Integral) and cadence > 0):
+        return
+    for i, e in enumerate(entries):
+        p50 = e.get("latency_p50")
+        if not _is_num(p50) or p50 <= 0:
+            continue
+        for key in ("latency_p99", "p99_while_retiering"):
+            val = e.get(key)
+            if _is_num(val) and val > RETIER_TAIL_BUDGET * p50:
+                errors.append(
+                    f"sweep[{i}]: {key} {val} exceeds the async "
+                    f"re-tier tail budget ({RETIER_TAIL_BUDGET:g}x "
+                    f"p50 = {RETIER_TAIL_BUDGET * p50:.1f})")
+
+
 def _validate_qps(rec: dict) -> list[str]:
     errors: list[str] = []
     _check_keys(rec, QPS_TOP, "top-level", errors)
     entries = _check_sweep(rec, QPS_SWEEP, errors)
     _check_latency(entries, errors)
+    _check_tail_budget(rec, entries, errors)
     batches = [e.get("serve_batch") for e in entries]
     if len(set(batches)) != len(batches):
         errors.append("sweep: duplicate serve_batch entries")
@@ -175,6 +216,7 @@ def _validate_hier(rec: dict) -> list[str]:
     _check_keys(rec, HIER_TOP, "top-level", errors)
     entries = _check_sweep(rec, HIER_SWEEP, errors)
     _check_latency(entries, errors)
+    _check_tail_budget(rec, entries, errors)
     fracs = [e.get("hbm_budget_fraction") for e in entries]
     if len(set(fracs)) != len(fracs):
         errors.append("sweep: duplicate hbm_budget_fraction entries")
