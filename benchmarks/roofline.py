@@ -14,6 +14,16 @@ HBM, 4 ICI links x ~50 GB/s.
 
 MODEL_FLOPS uses 6*N*D (dense) / 6*N_active*D (MoE) for LM training,
 2*N*D for LM inference tokens, and analytic op counts for recsys/GNN.
+
+A second ingest path (``kernel_table`` / ``kernel_markdown``) reads the
+MEASURED ``bench_kernel/v1`` record from ``benchmarks/kernels.py``
+instead of modelled HLO numbers: per swept shape it reports achieved
+bytes/s against the HBM peak for the dequant-bag kernel ladder —
+rowgrid (no pipelining) vs tiled+double-buffered vs the fused
+bag->matmul kernel — so the pipelining and fusion wins show up as
+bandwidth fractions, not just microseconds.  On the interpret backend
+the absolute fractions are meaningless (interpreter timings); the
+*ratios* between ladder rungs are still the quantity of interest.
 """
 
 from __future__ import annotations
@@ -108,6 +118,76 @@ def markdown(mesh: str = "single") -> str:
             f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
             f"{r['dominant']} | {mfr} | {r['roofline_fraction']:.2f} | "
             f"{r['peak_gib']:.2f} |")
+    return "\n".join(out)
+
+
+BENCH_KERNEL = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_kernel.json")
+
+# display order of the kernel ladder: each rung removes a bottleneck
+# of the one above it
+_LADDER = ("dequant_bag_rowgrid", "dequant_bag", "bag_grad",
+           "unfused_bag_matmul", "bag_matmul")
+
+
+def kernel_table(path: str = BENCH_KERNEL) -> list[dict]:
+    """Measured kernel rows: achieved vs peak HBM bytes/s per shape.
+
+    ``us`` is the best measured time (min of analytic pick and swept
+    winner), ``achieved_gbs`` the bytes-touched model over that time,
+    ``peak_fraction`` achieved / 819 GB/s, and ``vs_rowgrid`` the
+    speedup over the unpipelined rowgrid baseline at the same shape
+    (the pipelining win; for bag_matmul vs unfused_bag_matmul it is
+    reported separately as ``vs_unfused`` — the fusion win)."""
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("schema") != "bench_kernel/v1":
+        raise ValueError(f"{path}: not a bench_kernel/v1 record")
+    by_shape: dict[tuple, dict[str, dict]] = {}
+    for e in rec["sweep"]:
+        by_shape.setdefault((e["b"], e["k"], e["d"]), {})[e["kernel"]] = e
+    rows = []
+    for (b, k, d), group in sorted(by_shape.items()):
+        base = group.get("dequant_bag_rowgrid")
+        unfused = group.get("unfused_bag_matmul")
+        for kernel in _LADDER:
+            e = group.get(kernel)
+            if e is None:
+                continue
+            us = min(e["analytic_us"], e["measured_us"])
+            row = {
+                "kernel": kernel, "b": b, "k": k, "d": d, "h": e["h"],
+                "backend": rec["backend"], "us": us,
+                "achieved_gbs": e["achieved_gbs"],
+                "peak_fraction": e["peak_fraction"],
+                "block_measured": tuple(e["block_measured"]),
+                "tune_speedup": e["speedup"],
+            }
+            if base is not None and kernel.startswith("dequant_bag"):
+                row["vs_rowgrid"] = (
+                    min(base["analytic_us"], base["measured_us"]) / us
+                    if us > 0 else None)
+            if unfused is not None and kernel == "bag_matmul":
+                row["vs_unfused"] = (
+                    min(unfused["analytic_us"], unfused["measured_us"])
+                    / us if us > 0 else None)
+            rows.append(row)
+    return rows
+
+
+def kernel_markdown(path: str = BENCH_KERNEL) -> str:
+    rows = kernel_table(path)
+    out = ["| kernel | b | k | d | h | us | GB/s | peak frac | "
+           "tune x | pipeline x | fusion x |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        pipe = f"{r['vs_rowgrid']:.2f}" if r.get("vs_rowgrid") else "-"
+        fuse = f"{r['vs_unfused']:.2f}" if r.get("vs_unfused") else "-"
+        out.append(
+            f"| {r['kernel']} | {r['b']} | {r['k']} | {r['d']} | "
+            f"{r['h'] or '-'} | {r['us']:.1f} | "
+            f"{r['achieved_gbs']:.3f} | {r['peak_fraction']:.2e} | "
+            f"{r['tune_speedup']:.2f} | {pipe} | {fuse} |")
     return "\n".join(out)
 
 

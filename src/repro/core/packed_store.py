@@ -164,6 +164,24 @@ def lookup_fused(packed: PackedStore, indices: Array,
     return packed_lookup_fused(packed, indices, use_pallas=use_pallas)
 
 
+def bag_matmul(packed: PackedStore, indices: Array, w: Array,
+               weights: Array | None = None,
+               use_pallas: bool | None = None,
+               int8_direct: bool = False) -> Array:
+    """Fused bag->first-matmul: (B, F) indices + (F*D, H) weights ->
+    (B, H) without materialising the (B, F*D) embedding activations.
+
+    One fusion level past ``lookup_fused`` (see
+    ``kernels.bag_matmul.ops.packed_bag_matmul``); ``use_pallas=None``
+    auto-selects the fused kernel on TPU and the jnp lookup+einsum
+    oracle where Pallas would be interpreted.
+    """
+    from repro.kernels.bag_matmul.ops import packed_bag_matmul
+    return packed_bag_matmul(packed, indices, w, weights=weights,
+                             use_pallas=use_pallas,
+                             int8_direct=int8_direct)
+
+
 def unpack(packed: PackedStore) -> Array:
     """Full dequantized table fp32[V, D] (round-trip check vs QAT snap)."""
     return lookup(packed, jnp.arange(packed.vocab))

@@ -260,6 +260,74 @@ def sharded_bag_lookup_rect(packed: PackedStore, indices: Array, *,
         packed, indices, weights)
 
 
+def sharded_bag_matmul(packed: PackedStore, indices: Array, w: Array, *,
+                       mesh, axis: str = "model",
+                       weights: Array | None = None,
+                       use_pallas: bool | None = None,
+                       int8_direct: bool = False) -> Array:
+    """Distributed ``packed_bag_matmul``: (B, F) indices + (F*D, H)
+    first-layer weights -> (B, H), replicated.
+
+    One fusion level past ``sharded_bag_lookup_rect``: each shard runs
+    the fused dequant-bag->matmul kernel per tier over the rows it owns
+    (other shards' slots weight-0-skipped), and the single psum moves
+    the (B, H) *post-matmul* activations instead of the (B, F*D) bag
+    tile — for H < F*D the collective shrinks by the same factor the
+    HBM round-trip does.  The first-layer weights are replicated (they
+    are model parameters, tiny next to the table).  With
+    ``use_pallas=False`` falls back to ``_local_rows`` + einsum, the
+    oracle the fused path is tested against.
+    """
+    from repro.kernels.bag_matmul.kernel import bag_matmul_pallas
+    from repro.kernels.bag_matmul.ops import _as_w3
+    if use_pallas is None:
+        use_pallas = not should_interpret()
+    b, f = indices.shape
+    d = packed.payload32.shape[-1]
+    w3 = _as_w3(w, f, d).astype(jnp.float32)
+
+    def local(pk, idx, wts):
+        code = jnp.take(pk.indirect, idx, axis=0)
+        tier = code >> _TIER_SHIFT
+        loc = code & _IDX_MASK
+        i = jax.lax.axis_index(axis)
+        if not use_pallas:
+            rows = _local_rows(pk, idx, axis)
+            if wts is not None:
+                rows = rows * wts[..., None]
+            out = jnp.einsum("bfd,fdh->bh", rows, w3,
+                             preferred_element_type=jnp.float32)
+            return jax.lax.psum(out, axis)
+        ones32 = jnp.ones((pk.payload32.shape[0],), jnp.float32)
+        out = jnp.zeros((idx.shape[0], w3.shape[-1]), jnp.float32)
+        for t, payload, scale in (
+                (Tier.INT8.value, pk.payload8, pk.scale8),
+                (Tier.HALF.value, pk.payload16, pk.scale16),
+                (Tier.FP32.value, pk.payload32, ones32)):
+            v_loc = payload.shape[0]
+            l = loc - i * v_loc
+            mine = (tier == t) & (l >= 0) & (l < v_loc)
+            wt = mine.astype(jnp.float32)
+            if wts is not None:
+                wt = wt * wts
+            lc = jnp.clip(l, 0, v_loc - 1)
+            out = out + bag_matmul_pallas(
+                payload, scale, lc, wt, w3,
+                scale_after=int8_direct and t == Tier.INT8.value)
+        return jax.lax.psum(out, axis)
+
+    pk_specs = packed_pspecs(axis)
+    if weights is None:
+        fn = shard_map(lambda pk, idx: local(pk, idx, None), mesh=mesh,
+                       in_specs=(pk_specs, P()),
+                       out_specs=P(), check_rep=False)
+        return fn(packed, indices)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(pk_specs, P(), P()),
+                     out_specs=P(), check_rep=False)(
+        packed, indices, weights)
+
+
 def sharded_lookup_train(table: Array, indices: Array, *, mesh,
                          axis: str = "model",
                          use_pallas: bool | None = None) -> Array:

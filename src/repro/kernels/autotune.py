@@ -1,0 +1,205 @@
+"""Measured autotune cache for Pallas kernel block sizes.
+
+``ops.resolve_block_sizes`` used to stop at an analytic VMEM-budget
+model.  This module adds the measured layer: a timing sweep over
+candidate (B_block, D_block) tilings per
+``(backend, kernel, dtype, B, K, D)`` key, persisted to a versioned
+JSON cache so serving processes never pay the sweep.
+
+Contract:
+
+  * The serving path only ever **reads** the cache
+    (``lookup_cached``); a cold miss falls back to the analytic pick.
+    Runtime never times kernels inline.
+  * Sweeps run out-of-band — ``benchmarks.kernels --seed-cache`` on the
+    target backend, or the CI ``autotune-smoke`` job on the interpret
+    backend — and write through ``store``.
+  * Cache location: ``REPRO_AUTOTUNE_CACHE`` env var, else
+    ``results/autotune.json`` relative to the working directory.  An
+    empty env value disables the cache entirely.
+  * Invalidation: a file whose ``schema`` field is not
+    ``autotune_cache/v1`` — or that does not parse, or whose entry is
+    malformed — is ignored wholesale (analytic fallback, never an
+    error).  Keys embed backend + shape + dtype, so a mesh/backend
+    change is a key miss, not a stale hit.
+
+The in-memory copy reloads when the file's mtime or path changes, so
+a sweep seeded by another process is picked up without a restart.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+
+CACHE_SCHEMA = "autotune_cache/v1"
+DEFAULT_CACHE_PATH = os.path.join("results", "autotune.json")
+
+_ENV = "REPRO_AUTOTUNE_CACHE"
+
+
+def cache_path() -> str | None:
+    """Resolved cache file path; None when the cache is disabled."""
+    p = os.environ.get(_ENV)
+    if p is None:
+        return DEFAULT_CACHE_PATH
+    return p or None  # empty string disables
+
+
+def backend_name() -> str:
+    """Cache-key backend: the compiled target, or "interpret" when the
+    kernels run under the Pallas interpreter (block timings there are
+    interpreter timings, not TPU timings — they must never be served
+    to a compiled backend, hence the distinct key)."""
+    from repro.kernels import should_interpret
+    return "interpret" if should_interpret(None) else jax.default_backend()
+
+
+def cache_key(kernel: str, dtype: str, b: int, k: int, d: int,
+              extra: str = "") -> str:
+    return (f"{backend_name()}|{kernel}|{dtype}"
+            f"|b={int(b)}|k={int(k)}|d={int(d)}{extra}")
+
+
+# --------------------------------------------------------------------- I/O
+
+# (path, mtime_ns) -> entries dict; one stat() per lookup, one read per
+# file change
+_loaded: dict = {"path": None, "mtime": None, "entries": {}}
+
+
+def _read_entries(path: str) -> dict:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if not isinstance(doc, dict) or doc.get("schema") != CACHE_SCHEMA:
+            return {}
+        entries = doc.get("entries")
+        return entries if isinstance(entries, dict) else {}
+    except (OSError, ValueError):
+        # missing, unreadable or corrupt cache: behave as empty
+        return {}
+
+
+def _entries() -> dict:
+    path = cache_path()
+    if path is None:
+        return {}
+    try:
+        mtime = os.stat(path).st_mtime_ns
+    except OSError:
+        mtime = None
+    if _loaded["path"] != path or _loaded["mtime"] != mtime:
+        _loaded["entries"] = _read_entries(path) if mtime is not None else {}
+        _loaded["path"] = path
+        _loaded["mtime"] = mtime
+    return _loaded["entries"]
+
+
+def lookup_cached(kernel: str, dtype: str, b: int, k: int, d: int,
+                  extra: str = "") -> tuple[int, int] | None:
+    """(block_b, block_d) for the key, or None on miss/malformed entry."""
+    e = _entries().get(cache_key(kernel, dtype, b, k, d, extra))
+    if not isinstance(e, dict):
+        return None
+    bb, bd = e.get("block_b"), e.get("block_d")
+    if (isinstance(bb, int) and isinstance(bd, int)
+            and bb >= 1 and bd >= 1):
+        return bb, bd
+    return None
+
+
+def store(kernel: str, dtype: str, b: int, k: int, d: int,
+          block_b: int, block_d: int, us: float,
+          extra: str = "") -> str | None:
+    """Write one measured entry through to the cache file (atomic
+    replace, other entries preserved).  Returns the path written."""
+    path = cache_path()
+    if path is None:
+        return None
+    entries = dict(_read_entries(path))
+    entries[cache_key(kernel, dtype, b, k, d, extra)] = {
+        "block_b": int(block_b), "block_d": int(block_d),
+        "us": float(us),
+    }
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"schema": CACHE_SCHEMA, "entries": entries}, f,
+                  indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    _loaded["mtime"] = None  # force reload on next lookup
+    return path
+
+
+# ----------------------------------------------------------------- sweeps
+
+
+def time_us(fn: Callable[[], jax.Array], iters: int = 3,
+            warmup: int = 1) -> float:
+    """min-of-N wall time of ``fn`` in microseconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def sweep(run: Callable[[int, int], Callable[[], jax.Array]],
+          candidates: list[tuple[int, int]], iters: int = 3) -> dict:
+    """Time ``run(block_b, block_d)()`` for every candidate tiling.
+
+    Returns ``{"best": (bb, bd), "best_us": t, "sweep": [...]}`` with
+    one ``{"block_b", "block_d", "us"}`` row per candidate.  Candidates
+    that fail to build/launch are recorded with ``us: None`` and
+    excluded from ``best`` (a tiling the backend rejects must never win).
+    """
+    rows = []
+    best, best_us = None, float("inf")
+    for bb, bd in candidates:
+        try:
+            us = time_us(run(bb, bd), iters=iters)
+        except Exception:
+            rows.append({"block_b": bb, "block_d": bd, "us": None})
+            continue
+        rows.append({"block_b": bb, "block_d": bd, "us": us})
+        if us < best_us:
+            best, best_us = (bb, bd), us
+    if best is None:
+        raise RuntimeError("autotune sweep: every candidate failed")
+    return {"best": best, "best_us": best_us, "sweep": rows}
+
+
+def candidate_tilings(b: int, k: int, d: int, itemsize: int = 1
+                      ) -> list[tuple[int, int]]:
+    """Candidate (B_block, D_block) grid around the analytic pick.
+
+    Always contains the analytic pick itself, so a measured winner is
+    by construction no slower than the analytic model on the swept
+    backend — the invariant ``bench_kernel/v1`` asserts.
+    """
+    from repro.kernels.dequant_bag.ops import resolve_block_sizes
+    ab, ad = resolve_block_sizes(b, k, d, itemsize)
+
+    ds = {ad}
+    divisors = [x for x in range(1, min(d, 512) + 1) if d % x == 0]
+    ds.add(divisors[-1])
+    ds.update(x for x in divisors if x % 128 == 0)
+    if d <= 512:
+        ds.add(d)
+    bs = {ab, max(1, ab // 2), min(b, max(1, ab * 2)), min(b, 8), 1}
+    cands = sorted({(bb, bd) for bb in bs for bd in ds
+                    if 1 <= bb <= b and 1 <= bd})
+    # keep the sweep bounded: analytic pick first, then the rest
+    cands.remove((ab, ad))
+    return [(ab, ad)] + cands[:11]

@@ -1,0 +1,2 @@
+from repro.kernels.bag_matmul.autodiff import bag_matmul_train  # noqa: F401
+from repro.kernels.bag_matmul.ops import packed_bag_matmul  # noqa: F401

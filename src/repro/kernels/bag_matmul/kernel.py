@@ -1,0 +1,210 @@
+"""Pallas TPU kernel: fused gather + dequant + bag -> first matmul.
+
+``dequant_bag`` stops at the (B, D) bag tile, which every model then
+feeds to its first dense layer — so the (B, F*D) fp32 activations
+round-trip through HBM between the two ops.  This kernel carries the
+fusion one layer further: the dequantized rows live only in VMEM
+scratch and feed the MXU directly, so the fp32 embedding activations
+never touch HBM.  Same split-the-hot-loop philosophy as the
+flash-decode attention kernel referenced in SNIPPETS.md, applied to
+the SHARK serving path.
+
+Layout (``bag_matmul_pallas``):
+
+  grid = (ceil(B / B_block), ceil(H / H_block))
+  indices   (B, K) int32    scalar-prefetched (SMEM)
+  scales    (B_block, K)    VMEM block: gathered row scales
+  weights   (B_block, K)    VMEM block: per-slot weight (0 = skip)
+  payload   (V, D)          HBM (ANY); full rows DMA'd manually
+  w3        (K, D, H_block) VMEM block: per-field first-layer weights
+  out       (B_block, H_block) fp32, accumulated in-kernel
+  scratch   rows  (B_block, D) fp32 dequantized field tile
+            land  (nbuf, D)  payload-dtype double-buffered landing ring
+            sems  (nbuf,)    one DMA semaphore per ring buffer
+
+Per field k the kernel streams the tile's B_block rows through the
+landing ring (DMA for row b+nbuf issued while row b dequantizes — the
+same pipeline as ``dequant_bag``), writes ``(row * scale) * weight``
+into the fp32 ``rows`` scratch (bit-identical per slot to what
+``packed_bag_lookup`` produces — zero-weight slots become exact zero
+rows), then fires one (B_block, D) x (D, H_block) MXU matmul and
+accumulates into the output tile.  Accumulation over k is sequential,
+matching the bag kernel's slot order.  One rounding caveat: the bag
+sum here is round-to-storage per slot then add (the scratch write
+rounds the product), whereas ``dequant_bag``'s ``out += (row*s)*w``
+may contract to an FMA under XLA (single rounding) — so multi-slot
+bags with non-unit weights can differ from ``packed_bag_lookup`` by
+1 ulp.  K=1 and unit-weight bags are bit-identical; this kernel's
+result equals exact fp32 sequential accumulation.
+
+``scale_after=True`` is the int8-in specialisation used when every
+live slot of a call shares the int8 tier: the matmul consumes the raw
+converted rows and ``scale * weight`` scales the (B_block, H_block)
+product per output row instead — mathematically identical (the matmul
+is row-linear), one fewer (B_block, D) VPU multiply, and the MXU
+input stays a pure convert of the int8 payload.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import should_interpret
+
+Array = jax.Array
+
+
+def _bag_matmul_kernel(idx_ref, scale_ref, weight_ref, payload_ref,
+                       w_ref, out_ref, rows_ref, land_ref, sems, *,
+                       block_b: int, block_h: int, k: int, nbuf: int,
+                       scale_after: bool):
+    i = pl.program_id(0)
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    for kk in range(k):
+        def row_dma(b, kk=kk):
+            row = idx_ref[i * block_b + b, kk]
+            buf = b % nbuf
+            return pltpu.make_async_copy(
+                payload_ref.at[pl.ds(row, 1), :],
+                land_ref.at[pl.ds(buf, 1), :],
+                sems.at[buf])
+
+        def start(b, kk=kk):
+            @pl.when(weight_ref[b, kk] != 0.0)
+            def _():
+                row_dma(b).start()
+
+        def warm(b, carry):
+            start(b)
+            return carry
+
+        jax.lax.fori_loop(0, min(nbuf, block_b), warm, 0)
+
+        def fill(b, carry, kk=kk):
+            w = weight_ref[b, kk]
+
+            @pl.when(w != 0.0)
+            def _():
+                row_dma(b).wait()
+                row = land_ref[pl.ds(b % nbuf, 1), :].astype(jnp.float32)
+                if scale_after:
+                    rows_ref[pl.ds(b, 1), :] = row
+                else:
+                    rows_ref[pl.ds(b, 1), :] = (row * scale_ref[b, kk]) * w
+
+            @pl.when(w == 0.0)
+            def _():
+                # dead slots must contribute exact zeros to the matmul
+                # (and never leave uninitialised scratch on the MXU path)
+                rows_ref[pl.ds(b, 1), :] = jnp.zeros(
+                    (1, rows_ref.shape[1]), jnp.float32)
+
+            @pl.when(b + nbuf < block_b)
+            def _():
+                start(b + nbuf)
+            return carry
+
+        jax.lax.fori_loop(0, block_b, fill, 0)
+
+        prod = jnp.dot(rows_ref[...], w_ref[kk],
+                       preferred_element_type=jnp.float32)
+        if scale_after:
+            coeff = scale_ref[:, kk] * weight_ref[:, kk]
+            prod = prod * coeff[:, None]
+        out_ref[...] += prod
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_h", "nbuf",
+                                    "scale_after", "interpret"))
+def _bag_matmul_call(payload: Array, scales: Array, indices: Array,
+                     weights: Array, w3: Array, *, block_b: int,
+                     block_h: int, nbuf: int, scale_after: bool,
+                     interpret: bool) -> Array:
+    v, d = payload.shape
+    b, k = indices.shape
+    h = w3.shape[-1]
+    indices = indices.astype(jnp.int32)
+    sg = jnp.take(scales, indices, axis=0).astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+    w3 = w3.astype(jnp.float32)
+
+    nb = -(-b // block_b)
+    bp = nb * block_b
+    if bp != b:
+        # grid padding: extra bags carry weight 0 -> zero rows, zero out
+        indices = jnp.pad(indices, ((0, bp - b), (0, 0)))
+        sg = jnp.pad(sg, ((0, bp - b), (0, 0)))
+        weights = jnp.pad(weights, ((0, bp - b), (0, 0)))
+    nh = -(-h // block_h)
+    hp = nh * block_h
+    if hp != h:
+        # non-dividing block_h: pad the weight columns; padded outputs
+        # are sliced off below
+        w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, hp - h)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, nh),
+        in_specs=[
+            pl.BlockSpec((block_b, k), lambda i, j, idx: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i, j, idx: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((k, d, block_h), lambda i, j, idx: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_h),
+                               lambda i, j, idx: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, d), jnp.float32),
+            pltpu.VMEM((nbuf, d), payload.dtype),
+            pltpu.SemaphoreType.DMA((nbuf,)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_bag_matmul_kernel, block_b=block_b,
+                          block_h=block_h, k=k, nbuf=nbuf,
+                          scale_after=scale_after),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bp, hp), jnp.float32),
+        interpret=interpret,
+    )(indices, sg, weights, payload, w3)
+    return out[:b, :h]
+
+
+def bag_matmul_pallas(payload: Array, scales: Array, indices: Array,
+                      weights: Array | None, w3: Array,
+                      interpret: bool | None = None, *,
+                      block_b: int | None = None,
+                      block_h: int | None = None,
+                      nbuf: int | None = None,
+                      scale_after: bool = False) -> Array:
+    """payload (V, D), indices (B, K), w3 (K, D, H) -> (B, H) fp32.
+
+    One fused kernel call: gather + dequant + per-field matmul
+    accumulate; the (B, K, D) fp32 rows exist only in VMEM scratch.
+    Block sizes default to ``ops.resolve_bm_block_sizes`` (measured
+    autotune cache under the ``bag_matmul`` key, analytic fallback).
+    """
+    b, k = indices.shape
+    d = payload.shape[1]
+    h = w3.shape[-1]
+    if weights is None:
+        weights = jnp.ones((b, k), jnp.float32)
+    from repro.kernels.bag_matmul.ops import resolve_bm_block_sizes
+    from repro.kernels.dequant_bag.ops import resolve_nbuf
+    block_b, block_h = resolve_bm_block_sizes(
+        b, k, d, h, payload.dtype.itemsize, block_b, block_h,
+        dtype=str(payload.dtype))
+    if nbuf is None:
+        nbuf = resolve_nbuf(block_b)
+    nbuf = max(1, min(int(nbuf), block_b))
+    return _bag_matmul_call(payload, scales, indices, weights, w3,
+                            block_b=block_b, block_h=block_h, nbuf=nbuf,
+                            scale_after=bool(scale_after),
+                            interpret=should_interpret(interpret))

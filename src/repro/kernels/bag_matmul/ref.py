@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused dequant-bag -> matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def bag_matmul_ref(payload: Array, scales: Array, indices: Array,
+                   weights: Array | None, w3: Array) -> Array:
+    """payload (V, D), scales (V,), indices (B, K), w3 (K, D, H)
+    -> (B, H) fp32:  out[b] = sum_k (payload[i_bk]*scale*weight) @ w3[k].
+
+    The unfused reference: dequantized rows materialise as a (B, K, D)
+    fp32 intermediate before the matmul — exactly the HBM round-trip
+    the fused kernel eliminates.  For a per-field first MLP layer this
+    equals ``emb.reshape(B, K*D) @ w3.reshape(K*D, H)``.
+    """
+    rows = jnp.take(payload, indices, axis=0).astype(jnp.float32)
+    rows = rows * jnp.take(scales, indices, axis=0)[..., None]
+    if weights is not None:
+        rows = rows * weights[..., None].astype(jnp.float32)
+    return jnp.einsum("bkd,kdh->bh", rows, w3.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)

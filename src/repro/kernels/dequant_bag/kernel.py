@@ -18,14 +18,22 @@ Tiled layout (``dequant_bag_pallas``):
   scratch   (B_block*K, D_block) payload-dtype row landing buffer
             + one DMA semaphore per slot
 
-Each grid step batch-issues the async row-slice copies for its whole
-(B_block, K) tile — skipping zero-weight slots entirely — then drains
-them in slot order, accumulating ``(row * scale) * weight`` into the
-output tile.  Issuing all DMAs before the first wait is what coalesces
-the per-row transfers: the DMA engine pipelines B_block*K row bursts
-per tile instead of one (1, D) copy per grid step, and blocking over D
-keeps the VMEM footprint bounded for large dims (a (1, D) tile no
-longer has to fit a whole row).
+Each grid step streams its (B_block, K) slots through a
+**double-buffered landing ring**: an ``nbuf``-deep scratch of (1,
+D_block) row buffers with one DMA semaphore each.  The first ``nbuf``
+live slots' copies are issued up front; draining slot *i* then waits
+its buffer, accumulates ``(row * scale) * weight`` into the output
+tile, and immediately starts slot *i+nbuf*'s copy into the freed
+buffer — so row DMA latency hides behind the VPU dequant math instead
+of serializing with it, with up to ``nbuf`` transfers in flight.
+Zero-weight (padded / other-tier) slots skip both the start and the
+wait.  Ring depth defaults to ``ops.resolve_nbuf`` (env
+``REPRO_DEQUANT_NBUF``); the ring replaces the old (B_block*K,
+D_block) all-slots landing buffer, shrinking scratch VMEM from
+O(B_block*K) rows to O(nbuf) and freeing budget for larger output
+tiles (see ``ops._auto_block_b``).  Blocking over D keeps the
+footprint bounded for large dims (a (1, D) tile never has to fit a
+whole row).
 
 Accumulation is sequential in k per bag, so results are bit-identical
 to the (B, K)-grid kernel (kept as ``dequant_bag_pallas_rowgrid``) and
@@ -56,7 +64,8 @@ Array = jax.Array
 
 
 def _tiled_kernel(idx_ref, scale_ref, weight_ref, payload_ref, out_ref,
-                  rows_ref, sems, *, block_b: int, block_d: int, k: int):
+                  rows_ref, sems, *, block_b: int, block_d: int, k: int,
+                  nbuf: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
     d0 = j * block_d
@@ -65,18 +74,23 @@ def _tiled_kernel(idx_ref, scale_ref, weight_ref, payload_ref, out_ref,
     def row_dma(slot):
         b, kk = slot // k, slot % k
         row = idx_ref[i * block_b + b, kk]
+        buf = slot % nbuf
         return pltpu.make_async_copy(
             payload_ref.at[pl.ds(row, 1), pl.ds(d0, block_d)],
-            rows_ref.at[pl.ds(slot, 1), :],
-            sems.at[slot])
+            rows_ref.at[pl.ds(buf, 1), :],
+            sems.at[buf])
 
-    def start(slot, carry):
+    def start(slot):
         @pl.when(weight_ref[slot // k, slot % k] != 0.0)
         def _():
             row_dma(slot).start()
+
+    # prime the ring: the first nbuf slots' copies go in flight now
+    def warm(slot, carry):
+        start(slot)
         return carry
 
-    jax.lax.fori_loop(0, nslots, start, 0)
+    jax.lax.fori_loop(0, min(nbuf, nslots), warm, 0)
     out_ref[...] = jnp.zeros_like(out_ref)
 
     def drain(slot, carry):
@@ -86,18 +100,28 @@ def _tiled_kernel(idx_ref, scale_ref, weight_ref, payload_ref, out_ref,
         @pl.when(w != 0.0)
         def _():
             row_dma(slot).wait()
-            row = rows_ref[pl.ds(slot, 1), :].astype(jnp.float32)
+            buf = slot % nbuf
+            row = rows_ref[pl.ds(buf, 1), :].astype(jnp.float32)
             out_ref[pl.ds(b, 1), :] += (row * scale_ref[b, kk]) * w
+
+        # refill: slot+nbuf reuses this buffer, which is free exactly
+        # now — its DMA (if any) was waited above.  Issued even when
+        # the current slot is dead: the dead slot never touched the
+        # buffer, and its prior tenant (slot-nbuf) was already drained.
+        @pl.when(slot + nbuf < nslots)
+        def _():
+            start(slot + nbuf)
         return carry
 
     jax.lax.fori_loop(0, nslots, drain, 0)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_b", "block_d", "interpret"))
+                   static_argnames=("block_b", "block_d", "nbuf",
+                                    "interpret"))
 def _tiled_call(payload: Array, scales: Array, indices: Array,
                 weights: Array, *, block_b: int, block_d: int,
-                interpret: bool) -> Array:
+                nbuf: int, interpret: bool) -> Array:
     v, d = payload.shape
     b, k = indices.shape
     indices = indices.astype(jnp.int32)
@@ -131,13 +155,13 @@ def _tiled_call(payload: Array, scales: Array, indices: Array,
         out_specs=pl.BlockSpec((block_b, block_d),
                                lambda i, j, idx: (i, j)),
         scratch_shapes=[
-            pltpu.VMEM((block_b * k, block_d), payload.dtype),
-            pltpu.SemaphoreType.DMA((block_b * k,)),
+            pltpu.VMEM((nbuf, block_d), payload.dtype),
+            pltpu.SemaphoreType.DMA((nbuf,)),
         ],
     )
     out = pl.pallas_call(
         functools.partial(_tiled_kernel, block_b=block_b,
-                          block_d=block_d, k=k),
+                          block_d=block_d, k=k, nbuf=nbuf),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bp, dp), jnp.float32),
         interpret=interpret,
@@ -149,23 +173,32 @@ def dequant_bag_pallas(payload: Array, scales: Array, indices: Array,
                        weights: Array | None = None,
                        interpret: bool | None = None, *,
                        block_b: int | None = None,
-                       block_d: int | None = None) -> Array:
+                       block_d: int | None = None,
+                       nbuf: int | None = None) -> Array:
     """payload (V, D), scales (V,), indices (B, K) -> (B, D) fp32 bags.
 
-    Tiled (B_block, D_block) kernel; block sizes default to the
-    autotune-lite picker in ``ops.pick_block_sizes``.  ``interpret``
-    defaults to backend auto-detection (``kernels.should_interpret``).
+    Tiled (B_block, D_block) kernel with an ``nbuf``-deep
+    double-buffered row-DMA landing ring; block sizes default to
+    ``ops.pick_block_sizes`` (measured autotune cache over the analytic
+    model), ``nbuf`` to ``ops.resolve_nbuf``.  ``interpret`` defaults
+    to backend auto-detection (``kernels.should_interpret``).
     """
     b, k = indices.shape
     d = payload.shape[1]
     if weights is None:
         weights = jnp.ones((b, k), jnp.float32)
-    from repro.kernels.dequant_bag.ops import resolve_block_sizes
+    from repro.kernels.dequant_bag.ops import (resolve_block_sizes,
+                                               resolve_nbuf)
     block_b, block_d = resolve_block_sizes(b, k, d,
                                            payload.dtype.itemsize,
-                                           block_b, block_d)
+                                           block_b, block_d,
+                                           kind="dequant_bag",
+                                           dtype=str(payload.dtype))
+    if nbuf is None:
+        nbuf = resolve_nbuf(block_b * k)
+    nbuf = max(1, min(int(nbuf), block_b * k))
     return _tiled_call(payload, scales, indices, weights,
-                       block_b=block_b, block_d=block_d,
+                       block_b=block_b, block_d=block_d, nbuf=nbuf,
                        interpret=should_interpret(interpret))
 
 
@@ -242,15 +275,24 @@ def dequant_bag_pallas_rowgrid(payload: Array, scales: Array,
 # rowgrid layouts, which makes the two kernels bit-equal and the result
 # invariant to (block_b, block_d).
 #
-# Unlike the forward, row DMAs here cannot be batch-issued ahead of the
-# waits: two slots of one tile may address the SAME row, and the second
-# read must observe the first write.  The D-blocked grid keeps the
-# write-combining traffic at exactly the touched-row bytes per column
-# stripe — the roofline-relevant quantity for the QAT backward.
+# Unlike the forward, row DMAs here cannot be batch-issued arbitrarily
+# far ahead of the waits: two slots of one tile may address the SAME
+# row, and the second read must observe the first write.  What CAN
+# overlap — and does, via a two-buffer ring — is slot i+1's row *load*
+# with slot i's row *store*, whenever the two slots address different
+# rows: the next read races only the current write, and the row-index
+# guard serializes exactly the conflicting pairs.  Same-row neighbours
+# (and the slot after a dead slot) fall back to load-after-store.
+# Accumulation order stays (b, k) lexicographic either way — identical
+# in the tiled and rowgrid layouts, which keeps the two kernels
+# bit-equal and the result invariant to (block_b, block_d).  The
+# D-blocked grid keeps the write-combining traffic at exactly the
+# touched-row bytes per column stripe — the roofline-relevant quantity
+# for the QAT backward.
 
 
 def _bag_grad_tiled_kernel(idx_ref, g_ref, coeff_ref, zeros_ref, out_ref,
-                           row_ref, sem, *, block_b: int, block_d: int,
+                           rows_ref, sems, *, block_b: int, block_d: int,
                            k: int):
     del zeros_ref
     i = pl.program_id(0)
@@ -258,22 +300,55 @@ def _bag_grad_tiled_kernel(idx_ref, g_ref, coeff_ref, zeros_ref, out_ref,
     d0 = j * block_d
     nslots = block_b * k
 
-    def scatter(slot, carry):
+    def row_of(slot):
+        s = jnp.minimum(slot, nslots - 1)  # clamp for slot == nslots
+        return idx_ref[i * block_b + s // k, s % k]
+
+    def coeff_of(slot):
+        s = jnp.minimum(slot, nslots - 1)
+        return coeff_ref[s // k, s % k]
+
+    def load_dma(slot):
+        buf = slot % 2
+        src = out_ref.at[pl.ds(row_of(slot), 1), pl.ds(d0, block_d)]
+        return pltpu.make_async_copy(src, rows_ref.at[pl.ds(buf, 1), :],
+                                     sems.at[buf])
+
+    def store_dma(slot):
+        buf = slot % 2
+        dst = out_ref.at[pl.ds(row_of(slot), 1), pl.ds(d0, block_d)]
+        return pltpu.make_async_copy(rows_ref.at[pl.ds(buf, 1), :], dst,
+                                     sems.at[buf])
+
+    def scatter(slot, prefetched):
         b, kk = slot // k, slot % k
         c = coeff_ref[b, kk]
+        nxt = slot + 1
+        # the next slot's load may overlap this slot's store only when
+        # it is live, in range, and addresses a DIFFERENT row (a
+        # same-row read must observe this write)
+        can_prefetch = ((nxt < nslots) & (coeff_of(nxt) != 0.0)
+                        & (row_of(nxt) != row_of(slot)))
+
+        @pl.when((c != 0.0) & (prefetched == 0))
+        def _():
+            load_dma(slot).start()
 
         @pl.when(c != 0.0)
         def _():
-            row = idx_ref[i * block_b + b, kk]
-            src = out_ref.at[pl.ds(row, 1), pl.ds(d0, block_d)]
-            load = pltpu.make_async_copy(src, row_ref, sem)
-            load.start()
-            load.wait()
-            row_ref[...] += c * g_ref[pl.ds(b, 1), :]
-            store = pltpu.make_async_copy(row_ref, src, sem)
-            store.start()
-            store.wait()
-        return carry
+            load_dma(slot).wait()
+            rows_ref[pl.ds(slot % 2, 1), :] += c * g_ref[pl.ds(b, 1), :]
+            store_dma(slot).start()
+
+            @pl.when(can_prefetch)
+            def _():
+                # other buffer: races only the guarded, different-row
+                # store below
+                load_dma(nxt).start()
+
+            store_dma(slot).wait()
+
+        return jnp.where((c != 0.0) & can_prefetch, 1, 0)
 
     jax.lax.fori_loop(0, nslots, scatter, 0)
 
@@ -314,8 +389,8 @@ def _bag_grad_tiled_call(g: Array, coeff: Array, indices: Array, *,
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         scratch_shapes=[
-            pltpu.VMEM((1, block_d), jnp.float32),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, block_d), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
     )
     out = pl.pallas_call(
@@ -340,9 +415,11 @@ def bag_grad_pallas(g: Array, scales: Array | None, indices: Array,
     """g (B, D) fp32, indices (B, K) -> dtable (vocab, D) fp32.
 
     The scatter-add transpose of ``dequant_bag_pallas``; tiled
-    (B_block, D_block) grid with K looped in-kernel.  Block sizes
-    default to the forward's autotune-lite picker (the scratch here is
-    one fp32 row, strictly smaller than the forward's landing buffer).
+    (B_block, D_block) grid with K looped in-kernel, the RMW pipelined
+    two slots deep with a same-row conflict guard (see the kernel
+    comment).  Block sizes default to the shared picker under the
+    ``bag_grad`` autotune-cache key (the scratch here is two fp32
+    rows, strictly smaller than the forward's landing ring).
     """
     b, k = indices.shape
     d = g.shape[1]
@@ -351,7 +428,9 @@ def bag_grad_pallas(g: Array, scales: Array | None, indices: Array,
     if scales is not None:
         coeff = coeff * jnp.take(scales, indices, axis=0)
     from repro.kernels.dequant_bag.ops import resolve_block_sizes
-    block_b, block_d = resolve_block_sizes(b, k, d, 4, block_b, block_d)
+    block_b, block_d = resolve_block_sizes(b, k, d, 4, block_b, block_d,
+                                           kind="bag_grad",
+                                           dtype="float32")
     return _bag_grad_tiled_call(g, coeff, indices, vocab=vocab,
                                 block_b=block_b, block_d=block_d,
                                 interpret=should_interpret(interpret))

@@ -8,10 +8,14 @@ weights, which the tiled kernel skips without issuing their row DMAs.
 serving gather with no (B*K, D) fp32 intermediate, bit-identical to
 ``packed_store.lookup``.
 
-Block sizes come from ``pick_block_sizes`` — an autotune-lite picker:
-a cached analytic model (VMEM budget + divisibility) rather than a
-timing sweep, overridable per call or via
-``REPRO_DEQUANT_BLOCK_B`` / ``REPRO_DEQUANT_BLOCK_D``.
+Block sizes come from ``pick_block_sizes``, which layers four sources
+per dimension (highest wins): explicit call argument, the
+``REPRO_DEQUANT_BLOCK_B`` / ``REPRO_DEQUANT_BLOCK_D`` env overrides,
+a **measured autotune cache** entry (``kernels.autotune`` — a timing
+sweep persisted per backend/kernel/dtype/shape, seeded out-of-band by
+``benchmarks.kernels --seed-cache``), and finally the analytic
+VMEM-budget model.  A cold cache miss therefore costs nothing: the
+analytic pick is the answer, never an inline sweep.
 """
 
 from __future__ import annotations
@@ -29,67 +33,128 @@ from repro.kernels.dequant_bag.ref import dequant_bag_ref
 
 Array = jax.Array
 
-# scratch budget for the (B_block*K, D_block) row landing buffer; ~2 MiB
-# leaves plenty of the ~16 MiB/core VMEM for the pipeline's other blocks
+# VMEM budget for one grid step's working set — the fp32 output tile,
+# the double-buffered row landing ring and the gathered scale/weight
+# blocks; ~2 MiB leaves plenty of the ~16 MiB/core VMEM for the
+# pipeline's other blocks
 _VMEM_SCRATCH_BUDGET = 2 << 20
+
+# default depth of the row-DMA landing ring (see kernel._tiled_kernel);
+# REPRO_DEQUANT_NBUF overrides
+_DEFAULT_NBUF = 4
+
+
+def resolve_nbuf(nslots: int) -> int:
+    """Landing-ring depth: env ``REPRO_DEQUANT_NBUF`` or the default,
+    clamped to [1, nslots] (a tile never needs more buffers than it
+    has row DMAs)."""
+    env = os.environ.get("REPRO_DEQUANT_NBUF")
+    nbuf = max(1, int(env)) if env else _DEFAULT_NBUF
+    return max(1, min(nbuf, nslots))
 
 
 @functools.lru_cache(maxsize=512)
 def _auto_block_d(d: int) -> int:
     divisors = [x for x in range(1, min(d, 512) + 1) if d % x == 0]
     aligned = [x for x in divisors if x % 128 == 0]
-    return max(aligned) if aligned else max(divisors)
+    if aligned:
+        return max(aligned)
+    if d > 512:
+        # awkward dims (prime/odd > 512): no 128-aligned divisor
+        # exists, and the largest plain divisor can degenerate to 1 —
+        # serializing the whole D axis.  The tiled kernels handle
+        # non-dividing blocks via the column-padding edge path, so pick
+        # the 128-aligned block <= 512 that minimises edge-tile waste
+        # (ties -> larger block, fewer grid steps).
+        return min((x for x in range(128, 513, 128)),
+                   key=lambda x: (-(-d // x) * x - d, -x))
+    return max(divisors)
 
 
 @functools.lru_cache(maxsize=512)
 def _auto_block_b(b: int, k: int, block_d: int, itemsize: int,
                   vmem_budget: int) -> int:
+    nbuf = resolve_nbuf(max(1, b) * k)
+
+    def fits(bb: int) -> bool:
+        working = (bb * block_d * 4          # fp32 output tile
+                   + nbuf * block_d * itemsize  # row landing ring
+                   + 2 * bb * k * 4)         # gathered scales + weights
+        return working <= vmem_budget
+
     block_b = 1
-    while (block_b * 2 <= b
-           and block_b * 2 * k * block_d * itemsize <= vmem_budget):
+    while block_b * 2 <= b and fits(block_b * 2):
         block_b *= 2
     return block_b
+
+
+def _cache_dtype(itemsize: int, dtype: str | None) -> str:
+    if dtype is not None:
+        return dtype
+    return {1: "int8", 2: "bfloat16", 4: "float32"}.get(
+        itemsize, f"itemsize{itemsize}")
 
 
 def resolve_block_sizes(b: int, k: int, d: int, itemsize: int = 1,
                         block_b: int | None = None,
                         block_d: int | None = None,
-                        vmem_budget: int = _VMEM_SCRATCH_BUDGET
-                        ) -> tuple[int, int]:
-    """Layer (B_block, D_block) overrides over the analytic pick.
+                        vmem_budget: int = _VMEM_SCRATCH_BUDGET,
+                        kind: str = "dequant_bag",
+                        dtype: str | None = None) -> tuple[int, int]:
+    """Layer (B_block, D_block) overrides over cache and analytic picks.
 
     Precedence per dimension: explicit argument, then
     ``REPRO_DEQUANT_BLOCK_B`` / ``REPRO_DEQUANT_BLOCK_D`` (read per
-    call, so changing them mid-process takes effect), then the
-    autotune-lite pick.  An overridden D_block — from either source —
+    call, so changing them mid-process takes effect), then a measured
+    autotune-cache hit for ``(backend, kind, dtype, b, k, d)``
+    (``kernels.autotune``; read-only — a miss never triggers a sweep),
+    then the analytic pick.  An overridden D_block — from any source —
     re-sizes an unspecified B_block against the *overridden* value, so
-    the VMEM scratch budget holds whichever dimension was pinned.
+    the VMEM budget holds whichever dimension was pinned.
     """
     for name, v in (("block_b", block_b), ("block_d", block_d)):
         if v is not None and v < 1:
             raise ValueError(f"{name} must be >= 1, got {v}")
+    env_b = os.environ.get("REPRO_DEQUANT_BLOCK_B")
+    env_d = os.environ.get("REPRO_DEQUANT_BLOCK_D")
+    cached = None
+    if block_b is None and block_d is None and not env_b and not env_d:
+        # a cache entry is a jointly-tuned pair: it only applies when
+        # neither dimension is pinned by an argument or env override
+        from repro.kernels import autotune
+        cached = autotune.lookup_cached(kind,
+                                        _cache_dtype(itemsize, dtype),
+                                        b, k, d)
     if block_d is None:
-        env_d = os.environ.get("REPRO_DEQUANT_BLOCK_D")
-        block_d = max(1, int(env_d)) if env_d else _auto_block_d(d)
+        if env_d:
+            block_d = max(1, int(env_d))
+        elif cached is not None:
+            block_d = cached[1]
+        else:
+            block_d = _auto_block_d(d)
     if block_b is None:
-        env_b = os.environ.get("REPRO_DEQUANT_BLOCK_B")
-        block_b = (max(1, int(env_b)) if env_b
-                   else _auto_block_b(b, k, int(block_d), itemsize,
-                                      vmem_budget))
+        if env_b:
+            block_b = max(1, int(env_b))
+        elif cached is not None:
+            block_b = cached[0]
+        else:
+            block_b = _auto_block_b(b, k, int(block_d), itemsize,
+                                    vmem_budget)
     return int(block_b), int(block_d)
 
 
 def pick_block_sizes(b: int, k: int, d: int, itemsize: int = 1,
                      vmem_budget: int = _VMEM_SCRATCH_BUDGET
                      ) -> tuple[int, int]:
-    """Autotune-lite (B_block, D_block) picker for the tiled kernel.
+    """(B_block, D_block) picker for the tiled kernel.
 
-    D_block: the largest divisor of D that is <= 512, preferring
-    lane-aligned multiples of 128 (so large dims are split instead of
-    forcing a full-row VMEM tile, and the hot path never pads).
-    B_block: the largest power of two <= B whose (B_block*K, D_block)
-    row scratch fits the VMEM budget.  The analytic picks are cached
-    per shape; env overrides layer on top (``resolve_block_sizes``).
+    Analytic layer: D_block is the largest 128-aligned divisor of D
+    that is <= 512 (any divisor for small dims; a 128-aligned
+    *non-divisor* for awkward D > 512, handled by the kernels' edge
+    padding); B_block is the largest power of two <= B whose working
+    set — fp32 out tile + landing ring + scale/weight blocks — fits
+    the VMEM budget.  Measured autotune-cache hits and env overrides
+    layer on top (``resolve_block_sizes``).
     """
     return resolve_block_sizes(b, k, d, itemsize,
                                vmem_budget=vmem_budget)

@@ -114,6 +114,18 @@ def main() -> None:
                          "lookup is bit-identical to a fully "
                          "device-resident pack of the live store over "
                          "the whole vocab (CI spill smoke)")
+    ap.add_argument("--fuse-matmul", action="store_true",
+                    help="serve through the model's fused head "
+                         "(extras['fused_head']): the deep branch's "
+                         "first matmul runs fused with the embedding "
+                         "gather (kernels.bag_matmul) so the (B, F*D) "
+                         "activations never round-trip through HBM "
+                         "(--online; wide-deep / xdeepfm archs)")
+    ap.add_argument("--autotune-cache", default=None, metavar="PATH",
+                    help="measured kernel-tiling cache to serve with "
+                         "(sets REPRO_AUTOTUNE_CACHE; seed it with "
+                         "benchmarks/kernels.py --seed-cache).  "
+                         "Default: results/autotune.json when present")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="enable the repro.obs registry and write "
                          "metrics_snapshot/v1 JSONL here (one line "
@@ -133,6 +145,14 @@ def main() -> None:
         ap.error("--retier-async requires --online")
     if args.verify_swap and not args.retier_async:
         ap.error("--verify-swap requires --retier-async")
+    if args.fuse_matmul and not args.online:
+        ap.error("--fuse-matmul requires --online")
+    if args.fuse_matmul and args.hbm_budget_mb > 0:
+        ap.error("--fuse-matmul requires a fully resident store "
+                 "(no --hbm-budget-mb)")
+    if args.autotune_cache:
+        import os
+        os.environ["REPRO_AUTOTUNE_CACHE"] = args.autotune_cache
 
     from repro.launch import force_host_device_count
     force_host_device_count(args.mesh)
@@ -245,19 +265,25 @@ def main() -> None:
         if args.serve_batch > 0:
             rec.update(stream_bytes_per_request(
                 tiers_at_pack, spec, args.requests, drift=args.drift))
-            fwd = (serve_forward_hier if server.hier is not None
-                   else serve_forward_microbatched)
-            result = fwd(
-                server, model, spec, params,
-                serve_batch=args.serve_batch, requests=args.requests,
-                drift=args.drift, num_dense=num_dense)
+            if server.hier is not None:
+                result = serve_forward_hier(
+                    server, model, spec, params,
+                    serve_batch=args.serve_batch,
+                    requests=args.requests, drift=args.drift,
+                    num_dense=num_dense)
+            else:
+                result = serve_forward_microbatched(
+                    server, model, spec, params,
+                    serve_batch=args.serve_batch,
+                    requests=args.requests, drift=args.drift,
+                    num_dense=num_dense, fuse_matmul=args.fuse_matmul)
             shape_note = (f"{args.requests} requests micro-batched "
                           f"x{args.serve_batch}")
         else:
             result = serve_forward_loop(
                 server, model, spec, params, batch=args.batch,
                 requests=args.requests, drift=args.drift,
-                num_dense=num_dense)
+                num_dense=num_dense, fuse_matmul=args.fuse_matmul)
             shape_note = f"{args.requests} requests x{args.batch}"
         if args.retier_async:
             # finish any in-flight shadow build synchronously so the
@@ -282,6 +308,7 @@ def main() -> None:
                     "retier_async": args.retier_async,
                     "drift": args.drift,
                     "serve_batch": args.serve_batch,
+                    "fuse_matmul": args.fuse_matmul,
                     "packed_mib": round(packed_bytes / 2 ** 20, 3),
                     "packed_fp32_ratio": round(packed_bytes / fp32, 4)})
         if server.hier is not None:

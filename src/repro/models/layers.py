@@ -59,6 +59,28 @@ def mlp(params: dict, x: Array, act=jax.nn.relu,
     return x
 
 
+def mlp_tail(params: dict, y0: Array, act=jax.nn.relu,
+             final_act: bool = False) -> Array:
+    """Finish an ``mlp`` whose first matmul ran elsewhere.
+
+    ``y0`` is ``x @ params["l0"]["w"]`` *pre-bias* — e.g. the output of
+    the fused dequant-bag->matmul kernel (``kernels.bag_matmul``), which
+    folds the first layer's matmul into the embedding gather.  This adds
+    the layer-0 bias, applies its activation, then runs layers 1..n-1;
+    ``mlp(params, x) == mlp_tail(params, x @ params["l0"]["w"])``.
+    """
+    n = len(params)
+    x = (y0.astype(jnp.float32)
+         + params["l0"]["b"].astype(jnp.float32)).astype(y0.dtype)
+    if n > 1 or final_act:
+        x = act(x)
+    for i in range(1, n):
+        x = dense_bias(params[f"l{i}"], x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
 def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
     return {"g": jnp.ones((dim,), dtype)}
 

@@ -107,6 +107,10 @@ def make_dlrm(cfg: DLRMConfig) -> Model:
     def forward(params, batch, field_mask=None):
         return head(params, embed(params, batch, field_mask), batch)
 
+    # no fused_head: DLRM's first consumer of emb is the Gram
+    # interaction (bfd,bgd->bfg), not a linear layer over the flattened
+    # bag — the fused lookup (packed_lookup_fused) is the fusion
+    # ceiling for this head (docs/kernels.md)
     return Model("dlrm", spec, init, embed, head, forward,
                  _bce_from_emb(head))
 
@@ -155,11 +159,28 @@ def make_wide_deep(cfg: WideDeepConfig) -> Model:
         deep = L.mlp(params["net"]["deep"], emb.reshape(b, -1))[:, 0]
         return deep + wide.sum(axis=(1, 2)) + params["net"]["bias"][0]
 
+    def fused_head(params, batch, bag_matmul):
+        """``head`` with the deep branch's first matmul fused into the
+        embedding gather: ``bag_matmul(w)`` must compute
+        ``emb.reshape(B, F*D) @ w`` (e.g. ``packed_store.bag_matmul``
+        closed over the packed table and the batch's global indices) —
+        the (B, F*D) activations never materialise.  The wide branch is
+        an embed_dim=1 table lookup and stays as-is.
+        """
+        y0 = bag_matmul(params["net"]["deep"]["l0"]["w"])
+        deep = L.mlp_tail(params["net"]["deep"], y0)[:, 0]
+        wide_spec = E.FieldSpec(spec.cardinalities, 1)
+        wide = E.field_lookup(params["wide_table"], batch["indices"],
+                              wide_spec)
+        return deep + wide.sum(axis=(1, 2)) + params["net"]["bias"][0]
+
     def forward(params, batch, field_mask=None):
         return head(params, embed(params, batch, field_mask), batch)
 
     return Model("wide_deep", spec, init, embed, head, forward,
-                 _bce_from_emb(head))
+                 _bce_from_emb(head),
+                 extras={"fused_head": fused_head,
+                         "fused_needs_emb": False})
 
 
 # ======================================================================
@@ -237,11 +258,36 @@ def make_xdeepfm(cfg: XDeepFMConfig) -> Model:
                               wide_spec).sum(axis=(1, 2))
         return cin_logit + deep_logit + wide
 
+    def fused_head(params, batch, bag_matmul, emb):
+        """``head`` with the deep branch's first matmul fused into the
+        embedding gather (``bag_matmul(w)`` as in wide&deep).  The CIN
+        consumes the (B, F, D) field embeddings directly, so ``emb``
+        is still required — only the deep MLP's (B, F*D) reshape +
+        first matmul round-trip is eliminated.
+        """
+        b = emb.shape[0]
+        x0 = emb
+        xk = emb
+        pooled = []
+        for i in range(len(cfg.cin_layers)):
+            xk = cin_layer(params["net"]["cin"][f"w{i}"], xk, x0)
+            pooled.append(xk.sum(axis=-1))
+        cin_feat = jnp.concatenate(pooled, axis=-1)
+        cin_logit = L.dense_bias(params["net"]["cin_out"], cin_feat)[:, 0]
+        y0 = bag_matmul(params["net"]["deep"]["l0"]["w"])
+        deep_logit = L.mlp_tail(params["net"]["deep"], y0)[:, 0]
+        wide_spec = E.FieldSpec(spec.cardinalities, 1)
+        wide = E.field_lookup(params["wide_table"], batch["indices"],
+                              wide_spec).sum(axis=(1, 2))
+        return cin_logit + deep_logit + wide
+
     def forward(params, batch, field_mask=None):
         return head(params, embed(params, batch, field_mask), batch)
 
     return Model("xdeepfm", spec, init, embed, head, forward,
-                 _bce_from_emb(head))
+                 _bce_from_emb(head),
+                 extras={"fused_head": fused_head,
+                         "fused_needs_emb": True})
 
 
 # ======================================================================

@@ -315,10 +315,33 @@ def run_loop(server: OnlineServer,
         stats=server.stats.as_dict())
 
 
+def _fused_entry(server: OnlineServer, model, fuse_matmul: bool):
+    """Resolve the ``fuse_matmul`` serving mode: (fused_head | None,
+    needs_emb, bag_matmul_fn | None).
+
+    Fusion needs the model to expose ``extras["fused_head"]`` (wide&deep
+    and xDeepFM do; DLRM's first consumer of emb is the Gram
+    interaction, so its ceiling is the fused lookup).  When the fused
+    head does not consume raw embeddings the fp32 hot-row cache is
+    bypassed for that branch — the trade the fused kernel makes for
+    eliminating the (B, F*D) HBM round-trip (docs/kernels.md).
+    """
+    if not fuse_matmul:
+        return None, False, None
+    fused = model.extras.get("fused_head")
+    if fused is None:
+        raise ValueError(
+            f"model {model.name!r} has no fused head "
+            "(extras['fused_head']); serve without fuse_matmul")
+    return (fused, bool(model.extras.get("fused_needs_emb")),
+            server.bag_matmul_fn())
+
+
 def serve_forward_loop(server: OnlineServer, model, spec, params, *,
                        batch: int, requests: int, drift: float = 4.0,
                        num_dense: int = 0, a: float = 1.2,
-                       seed: int = 0) -> LoopResult:
+                       seed: int = 0,
+                       fuse_matmul: bool = False) -> LoopResult:
     """Shared online driver: jitted cache-first forward + observe fold.
 
     Serves ``requests`` drifting-zipf batches through
@@ -327,12 +350,25 @@ def serve_forward_loop(server: OnlineServer, model, spec, params, *,
     (which changes payload shapes) recompiles exactly at re-tier
     boundaries and nowhere else.  ``num_dense > 0`` synthesises that
     many dense features per request (DLRM-style heads).
+
+    ``fuse_matmul=True`` serves through ``extras["fused_head"]``: the
+    deep branch's first matmul runs fused with the embedding gather
+    (``kernels.bag_matmul`` via ``server.bag_matmul_fn()``) so the
+    (B, F*D) activations never materialise; heads that don't consume
+    raw embeddings skip the cache-first lookup entirely (hits = 0).
     """
     lfn = server.lookup_fn()
+    fused, needs_emb, bmfn = _fused_entry(server, model, fuse_matmul)
 
     @jax.jit
     def fwd(packed, cache, net, b):
         gidx = E.globalize(b["indices"], spec)
+        if fused is not None:
+            bm = lambda w: bmfn(packed, gidx, w)  # noqa: E731
+            if needs_emb:
+                emb, hits = cached_lookup(packed, cache, gidx, lfn)
+                return fused(net, b, bm, emb), hits, gidx
+            return fused(net, b, bm), jnp.zeros((), jnp.int32), gidx
         emb, hits = cached_lookup(packed, cache, gidx, lfn)
         return model.head(net, emb, b), hits, gidx
 
@@ -377,7 +413,8 @@ def serve_forward_microbatched(server: OnlineServer, model, spec,
                                params, *, serve_batch: int,
                                requests: int, drift: float = 4.0,
                                num_dense: int = 0, a: float = 1.2,
-                               seed: int = 0) -> LoopResult:
+                               seed: int = 0,
+                               fuse_matmul: bool = False) -> LoopResult:
     """Micro-batched online driver: one jitted forward per N requests.
 
     Single-user drifting-zipf requests accumulate into fixed-shape
@@ -392,13 +429,23 @@ def serve_forward_microbatched(server: OnlineServer, model, spec,
     one batch coalesce into a single re-tier otherwise (see
     ``OnlineServer.observe``).  The request stream depends only on the
     seed, not on ``serve_batch``, so QPS across batch sizes compares
-    like-for-like.
+    like-for-like.  ``fuse_matmul`` as in ``serve_forward_loop``
+    (padded slots' fused outputs are garbage-in/ignored-out, exactly
+    like the unfused head's).
     """
     lfn = server.lookup_fn()
+    fused, needs_emb, bmfn = _fused_entry(server, model, fuse_matmul)
 
     @jax.jit
     def fwd(packed, cache, net, b, valid):
         gidx = E.globalize(b["indices"], spec)
+        if fused is not None:
+            bm = lambda w: bmfn(packed, gidx, w)  # noqa: E731
+            if needs_emb:
+                emb, hits = cached_lookup(packed, cache, gidx, lfn,
+                                          valid=valid[:, None])
+                return fused(net, b, bm, emb), hits, gidx
+            return fused(net, b, bm), jnp.zeros((), jnp.int32), gidx
         emb, hits = cached_lookup(packed, cache, gidx, lfn,
                                   valid=valid[:, None])
         return model.head(net, emb, b), hits, gidx

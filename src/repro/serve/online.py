@@ -179,6 +179,26 @@ class OnlineServer:
         return lambda pk, idx: sharded_lookup(pk, idx, mesh=mesh,
                                               axis=axis)
 
+    def bag_matmul_fn(self):
+        """Fused bag->first-matmul matching the placement of
+        ``self.packed``: ``fn(pk, idx, w)`` computes
+        ``lookup(pk, idx).reshape(B, F*D) @ w`` without materialising
+        the embedding activations (``kernels.bag_matmul``); the sharded
+        variant psums the (B, H) post-matmul tile.  Serving drivers use
+        this for models exposing ``extras["fused_head"]`` under
+        ``fuse_matmul`` (not available in hier mode — staged warm/cold
+        rows merge outside the packed store the kernel reads)."""
+        if self.hier is not None:
+            raise ValueError("fused bag->matmul serving requires a "
+                             "fully resident packed store (no hier)")
+        if self.mesh is None:
+            from repro.core.packed_store import bag_matmul
+            return bag_matmul
+        from repro.dist.packed import sharded_bag_matmul
+        mesh, axis = self.mesh, self.axis
+        return lambda pk, idx, w: sharded_bag_matmul(pk, idx, w,
+                                                     mesh=mesh, axis=axis)
+
     def _rebuild_cache(self) -> None:
         if self.hier is not None:
             # rows gathered host-side across levels (bit-identical to

@@ -171,6 +171,14 @@ def test_dequant_bag_tiled_property_vs_ref(b, k, d, seed):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(rowgrid))
 
 
+def _working_set(bb, bd, k, itemsize):
+    # mirrors ops._auto_block_b: fp32 out tile + landing ring +
+    # gathered scale/weight blocks
+    from repro.kernels.dequant_bag.ops import resolve_nbuf
+    nbuf = resolve_nbuf(bb * k)
+    return bb * bd * 4 + nbuf * bd * itemsize + 2 * bb * k * 4
+
+
 def test_pick_block_sizes_properties():
     for b, k, d, itemsize in [(1, 1, 1, 1), (256, 8, 512, 1),
                               (1024, 64, 384, 2), (7, 3, 250, 4),
@@ -179,8 +187,28 @@ def test_pick_block_sizes_properties():
         assert 1 <= bb <= max(1, b)
         assert d % bd == 0, (d, bd)
         assert bd <= max(d, 1)
-        # scratch stays under the VMEM budget (or is the minimal bb=1)
-        assert bb == 1 or bb * k * bd * itemsize <= 2 << 20
+        # working set stays under the VMEM budget (or is minimal bb=1)
+        assert bb == 1 or _working_set(bb, bd, k, itemsize) <= 2 << 20
+
+
+def test_pick_block_sizes_awkward_dims():
+    """Prime/odd D > 512 has no 128-aligned divisor; the picker must
+    return a 128-aligned non-divisor (edge-padded in-kernel) instead of
+    serializing the D axis with block_d=1."""
+    for d in (521, 1013, 999, 2049):
+        bb, bd = pick_block_sizes(64, 4, d, 1)
+        assert bd % 128 == 0 and bd <= 512, (d, bd)
+        assert bd > 1
+    # small awkward dims keep the exact-divisor behaviour (no padding)
+    for d in (250, 96, 7):
+        _, bd = pick_block_sizes(64, 4, d, 1)
+        assert d % bd == 0
+    # and the non-divisor pick still runs correctly end to end
+    payload, scales, idx, w = _bag_case(32, 521, 4, 3)
+    out = dequant_bag_pallas(payload, scales, idx, w)
+    ref = dequant_bag_ref(payload, scales, idx, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_pick_block_sizes_env_override(monkeypatch):
@@ -195,7 +223,7 @@ def test_pick_block_sizes_env_override(monkeypatch):
     monkeypatch.setenv("REPRO_DEQUANT_BLOCK_D", "1024")
     bb, bd = pick_block_sizes(1024, 64, 128, 1)
     assert bd == 1024
-    assert bb == 1 or bb * 64 * 1024 <= 2 << 20
+    assert bb == 1 or _working_set(bb, 1024, 64, 1) <= 2 << 20
     monkeypatch.delenv("REPRO_DEQUANT_BLOCK_D")
     assert pick_block_sizes(64, 4, 128, 1) == base
 
@@ -203,10 +231,10 @@ def test_pick_block_sizes_env_override(monkeypatch):
 def test_resolve_block_sizes_call_arg_overrides():
     from repro.kernels.dequant_bag.ops import resolve_block_sizes
     # pinning D alone re-sizes B against the pinned value — the VMEM
-    # scratch budget holds for call-arg overrides like env overrides
+    # working-set budget holds for call-arg overrides like env overrides
     bb, bd = resolve_block_sizes(1024, 64, 128, 1, block_d=1024)
     assert bd == 1024
-    assert bb == 1 or bb * 64 * 1024 <= 2 << 20
+    assert bb == 1 or _working_set(bb, 1024, 64, 1) <= 2 << 20
     bb2, bd2 = resolve_block_sizes(64, 4, 128, 1, block_b=5)
     assert (bb2, bd2) == (5, 128)
     for bad in ({"block_b": 0}, {"block_d": -1}):

@@ -1,6 +1,7 @@
 #!/usr/bin/env python
 """Validate benchmark / metrics JSON files (``bench_qps/v1`` /
-``bench_hier/v1`` / ``bench_pipeline/v1`` / ``metrics_snapshot/v1``).
+``bench_hier/v1`` / ``bench_pipeline/v1`` / ``bench_kernel/v1`` /
+``metrics_snapshot/v1``).
 
     python tools/check_bench_schema.py [FILE ...]
 
@@ -11,7 +12,8 @@ files are validated line by line — every line must be a valid record
 The schemas are the stable contract between PRs: benchmarks emit them
 (``benchmarks/qps.py --online --serve-batch ...``,
 ``benchmarks/qps_sharded.py``, ``benchmarks/run.py --emit``,
-``benchmarks/hier.py``, ``repro.launch.pipeline --emit``), the launch
+``benchmarks/hier.py``, ``benchmarks/kernels.py --emit``,
+``repro.launch.pipeline --emit``), the launch
 drivers emit metrics snapshots (``--metrics-out``), CI validates them,
 future PRs diff the entries for regressions.  Documented in
 docs/serving.md, docs/storage.md, docs/training.md and
@@ -390,10 +392,92 @@ def _validate_metrics(rec: dict) -> list[str]:
     return errors
 
 
+KERNEL_TOP = {
+    "schema": str,
+    "benchmark": str,
+    "backend": str,
+    "interpret": bool,
+    "hbm_peak_gbs": numbers.Real,
+    "sweep": list,
+}
+
+KERNEL_SWEEP = {
+    "kernel": str,
+    "dtype": str,
+    "b": numbers.Integral,
+    "k": numbers.Integral,
+    "d": numbers.Integral,
+    "h": numbers.Integral,
+    "block_analytic": list,
+    "analytic_us": numbers.Real,
+    "block_measured": list,
+    "measured_us": numbers.Real,
+    "speedup": numbers.Real,
+    "bytes_moved": numbers.Integral,
+    "achieved_gbs": numbers.Real,
+    "peak_fraction": numbers.Real,
+}
+
+# timing jitter allowance for the measured-vs-analytic invariant;
+# the analytic pick is itself a sweep candidate, so only noise between
+# two timings of the same tiling can push "measured" past "analytic"
+KERNEL_TUNE_EPS = 1e-6
+
+
+def _validate_kernel(rec: dict) -> list[str]:
+    """``bench_kernel/v1`` (benchmarks/kernels.py): measured tiling
+    sweeps.  The whole point of the record: the measured-autotune
+    winner is at least as fast as the analytic pick on EVERY swept
+    shape — the sweep includes the analytic pick as a candidate, so a
+    violation means the sweep/cache machinery regressed, not that the
+    analytic model is good."""
+    errors: list[str] = []
+    _check_keys(rec, KERNEL_TOP, "top-level", errors)
+    entries = _check_sweep(rec, KERNEL_SWEEP, errors)
+    seen = set()
+    for i, e in enumerate(entries):
+        key = (e.get("kernel"), e.get("dtype"), e.get("b"),
+               e.get("k"), e.get("d"), e.get("h"))
+        if key in seen:
+            errors.append(f"sweep[{i}]: duplicate shape entry {key}")
+        seen.add(key)
+        ua, um = e.get("analytic_us"), e.get("measured_us")
+        if _is_num(ua) and _is_num(um):
+            if um <= 0 or ua <= 0:
+                errors.append(f"sweep[{i}]: non-positive timing "
+                              f"(analytic {ua}, measured {um})")
+            elif um > ua * (1.0 + KERNEL_TUNE_EPS):
+                errors.append(
+                    f"sweep[{i}]: measured tiling slower than the "
+                    f"analytic pick ({e.get('kernel')} b={e.get('b')} "
+                    f"k={e.get('k')} d={e.get('d')}: measured {um}us "
+                    f"> analytic {ua}us)")
+            sp = e.get("speedup")
+            if _is_num(sp) and um > 0 and abs(sp - ua / um) > 1e-3 * sp:
+                errors.append(f"sweep[{i}]: speedup {sp} inconsistent "
+                              f"with timings ({ua / um:.4f})")
+        for kk in ("block_analytic", "block_measured"):
+            blk = e.get(kk)
+            if isinstance(blk, list) and not (
+                    len(blk) == 2
+                    and all(isinstance(x, numbers.Integral)
+                            and not isinstance(x, bool) and x >= 1
+                            for x in blk)):
+                errors.append(f"sweep[{i}]: {kk} must be two ints "
+                              f">= 1, got {blk!r}")
+        for kk in ("bytes_moved", "achieved_gbs", "peak_fraction"):
+            v = e.get(kk)
+            if _is_num(v) and v <= 0:
+                errors.append(f"sweep[{i}]: {kk} must be positive, "
+                              f"got {v}")
+    return errors
+
+
 SCHEMAS = {
     "bench_qps/v1": _validate_qps,
     "bench_hier/v1": _validate_hier,
     "bench_pipeline/v1": _validate_pipeline,
+    "bench_kernel/v1": _validate_kernel,
     "metrics_snapshot/v1": _validate_metrics,
 }
 
