@@ -344,6 +344,17 @@ def verify_failures(rec: dict) -> list[str]:
 
 
 def main() -> None:
+    """CLI wrapper: guarantee the terminal metrics flush on EVERY exit
+    path (success, verify SystemExit, crash) — the periodic sink
+    cadence otherwise drops the final partial window of ticks, i.e.
+    exactly the snapshot a failed run needs most."""
+    try:
+        _main()
+    finally:
+        obs.close_sink()
+
+
+def _main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dlrm-rm2")
     ap.add_argument("--fast", action="store_true",
@@ -390,7 +401,8 @@ def main() -> None:
         else PipelineConfig(**overrides)
 
     rec = run_pipeline(cfg)
-    obs.flush()
+    obs.flush()     # the happy-path snapshot; close_sink() in main()
+                    # covers error exits and the final partial window
     if args.emit:
         with open(args.emit, "w") as f:
             json.dump(rec, f, indent=1, sort_keys=True)

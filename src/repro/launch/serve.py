@@ -56,6 +56,17 @@ from repro import obs
 
 
 def main() -> None:
+    """CLI wrapper: guarantee the terminal metrics flush on EVERY exit
+    path — the ``--verify-hier`` / ``--verify-swap`` failure exits
+    (SystemExit) used to skip the final ``--metrics-out`` window, which
+    is exactly the snapshot a failed verify needs for a post-mortem."""
+    try:
+        _main()
+    finally:
+        obs.close_sink()
+
+
+def _main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dlrm-rm2")
     ap.add_argument("--requests", type=int, default=16)

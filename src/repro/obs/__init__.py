@@ -16,21 +16,36 @@ JSONL (``launch/serve.py --metrics-out`` / ``launch/pipeline.py
              ``jax.block_until_ready`` inside the clock)
   export     ``metrics_snapshot/v1`` snapshots, statsd line protocol,
              and the periodic JSONL sink driven by ``tick()``
+             (``close_sink()`` on loop exit lands the final partial
+             window)
+  fleet      cross-replica aggregation: ``FleetAggregator`` re-merges
+             per-replica registries / snapshot streams bucket-exactly
+             (fleet percentiles are union-stream percentiles, never
+             mean-of-p99s); ``obs.bind(reg)`` scopes the module-level
+             calls to one replica's namespaced registry
 
 Metric catalog + span taxonomy: docs/observability.md.
 """
 
 from repro.obs.export import (  # noqa: F401
     JsonlSink,
+    close_sink,
     flush,
+    registry_from_snapshot,
     set_sink,
     snapshot,
     statsd_lines,
     tick,
 )
+from repro.obs.fleet import (  # noqa: F401
+    FleetAggregator,
+    last_snapshot,
+    merge_snapshots,
+)
 from repro.obs.registry import (  # noqa: F401
     Histogram,
     Registry,
+    bind,
     disable,
     enable,
     enabled,

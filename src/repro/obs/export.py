@@ -9,10 +9,19 @@ JSON record (validated by ``tools/check_bench_schema.py``):
      "histograms": {name: {count, sum, min, max, p50, p95, p99,
                            buckets: {idx: count}}, ...}}
 
+Snapshots of a *named* registry (``Registry(name="replica0")`` — one
+per serving replica in ``repro.serve.fleet``) additionally carry a
+``"source"`` key, so multi-replica JSONL streams stay attributable
+after they are concatenated or archived together.
+
 ``buckets`` carries the sparse log-bucket counts, so snapshots written
 by different replicas can be merged offline
-(``registry.Histogram.from_snapshot(...).merge``) and re-percentiled —
-the same mergeability contract as the in-process histograms.
+(``registry.Histogram.from_snapshot(...).merge`` — wrapped by
+``repro.obs.fleet.merge_snapshots`` and ``tools/summarize_metrics.py``)
+and re-percentiled — the same mergeability contract as the in-process
+histograms.  ``registry_from_snapshot`` rebuilds a live ``Registry``
+from one snapshot record (counters/gauges/histograms restored), the
+entry point for offline re-aggregation.
 
 ``statsd_lines(reg)`` renders the classic line protocol (counters
 ``|c``, gauges ``|g``, histogram percentiles as derived gauges) for
@@ -22,14 +31,18 @@ piping into any statsd-compatible collector.
 ``set_sink`` and call ``tick()`` once per loop iteration — every
 ``every`` ticks (and on ``flush``) one snapshot line is written.  The
 serve/train loops call ``tick()`` unconditionally; without an attached
-sink (or with metrics disabled) it is a no-op flag check.
+sink (or with metrics disabled) it is a no-op flag check.  Drivers must
+call ``close_sink()`` on loop exit (success OR error paths — put it in
+a ``finally``): the periodic cadence drops the last partial window of
+ticks otherwise, and a crashed run would lose its most recent metrics
+exactly when they matter most.
 """
 
 from __future__ import annotations
 
 import json
 
-from repro.obs.registry import Registry, get_registry
+from repro.obs.registry import Histogram, Registry, get_registry
 
 SCHEMA = "metrics_snapshot/v1"
 
@@ -37,7 +50,7 @@ SCHEMA = "metrics_snapshot/v1"
 def snapshot(reg: Registry | None = None) -> dict:
     reg = reg or get_registry()
     reg.seq += 1
-    return {
+    rec = {
         "schema": SCHEMA,
         "seq": int(reg.seq),
         "ticks": int(reg.ticks),
@@ -47,6 +60,27 @@ def snapshot(reg: Registry | None = None) -> dict:
         "histograms": {k: h.snapshot()
                        for k, h in sorted(reg.histograms.items())},
     }
+    if reg.name is not None:
+        rec["source"] = reg.name
+    return rec
+
+
+def registry_from_snapshot(snap: dict) -> Registry:
+    """Rebuild a live ``Registry`` from one ``metrics_snapshot/v1``
+    record: counters/gauges restored as numbers, histograms via
+    ``Histogram.from_snapshot`` (bucket-exact).  The inverse of
+    ``snapshot`` up to ``seq``/``ticks`` bookkeeping — merging two
+    rebuilt registries (``Registry.merge``) is therefore exactly the
+    cross-replica fold the in-process fleet aggregator runs."""
+    reg = Registry(name=snap.get("source"))
+    reg.ticks = int(snap.get("ticks", 0))
+    for k, v in snap.get("counters", {}).items():
+        reg.counters[k] = v
+    for k, v in snap.get("gauges", {}).items():
+        reg.gauges[k] = float(v)
+    for k, h in snap.get("histograms", {}).items():
+        reg.histograms[k] = Histogram.from_snapshot(h)
+    return reg
 
 
 def statsd_lines(reg: Registry | None = None) -> list[str]:
@@ -68,9 +102,12 @@ class JsonlSink:
         ``flush`` calls)."""
         self.path = path
         self.every = int(every)
+        self.last_write_ticks = -1     # registry ticks at the last
+                                       # write (close_sink pending test)
         open(path, "w").close()        # truncate: one run per file
 
     def write(self, reg: Registry) -> None:
+        self.last_write_ticks = reg.ticks
         with open(self.path, "a") as f:
             f.write(json.dumps(snapshot(reg), sort_keys=True) + "\n")
 
@@ -102,3 +139,17 @@ def flush() -> None:
     reg = get_registry()
     if reg.enabled and _sink is not None:
         _sink.write(reg)
+
+
+def close_sink() -> None:
+    """Terminal flush + detach: write the last *partial* tick window
+    (ticks seen since the most recent periodic write — silently dropped
+    before this existed) and clear the sink.  Idempotent, and a no-op
+    when metrics are off or no sink is attached; drivers call it in a
+    ``finally`` so error exits still land their final window."""
+    global _sink
+    reg = get_registry()
+    if reg.enabled and _sink is not None \
+            and reg.ticks != _sink.last_write_ticks:
+        _sink.write(reg)
+    _sink = None

@@ -1,0 +1,110 @@
+"""Cross-replica metrics aggregation: the fleet observability plane.
+
+Every serving replica in ``repro.serve.fleet`` owns a *named*
+``Registry`` (its metrics namespace); this module folds N of them —
+live in-process objects or ``metrics_snapshot/v1`` JSONL records read
+back offline — into ONE fleet view:
+
+  counters    add across replicas (statsd ``|c`` semantics)
+  histograms  merge **bucket-exactly** (``Histogram.merge`` /
+              ``Histogram.from_snapshot``: int64 bucket adds over the
+              one fixed global layout), so fleet percentiles are the
+              percentiles of the union latency stream — NOT the mean
+              of per-replica percentiles, which has no distributional
+              meaning (a replica with 1 request would weigh as much as
+              one with 10k).  ``tests/test_fleet_obs.py`` proves
+              fleet-p99 == merged-p99 bit-for-bit against a
+              single-process oracle over the concatenated stream.
+  gauges      namespaced ``<source>.<name>`` per replica (last-write-
+              wins across replicas would silently clobber levels like
+              per-replica queue depth — exactly the per-host detail a
+              fleet view must keep)
+
+``FleetAggregator`` is the one implementation behind both the live
+path (``serve.fleet.Fleet.aggregate()``) and the offline path
+(``tools/summarize_metrics.py`` re-merging snapshot files): offline
+sources are rebuilt with ``export.registry_from_snapshot`` and fed
+through the same fold, so the two can never drift apart.
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.obs.export import registry_from_snapshot, snapshot, statsd_lines
+from repro.obs.registry import Histogram, Registry
+
+
+class FleetAggregator:
+    """Folds N replica registries into one fleet-level registry.
+
+    ``sources`` is a list of ``Registry`` objects (live) — for JSONL
+    snapshot records use ``from_snapshots``.  Unnamed sources are
+    assigned positional names (``r0``, ``r1``, ...) so their gauges
+    stay distinguishable.
+    """
+
+    def __init__(self, sources: list[Registry]):
+        self.sources = list(sources)
+
+    @classmethod
+    def from_snapshots(cls, snaps: list[dict]) -> "FleetAggregator":
+        """Offline construction from ``metrics_snapshot/v1`` records
+        (one per replica — pass each stream's LAST line: snapshots are
+        cumulative, so summing every line would multi-count)."""
+        return cls([registry_from_snapshot(s) for s in snaps])
+
+    def merged(self) -> Registry:
+        """The fleet fold: counters add, histograms bucket-merge,
+        gauges namespaced per source."""
+        out = Registry(name="fleet")
+        for i, src in enumerate(self.sources):
+            label = src.name or f"r{i}"
+            for k, v in src.counters.items():
+                out.inc(k, v)
+            for k, h in src.histograms.items():
+                out.histogram(k).merge(h)
+            for k, v in src.gauges.items():
+                out.gauge(f"{label}.{k}", v)
+            out.ticks += src.ticks
+        return out
+
+    def percentiles(self, name: str,
+                    qs=(50, 95, 99)) -> tuple[float, ...]:
+        """Fleet percentiles of histogram ``name`` from the exact
+        bucket merge (empty histogram reads 0.0, like ``Histogram``)."""
+        h = Histogram()
+        for src in self.sources:
+            got = src.histograms.get(name)
+            if got is not None:
+                h.merge(got)
+        return tuple(h.percentile(q) for q in qs)
+
+    def snapshot(self) -> dict:
+        """One merged ``metrics_snapshot/v1`` record (schema-valid, so
+        the aggregate stream passes the same CI gate as the per-replica
+        streams it came from)."""
+        return snapshot(self.merged())
+
+    def statsd(self) -> list[str]:
+        """Fleet-level statsd line protocol of the merged registry."""
+        return statsd_lines(self.merged())
+
+
+def merge_snapshots(snaps: list[dict]) -> dict:
+    """Offline one-shot: merge per-replica ``metrics_snapshot/v1``
+    records into one fleet record (see ``FleetAggregator``)."""
+    return FleetAggregator.from_snapshots(snaps).snapshot()
+
+
+def last_snapshot(path: str) -> dict:
+    """The final (cumulative) ``metrics_snapshot/v1`` record of one
+    JSONL stream — the line offline re-merges must use."""
+    last = None
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                last = json.loads(line)
+    if last is None:
+        raise ValueError(f"{path}: no metrics_snapshot records")
+    return last

@@ -29,6 +29,7 @@ a driver opts in (``--metrics-out`` or ``obs.enable()``).  Snapshots
 from __future__ import annotations
 
 import math
+import threading
 
 import numpy as np
 
@@ -153,10 +154,17 @@ class Registry:
     allocation).  Direct method calls on an explicit ``Registry`` /
     ``Histogram`` instance are NOT gated — benches that always need
     latency percentiles own their histogram objects directly.
+
+    ``name`` labels the registry as a metrics *source* (one per serving
+    replica in ``repro.serve.fleet``): snapshots of a named registry
+    carry a ``"source"`` key, which is how the fleet aggregator and
+    ``tools/summarize_metrics.py`` attribute per-replica streams after
+    the fact.  The module-level default registry is anonymous.
     """
 
-    def __init__(self, enabled: bool = True):
+    def __init__(self, enabled: bool = True, name: str | None = None):
         self.enabled = enabled
+        self.name = name
         self.counters: dict[str, float] = {}
         self.gauges: dict[str, float] = {}
         self.histograms: dict[str, Histogram] = {}
@@ -206,9 +214,45 @@ class Registry:
 
 _default = Registry(enabled=False)
 
+# thread-local registry binding: ``bind(reg)`` scopes the module-level
+# convenience functions (and ``obs.span`` / ``obs.tick``) to an explicit
+# registry, which is how the fleet serving fabric gives each in-process
+# replica its own metrics namespace without threading a registry handle
+# through every instrumented call site.  Unbound threads (the default,
+# and every pre-fleet driver) keep reporting into ``_default``.
+_tls = threading.local()
+
+
+class _Bind:
+    """Context manager pushing ``reg`` as the calling thread's current
+    registry.  Re-entrant (a stack) and exception-safe."""
+
+    __slots__ = ("reg",)
+
+    def __init__(self, reg: Registry):
+        self.reg = reg
+
+    def __enter__(self) -> Registry:
+        s = getattr(_tls, "stack", None)
+        if s is None:
+            s = _tls.stack = []
+        s.append(self.reg)
+        return self.reg
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        _tls.stack.pop()
+        return False
+
+
+def bind(reg: Registry) -> _Bind:
+    """Scope the module-level metrics functions to ``reg`` on this
+    thread: ``with obs.bind(replica_registry): serve(...)``."""
+    return _Bind(reg)
+
 
 def get_registry() -> Registry:
-    return _default
+    s = getattr(_tls, "stack", None)
+    return s[-1] if s else _default
 
 
 def enable() -> Registry:
@@ -221,26 +265,30 @@ def disable() -> None:
 
 
 def enabled() -> bool:
-    return _default.enabled
+    return get_registry().enabled
 
 
 def inc(name: str, delta: float = 1) -> None:
-    if _default.enabled:
-        _default.inc(name, delta)
+    reg = get_registry()
+    if reg.enabled:
+        reg.inc(name, delta)
 
 
 def gauge(name: str, value: float) -> None:
-    if _default.enabled:
-        _default.gauge(name, value)
+    reg = get_registry()
+    if reg.enabled:
+        reg.gauge(name, value)
 
 
 def observe(name: str, value: float) -> None:
-    if _default.enabled:
-        _default.observe(name, value)
+    reg = get_registry()
+    if reg.enabled:
+        reg.observe(name, value)
 
 
 def ensure_histograms(names) -> None:
     """Pre-register histogram names (no-op when disabled)."""
-    if _default.enabled:
+    reg = get_registry()
+    if reg.enabled:
         for n in names:
-            _default.histogram(n)
+            reg.histogram(n)

@@ -19,11 +19,20 @@ Layers live, traffic-adaptive state over the offline artifacts of
            chunks off the request path; ``OnlineServer`` swaps it in
            atomically (``OnlineConfig.retier_async``)
 
+  fleet    multi-replica fabric: N replicas (each with its own named
+           metrics registry) behind a ``Router``
+           (round-robin / least-outstanding), fleet-staggered re-tiers,
+           periodic cross-replica Eq. 7 priority merges, and the
+           fleet-level gauges (divergence, lag, tier skew, queue depth)
+           — aggregated exactly via ``obs.FleetAggregator``
+
 Entry points: ``repro.launch.serve --online`` (driver;
-``--hbm-budget-mb`` switches to the hierarchical store) and
-``benchmarks/qps.py --online`` (steady-state QPS + hit-rate JSON).
+``--hbm-budget-mb`` switches to the hierarchical store),
+``repro.launch.fleet`` (replica-scaling ops driver, ``bench_fleet/v1``)
+and ``benchmarks/qps.py --online`` (steady-state QPS + hit-rate JSON).
 See docs/serving.md for the knobs, docs/storage.md for the three-level
-store, and docs/architecture.md for where this sits in the
+store, docs/observability.md for the fleet metrics plane, and
+docs/architecture.md for where this sits in the
 train -> pack -> serve dataflow.
 """
 
@@ -34,6 +43,14 @@ from repro.serve.cache import (  # noqa: F401
     cache_select,
     cached_lookup,
     empty_cache,
+)
+from repro.serve.fleet import (  # noqa: F401
+    Fleet,
+    FleetConfig,
+    FleetResult,
+    Replica,
+    Router,
+    run_fleet,
 )
 from repro.serve.loop import (  # noqa: F401
     LoopResult,

@@ -1,0 +1,461 @@
+"""Multi-replica serving fabric + fleet-side of the observability plane.
+
+One ``OnlineServer`` adapts to *its own* traffic.  A fleet of N replicas
+behind a router sees N disjoint slices of the same drifting workload, so
+each replica's Eq. 7 EMA — and therefore its re-tier decisions — drifts
+away from the others': the hot set is global, the evidence is sharded.
+This module is the serving-side fabric that closes that gap:
+
+  Replica   one ``OnlineServer`` + its ``MicroBatcher`` + a *named*
+            ``obs.Registry`` (its metrics namespace: every span /
+            counter / histogram the serving path emits lands in the
+            replica's own registry via ``obs.bind``), plus the
+            per-window **access-count accumulator** the priority merge
+            consumes.
+  Router    request placement: ``round_robin`` (cycle) or
+            ``least_outstanding`` (emptiest micro-batcher).  The
+            routing decision itself is timed (``router.route_us`` in
+            the router's registry) so the fabric's overhead is a
+            measured number, not a claim.
+  Fleet     the control plane: dispatch, fleet-staggered re-tier
+            scheduling, periodic **cross-replica Eq. 7 merges**, and
+            the fleet gauges (per-replica lag, priority divergence,
+            tier-occupancy skew, queue depth, co-scheduled shadow
+            swaps).  ``aggregate()`` hands every replica registry plus
+            the router registry to ``obs.FleetAggregator`` — fleet
+            percentiles come out of the exact bucket merge, never a
+            mean of per-replica percentiles.
+
+Priority merge semantics.  Between merges each replica folds its own
+traffic locally (Eq. 7 per batch, the normal ``OnlineServer.observe``
+path) AND accumulates raw per-row access counts for the window.  The
+merge is ONE global Eq. 7 step over the pooled window:
+
+    merged = priority_update(merge_base, 0, sum_r window_counts_r)
+
+i.e. the fleet-scale analog of the micro-batch coalescing contract
+(``OnlineServer.observe``: N requests' counts enter a single decay
+step).  ``merge_base`` is the previous merged vector, so the merged EMA
+is exactly what ONE server folding the pooled stream at merge cadence
+would hold.  After the merge every replica's priority is set to the
+merged vector — divergence (max pairwise L-inf over priority vectors)
+drops to zero by construction, and the next re-tier on ANY replica
+decides from global evidence.  ``tests/test_fleet.py`` pins both.
+
+Capacity accounting.  Replicas here are in-process faked hosts
+timesharing one device, so wall-clock fleet QPS would measure the GIL,
+not the fabric.  ``FleetResult.aggregate_qps`` is therefore the
+**capacity** sum: each replica's steady-state QPS over its own busy
+time (requests served / seconds spent serving them), summed — the
+number N independent hosts would deliver.  ``bench_fleet/v1`` records
+carry it per replica count.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core.priority import priority_update
+from repro.obs.fleet import FleetAggregator
+from repro.obs.registry import Registry
+from repro.serve.loop import SERVE_PHASES, MicroBatch, MicroBatcher
+from repro.serve.online import OnlineServer
+
+ROUTER_POLICIES = ("round_robin", "least_outstanding")
+
+# router/fleet histogram catalog (pre-registered like SERVE_PHASES so
+# every router snapshot carries the full set)
+FLEET_PHASES = ("router.route", "fleet.merge")
+
+
+class FleetConfig(NamedTuple):
+    policy: str = "round_robin"   # ROUTER_POLICIES
+    serve_batch: int = 8          # micro-batch capacity per replica
+    merge_every: int = 0          # fleet requests between priority
+                                  # merges (0 = never merge)
+    retier_every: int = 0         # per-replica re-tier cadence in
+                                  # fleet requests (0 = never);
+                                  # scheduled by the fleet, not the
+                                  # servers, so it can be staggered
+    stagger: bool = True          # phase-shift replica re-tiers by
+                                  # retier_every/N so swaps never
+                                  # co-schedule across the fleet
+    pulse_every: int = 32         # fleet requests between gauge pulses
+                                  # (divergence is O(N^2 * vocab))
+
+
+class Replica:
+    """One serving replica: server + batcher + named metrics registry.
+
+    ``serve_fn(mb)`` runs the forward AND ``server.observe`` (the
+    ``run_microbatched_loop`` contract); it executes under
+    ``obs.bind(self.reg)`` so every span and counter lands in this
+    replica's namespace.  ``globalize`` maps a host (N, F) field-local
+    index batch to global row ids (``None`` = already global) — the
+    window accumulator needs global ids to pool counts across replicas.
+    """
+
+    def __init__(self, rid: int, server: OnlineServer,
+                 serve_fn: Callable[[MicroBatch], object],
+                 serve_batch: int, num_fields: int, *,
+                 globalize: Callable[[np.ndarray], np.ndarray] | None
+                 = None):
+        self.rid = int(rid)
+        self.name = f"replica{rid}"
+        self.server = server
+        self.serve_fn = serve_fn
+        self.batcher = MicroBatcher(serve_batch, num_fields)
+        self.reg = Registry(enabled=True, name=self.name)
+        with obs.bind(self.reg):
+            obs.ensure_histograms(f"{p}_us" for p in SERVE_PHASES)
+            # the server was typically built OUTSIDE this registry's
+            # binding: re-export its placement gauges (tier occupancy,
+            # store bytes, cache rows) so the fleet's tier-skew pulse
+            # sees every replica from request zero
+            server._export_gauges()
+        self.globalize = globalize
+        vocab = int(server.store.priority.shape[0])
+        self.window = np.zeros(vocab, np.float64)  # accesses since the
+                                                   # last fleet merge
+        self.requests = 0
+        self.busy_s = 0.0         # wall seconds inside run_batch
+        self._lat: list[float] = []       # per-batch seconds
+        self._cnt: list[int] = []         # live requests per batch
+        self._retiered: list[bool] = []   # batch ran/overlapped re-tier
+        self._mark_retier = False  # fleet ran a re-tier just before
+                                   # the next batch: that batch pays
+                                   # the recompile, flag it out of the
+                                   # steady window
+
+    def run_batch(self, mb: MicroBatch) -> None:
+        """Serve one micro-batch under this replica's registry and fold
+        its accesses into the merge window."""
+        srv = self.server
+        n_retiers, s0 = srv.stats.retiers, srv.stats.swaps
+        c0 = srv.stats.shadow_chunks
+        active0 = srv.shadow is not None
+        with obs.bind(self.reg):
+            with obs.timeblock("serve.request") as tb:
+                tb.sync(self.serve_fn(mb))
+            obs.tick()
+        self.busy_s += tb.seconds
+        self.requests += mb.count
+        self._lat.append(tb.seconds)
+        self._cnt.append(mb.count)
+        self._retiered.append(srv.stats.retiers > n_retiers
+                              or srv.stats.swaps > s0
+                              or srv.stats.shadow_chunks > c0
+                              or active0 or self._mark_retier)
+        self._mark_retier = False
+        g = mb.indices if self.globalize is None \
+            else self.globalize(mb.indices)
+        g = np.asarray(g, np.int64)[np.asarray(mb.valid, bool)]
+        np.add.at(self.window, g.reshape(-1), 1.0)
+
+    def flush(self) -> None:
+        """Serve the partial tail batch, then drain any in-flight
+        shadow build (loop-teardown contract)."""
+        mb = self.batcher.flush()
+        if mb is not None:
+            self.run_batch(mb)
+        with obs.bind(self.reg):
+            self.server.drain_shadow()
+
+    def steady_qps(self) -> float:
+        """Steady-state QPS over this replica's own busy time: second
+        half of its batch stream, re-tier-adjacent batches excluded
+        (the ``run_microbatched_loop`` convention, per replica)."""
+        lat = np.asarray(self._lat)
+        cnt = np.asarray(self._cnt, np.float64)
+        if lat.size == 0:
+            return 0.0
+        half = lat.size // 2
+        steady = [i for i in range(half, lat.size)
+                  if not (i == 0 or self._retiered[i]
+                          or self._retiered[i - 1])]
+        if not steady:
+            steady = list(range(half, lat.size))
+        return float(cnt[steady].sum() / lat[steady].sum())
+
+    def priority_np(self) -> np.ndarray:
+        return np.asarray(self.server.store.priority, np.float32)
+
+
+class Router:
+    """Stateless-ish request placement over the replica set."""
+
+    def __init__(self, policy: str = "round_robin"):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(f"unknown router policy {policy!r}; "
+                             f"expected one of {ROUTER_POLICIES}")
+        self.policy = policy
+        self._next = 0
+
+    def pick(self, replicas: list[Replica]) -> int:
+        if self.policy == "round_robin":
+            i = self._next % len(replicas)
+            self._next += 1
+            return i
+        # least_outstanding: emptiest micro-batcher wins (ties to the
+        # lowest id — deterministic, and round-robin-like when even)
+        fills = [len(r.batcher) for r in replicas]
+        return int(np.argmin(fills))
+
+
+class FleetResult(NamedTuple):
+    replicas: int
+    policy: str
+    aggregate_qps: float          # capacity sum of per-replica steady
+                                  # QPS (see module docstring)
+    per_replica_qps: tuple        # steady QPS per replica
+    p50_us: float                 # fleet percentiles: exact bucket
+    p95_us: float                 # merge of every replica's
+    p99_us: float                 # serve.request_us histogram
+    route_p50_us: float           # router decision latency
+    router_overhead_frac: float   # route p50 / per-request p50
+    requests: int
+    merges: int                   # cross-replica priority merges run
+    divergence: float             # max pairwise L-inf at loop end
+                                  # (post-merge windows included)
+    divergence_premerge: float    # worst pre-merge divergence any
+                                  # merge observed — what the fabric
+                                  # would drift to WITHOUT merging
+    swaps_colocated: int          # pulses that saw >= 2 replicas with
+                                  # a shadow swap in flight
+
+    def as_dict(self) -> dict:
+        return {"replicas": self.replicas, "policy": self.policy,
+                "aggregate_qps": round(self.aggregate_qps, 1),
+                "per_replica_qps": [round(q, 1)
+                                    for q in self.per_replica_qps],
+                "p50_us": round(self.p50_us, 1),
+                "p95_us": round(self.p95_us, 1),
+                "p99_us": round(self.p99_us, 1),
+                "route_p50_us": round(self.route_p50_us, 3),
+                "router_overhead_frac": round(
+                    self.router_overhead_frac, 5),
+                "requests": self.requests, "merges": self.merges,
+                "divergence": round(self.divergence, 6),
+                "divergence_premerge": round(
+                    self.divergence_premerge, 6),
+                "swaps_colocated": self.swaps_colocated}
+
+
+class Fleet:
+    """N replicas + router + merge/re-tier scheduler + fleet gauges."""
+
+    def __init__(self, replicas: list[Replica],
+                 cfg: FleetConfig = FleetConfig()):
+        if not replicas:
+            raise ValueError("a fleet needs at least one replica")
+        self.replicas = list(replicas)
+        self.cfg = cfg
+        self.router = Router(cfg.policy)
+        self.reg = Registry(enabled=True, name="router")
+        with obs.bind(self.reg):
+            obs.ensure_histograms(f"{p}_us" for p in FLEET_PHASES)
+        self.total_requests = 0
+        self.merges = 0
+        self.swaps_colocated = 0
+        self.divergence_premerge = 0.0  # worst pre-merge divergence
+        # merge_base: the fold state the next pooled Eq. 7 step decays
+        # from — every replica starts from the same pack-time priority
+        self._merge_base = self.replicas[0].priority_np().copy()
+        # fleet-staggered re-tier schedule: replica i first re-tiers at
+        # retier_every + i*phase, then every retier_every
+        n = len(self.replicas)
+        phase = (cfg.retier_every // n if cfg.stagger and n > 1 else 0)
+        self._next_retier = [cfg.retier_every + i * phase
+                             for i in range(n)] \
+            if cfg.retier_every else [0] * n
+
+    # -- dispatch ------------------------------------------------------
+
+    def submit(self, request: np.ndarray) -> int:
+        """Route one single-user request; returns the replica id it
+        landed on.  Runs the replica's batch when its batcher fills,
+        then the merge / pulse cadences."""
+        with obs.bind(self.reg):
+            with obs.span("router.route"):
+                i = self.router.pick(self.replicas)
+            obs.inc("router.requests", 1)
+            obs.inc(f"router.to.{self.replicas[i].name}", 1)
+        r = self.replicas[i]
+        mb = r.batcher.add(request)
+        self.total_requests += 1
+        if mb is not None:
+            self._maybe_retier(r)
+            r.run_batch(mb)
+        c = self.cfg
+        if c.merge_every and self.total_requests % c.merge_every == 0:
+            self.merge_priorities()
+        if c.pulse_every and self.total_requests % c.pulse_every == 0:
+            self._pulse()
+        return i
+
+    def _maybe_retier(self, r: Replica) -> None:
+        """Fire the fleet-scheduled re-tier for ``r`` if its staggered
+        boundary has passed.  Async servers get the shadow pending flag
+        (the build advances on their own subsequent batches); sync
+        servers repack inline under the replica's registry."""
+        if not self.cfg.retier_every:
+            return
+        if self.total_requests < self._next_retier[r.rid]:
+            return
+        self._next_retier[r.rid] += self.cfg.retier_every
+        r._mark_retier = True
+        if r.server.online.retier_async:
+            r.server._retier_pending = True
+        else:
+            with obs.bind(r.reg):
+                r.server.retier()
+
+    def flush(self) -> None:
+        """Tail batches + shadow drains on every replica."""
+        for r in self.replicas:
+            r.flush()
+
+    # -- cross-replica priority merge ----------------------------------
+
+    def merge_priorities(self) -> float:
+        """One pooled Eq. 7 step over every replica's window counts;
+        overwrite all replica priorities with the merged vector.
+
+        Returns the pre-merge divergence (max pairwise L-inf) — the
+        quantity this call drives to zero; exported as the
+        ``fleet.priority_divergence`` gauge pair (pre/post)."""
+        pre = self.divergence()
+        with obs.bind(self.reg), obs.span("fleet.merge"):
+            pooled = np.zeros_like(self.replicas[0].window)
+            for r in self.replicas:
+                pooled += r.window
+            srv = self.replicas[0].server
+            pcfg = srv.online.priority or srv.cfg.priority
+            counts = jnp.asarray(pooled, jnp.float32)
+            merged = np.asarray(priority_update(
+                jnp.asarray(self._merge_base), jnp.zeros_like(counts),
+                counts, pcfg), np.float32)
+            for r in self.replicas:
+                r.server.store = r.server.store._replace(
+                    priority=jnp.asarray(merged))
+                r.window[:] = 0.0
+            self._merge_base = merged
+            self.merges += 1
+            self.divergence_premerge = max(self.divergence_premerge,
+                                           pre)
+            obs.inc("fleet.merges", 1)
+            obs.gauge("fleet.priority_divergence_premerge",
+                      self.divergence_premerge)
+            obs.gauge("fleet.priority_divergence", self.divergence())
+        return pre
+
+    def divergence(self) -> float:
+        """Max pairwise L-inf distance between replica priority
+        vectors: 0 right after a merge, growing with every locally
+        folded batch until the next one."""
+        pris = [r.priority_np() for r in self.replicas]
+        d = 0.0
+        for i in range(len(pris)):
+            for j in range(i + 1, len(pris)):
+                d = max(d, float(np.max(np.abs(pris[i] - pris[j]))))
+        return d
+
+    # -- fleet gauges --------------------------------------------------
+
+    def _pulse(self) -> None:
+        """Refresh the fleet-level gauges in the router registry."""
+        reps = self.replicas
+        served = [r.requests for r in reps]
+        top = max(served) if served else 0
+        with obs.bind(self.reg):
+            for r in reps:
+                obs.gauge(f"fleet.lag.{r.name}",
+                          float(top - r.requests))
+                obs.gauge(f"fleet.queue.{r.name}",
+                          float(len(r.batcher)))
+            obs.gauge("fleet.queue_depth",
+                      float(sum(len(r.batcher) for r in reps)))
+            obs.gauge("fleet.priority_divergence", self.divergence())
+            obs.gauge("fleet.tier_skew_rows", self._tier_skew())
+            in_flight = sum(
+                int(r.reg.gauges.get("serve.shadow.in_flight", 0.0))
+                for r in reps)
+            obs.gauge("fleet.swaps_in_flight", float(in_flight))
+            if in_flight >= 2:
+                self.swaps_colocated += 1
+                obs.inc("fleet.swaps_colocated", 1)
+
+    def _tier_skew(self) -> float:
+        """Max over precision tiers of (max - min) per-replica row
+        count: 0 when every replica holds the same tier assignment,
+        growing as staggered re-tiers let assignments drift apart.
+        Read from the replicas' occupancy gauges
+        (``store.tier_rows_*``, refreshed at every (re)placement)."""
+        skew = 0.0
+        for t in ("int8", "half", "fp32"):
+            rows = [r.reg.gauges.get(f"store.tier_rows_{t}")
+                    for r in self.replicas]
+            rows = [v for v in rows if v is not None]
+            if rows:
+                skew = max(skew, max(rows) - min(rows))
+        return skew
+
+    # -- aggregation ---------------------------------------------------
+
+    def aggregate(self) -> FleetAggregator:
+        """The live fleet fold: every replica registry + the router
+        registry through the one ``FleetAggregator`` implementation."""
+        return FleetAggregator([r.reg for r in self.replicas]
+                               + [self.reg])
+
+    def result(self) -> FleetResult:
+        """Summarise the run (call after ``flush``)."""
+        self._pulse()
+        per = tuple(r.steady_qps() for r in self.replicas)
+        agg = self.aggregate()
+        p50, p95, p99 = agg.percentiles("serve.request_us")
+        route_p50 = self.reg.histogram("router.route_us").percentile(50)
+        per_req_p50 = p50 / max(self.cfg.serve_batch, 1)
+        overhead = route_p50 / per_req_p50 if per_req_p50 > 0 else 0.0
+        return FleetResult(
+            replicas=len(self.replicas), policy=self.cfg.policy,
+            aggregate_qps=float(sum(per)), per_replica_qps=per,
+            p50_us=p50, p95_us=p95, p99_us=p99,
+            route_p50_us=route_p50, router_overhead_frac=overhead,
+            requests=self.total_requests, merges=self.merges,
+            divergence=self.divergence(),
+            divergence_premerge=self.divergence_premerge,
+            swaps_colocated=self.swaps_colocated)
+
+
+def run_fleet(fleet: Fleet, make_request: Callable[[int], np.ndarray],
+              requests: int, *, jsonl_paths: list[str] | None = None
+              ) -> FleetResult:
+    """Drive ``requests`` single-user requests through the fleet, then
+    flush, merge once more (so the final divergence gauge reflects a
+    converged fleet when merging is on), and summarise.
+
+    ``jsonl_paths``: optional per-source snapshot streams — one path
+    per replica plus one for the router, written as final cumulative
+    ``metrics_snapshot/v1`` lines (the offline aggregation input).
+    """
+    for r in range(requests):
+        fleet.submit(make_request(r))
+    fleet.flush()
+    if fleet.cfg.merge_every:
+        fleet.merge_priorities()
+    if jsonl_paths is not None:
+        regs = [r.reg for r in fleet.replicas] + [fleet.reg]
+        if len(jsonl_paths) != len(regs):
+            raise ValueError(
+                f"need {len(regs)} snapshot paths "
+                f"({len(fleet.replicas)} replicas + router), got "
+                f"{len(jsonl_paths)}")
+        for path, reg in zip(jsonl_paths, regs):
+            sink = obs.JsonlSink(path)
+            sink.write(reg)
+    return fleet.result()

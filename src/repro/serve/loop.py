@@ -50,7 +50,9 @@ from repro.serve.online import OnlineServer
 # stage/migrate when serving a fully resident store)
 SERVE_PHASES = ("serve.request", "serve.synth", "serve.stage",
                 "serve.lookup", "serve.combine", "serve.retier",
-                "serve.shadow.chunk", "serve.shadow.stage",
+                "serve.shadow.plan", "serve.shadow.chunk",
+                "serve.shadow.build", "serve.shadow.stage",
+                "serve.shadow.verify", "serve.shadow.warmup",
                 "serve.shadow.swap", "store.stage", "store.migrate")
 
 

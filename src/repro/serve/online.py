@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import NamedTuple
 
 import jax
@@ -134,6 +135,9 @@ class OnlineServer:
                                       # payload shapes
         self._warmup = None           # in-flight staging thread
         self._stage_err = None        # staging/verify failure, raised at swap
+        self._shadow_t0 = 0.0         # perf_counter at begin_retier —
+                                      # serve.shadow.build_us measures
+                                      # the whole plan->swap lifecycle
         self._place()
         self._rebuild_cache()
         if online.retier_async:
@@ -373,21 +377,25 @@ class OnlineServer:
         from repro.serve.shadow import ShadowMigrate, ShadowRepack
         snapshot = self.store
         rows = self.online.shadow_rows_per_step
-        if self.hier is not None:
-            self.shadow = ShadowMigrate(self.hier, snapshot, self.cfg,
-                                        chunk_rows=rows)
-        else:
-            sh = ShadowRepack(self.host_packed, snapshot, self.cfg,
-                              chunk_rows=rows)
-            if sh.moved == 0:
-                # nothing crosses: match the synchronous no-move path
-                # (count the re-tier, refresh the cache, no swap)
-                self.stats.retiers += 1
-                self._rebuild_cache()
-                return False
-            self.shadow = sh
+        self._shadow_t0 = time.perf_counter()
+        with obs.span("serve.shadow.plan"):
+            if self.hier is not None:
+                self.shadow = ShadowMigrate(self.hier, snapshot,
+                                            self.cfg, chunk_rows=rows)
+            else:
+                sh = ShadowRepack(self.host_packed, snapshot, self.cfg,
+                                  chunk_rows=rows)
+                if sh.moved == 0:
+                    # nothing crosses: match the synchronous no-move
+                    # path (count the re-tier, refresh the cache, no
+                    # swap)
+                    self.stats.retiers += 1
+                    self._rebuild_cache()
+                    return False
+                self.shadow = sh
         self.stats.shadow_builds += 1
         obs.inc("serve.shadow.builds", 1)
+        obs.gauge("serve.shadow.in_flight", 1.0)
         return True
 
     def _shadow_tick(self, count: int = 1) -> bool:
@@ -436,22 +444,29 @@ class OnlineServer:
         follows is a pointer flip, not a ~100x-p50 stall."""
         sh, fn = self.shadow, self.warmup_fn
         verify = self.online.verify_swap
+        # the staging thread inherits the serving thread's registry
+        # binding (replica namespaces are thread-local), so its spans
+        # land next to the rest of this server's metrics
+        reg = obs.get_registry()
 
         def _stage() -> None:
-            try:
-                with obs.span("serve.shadow.stage"):
-                    staged = sh.place(self.mesh, self.axis)
-                    if verify:
-                        sh.verify()
-                self._staged = staged
-            except Exception as e:          # surfaced by _swap
-                self._stage_err = e
-                return
-            if fn is not None:
+            with obs.bind(reg):
                 try:
-                    fn(staged)
-                except Exception:
-                    pass    # a failed warm-up only costs a recompile
+                    with obs.span("serve.shadow.stage"):
+                        staged = sh.place(self.mesh, self.axis)
+                        if verify:
+                            with obs.span("serve.shadow.verify"):
+                                sh.verify()
+                    self._staged = staged
+                except Exception as e:          # surfaced by _swap
+                    self._stage_err = e
+                    return
+                if fn is not None:
+                    try:
+                        with obs.span("serve.shadow.warmup"):
+                            fn(staged)
+                    except Exception:
+                        pass    # a failed warm-up only costs a recompile
         self._warmup = threading.Thread(target=_stage, daemon=True)
         self._warmup.start()
 
@@ -474,6 +489,12 @@ class OnlineServer:
         self.stats.rows_moved += int(moved)
         obs.inc("serve.retier.rows_moved", int(moved))
         obs.inc("serve.shadow.swaps", 1)
+        # whole-lifecycle build latency (plan -> chunks -> stage ->
+        # swap) and the in-flight marker the fleet plane reads to
+        # detect co-scheduled swaps across replicas
+        obs.observe("serve.shadow.build_us",
+                    (time.perf_counter() - self._shadow_t0) * 1e6)
+        obs.gauge("serve.shadow.in_flight", 0.0)
         self._rebuild_cache()
         return True
 
@@ -509,6 +530,7 @@ class OnlineServer:
             self._warmup.join()
         if self.shadow is not None:
             self.shadow.discard()
+            obs.gauge("serve.shadow.in_flight", 0.0)
         self.shadow = None
         self._staged = None
         self._warmup = None

@@ -1,0 +1,273 @@
+"""Multi-replica serving fabric (``repro.serve.fleet``): router
+policies, the cross-replica Eq. 7 priority merge (divergence driven to
+zero, merged vector equals the pooled-fold oracle), fleet-staggered
+re-tier scheduling, shadow-lifecycle instrumentation, and the
+fleet-percentile bit-exactness contract on live registries."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import FQuantConfig
+from repro.core import qat_store as qs
+from repro.core.priority import priority_update
+from repro.core.tiers import TierConfig
+from repro.obs.registry import Histogram
+from repro.serve import (
+    Fleet,
+    FleetConfig,
+    OnlineConfig,
+    OnlineServer,
+    Replica,
+    Router,
+    drifting_zipf_batch,
+    run_fleet,
+)
+
+V, D, F = 160, 16, 2
+CFG = FQuantConfig(tiers=TierConfig(t8=5.0, t16=50.0), stochastic=False)
+CARDS = np.asarray([V] * F, np.int64)   # both fields over one global
+                                        # id space: indices need no
+                                        # globalize offset
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    obs.disable()
+    obs.get_registry().reset()
+    obs.set_sink(None)
+    yield
+    obs.disable()
+    obs.get_registry().reset()
+    obs.set_sink(None)
+
+
+def _server(seed=0, **online):
+    rng = np.random.default_rng(seed)
+    st = qs.init(jax.random.PRNGKey(0), V, D, scale=0.05)
+    pri = jnp.asarray((rng.pareto(1.2, V) * 20).astype(np.float32))
+    st = st._replace(priority=pri)
+    st = st._replace(table=qs.snap(
+        st.table, qs.current_tiers(st, CFG), CFG))
+    return OnlineServer(st, CFG,
+                        OnlineConfig(cache_rows=8, retier_every=0,
+                                     **online))
+
+
+def _replica(rid, serve_batch=4, **online):
+    server = _server(**online)
+
+    def serve_fn(mb):
+        # eager cache-first path: forward + observe in one call
+        return server.lookup(jnp.asarray(mb.indices),
+                             valid=mb.valid[:, None], count=mb.count)
+
+    return Replica(rid, server, serve_fn, serve_batch, F)
+
+
+def _request(r):
+    return drifting_zipf_batch(CARDS, 1, r, 999, drift=2.0)[0]
+
+
+# -- router ------------------------------------------------------------
+
+def test_round_robin_cycles_and_balances():
+    reps = [_replica(i) for i in range(3)]
+    router = Router("round_robin")
+    assert [router.pick(reps) for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+
+    fleet = Fleet(reps, FleetConfig(policy="round_robin",
+                                    serve_batch=4, pulse_every=0))
+    for r in range(24):
+        fleet.submit(_request(r))
+    assert [rep.requests for rep in fleet.replicas] == [8, 8, 8]
+    assert fleet.reg.counters["router.requests"] == 24
+    assert fleet.reg.counters["router.to.replica0"] == 8
+    assert fleet.reg.histograms["router.route_us"].count == 24
+
+
+def test_least_outstanding_picks_emptiest_batcher():
+    reps = [_replica(i) for i in range(3)]
+    router = Router("least_outstanding")
+    # pre-fill replica0 (2 pending) and replica1 (1 pending)
+    reps[0].batcher.add(_request(0))
+    reps[0].batcher.add(_request(1))
+    reps[1].batcher.add(_request(2))
+    assert router.pick(reps) == 2
+    reps[2].batcher.add(_request(3))
+    reps[2].batcher.add(_request(4))
+    assert router.pick(reps) == 1       # now replica1 is emptiest
+    with pytest.raises(ValueError):
+        Router("weighted_random")
+
+
+# -- priority merge ----------------------------------------------------
+
+def test_merge_drives_divergence_to_zero_and_matches_oracle():
+    """The dedicated divergence test: disjoint traffic slices make the
+    replica EMAs diverge; ONE ``merge_priorities`` call (a) returns
+    that positive divergence, (b) leaves every replica on the pooled
+    Eq. 7 fold of the window counts, (c) zeroes pairwise divergence."""
+    fleet = Fleet([_replica(0), _replica(1)],
+                  FleetConfig(serve_batch=4, merge_every=0,
+                              pulse_every=0))
+    base = fleet.replicas[0].priority_np().copy()
+    np.testing.assert_array_equal(base, fleet.replicas[1].priority_np())
+
+    for r in range(16):
+        fleet.submit(_request(r))
+    assert fleet.divergence() > 0.0     # disjoint slices, local folds
+
+    expect_counts = sum(r.window for r in fleet.replicas).copy()
+    assert expect_counts.sum() == 16 * F    # every access counted once
+
+    pre = fleet.merge_priorities()
+    assert pre > 0.0
+    assert fleet.divergence() == 0.0
+    assert fleet.merges == 1
+
+    srv = fleet.replicas[0].server
+    pcfg = srv.online.priority or srv.cfg.priority
+    oracle = np.asarray(priority_update(
+        jnp.asarray(base), jnp.zeros(V, jnp.float32),
+        jnp.asarray(expect_counts, jnp.float32), pcfg), np.float32)
+    for rep in fleet.replicas:
+        np.testing.assert_array_equal(rep.priority_np(), oracle)
+        assert rep.window.sum() == 0.0  # windows reset
+
+    # a second quiet merge decays from the MERGED base (EMA chaining)
+    fleet.merge_priorities()
+    oracle2 = np.asarray(priority_update(
+        jnp.asarray(oracle), jnp.zeros(V, jnp.float32),
+        jnp.zeros(V, jnp.float32), pcfg), np.float32)
+    np.testing.assert_array_equal(fleet.replicas[0].priority_np(),
+                                  oracle2)
+
+
+def test_periodic_merge_in_loop_reports_premerge_divergence():
+    fleet = Fleet([_replica(0), _replica(1)],
+                  FleetConfig(serve_batch=4, merge_every=8,
+                              pulse_every=4))
+    res = run_fleet(fleet, _request, 32)
+    assert res.merges >= 4
+    assert res.divergence_premerge > 0.0    # drift happened...
+    assert res.divergence == 0.0            # ...and the merge killed it
+    assert fleet.reg.gauges["fleet.priority_divergence"] == 0.0
+    assert fleet.reg.counters["fleet.merges"] == res.merges
+
+
+# -- staggered re-tier scheduling --------------------------------------
+
+def test_retier_schedule_staggered_and_fires():
+    fleet = Fleet([_replica(0), _replica(1)],
+                  FleetConfig(serve_batch=4, retier_every=8,
+                              stagger=True, pulse_every=0))
+    assert fleet._next_retier == [8, 12]    # phase = retier_every / N
+    flat = Fleet([_replica(0), _replica(1)],
+                 FleetConfig(serve_batch=4, retier_every=8,
+                             stagger=False, pulse_every=0))
+    assert flat._next_retier == [8, 8]
+
+    for r in range(32):
+        fleet.submit(_request(r))
+    fleet.flush()
+    for rep in fleet.replicas:
+        assert rep.server.stats.retiers >= 1
+        assert any(rep._retiered)       # recompile batches flagged out
+    # tier-occupancy gauges exist per replica from request zero
+    for rep in fleet.replicas:
+        assert "store.tier_rows_int8" in rep.reg.gauges
+
+
+def test_async_shadow_lifecycle_instrumented_in_replica_registry():
+    """Satellite: the shadow staging background thread inherits the
+    replica's registry binding — plan/chunk/stage/verify/swap spans,
+    the whole-lifecycle ``serve.shadow.build_us`` histogram and the
+    in-flight gauge all land in the replica's namespace."""
+    rep = _replica(0, retier_async=True, verify_swap=True,
+                   shadow_rows_per_step=32)
+    fleet = Fleet([rep], FleetConfig(serve_batch=4, retier_every=8,
+                                     pulse_every=4))
+    for r in range(48):
+        fleet.submit(_request(r))
+    fleet.flush()                        # drains any in-flight shadow
+    srv = rep.server
+    assert srv.stats.swaps >= 1
+    h = rep.reg.histograms
+    assert h["serve.shadow.plan_us"].count >= 1
+    assert h["serve.shadow.chunk_us"].count >= 1
+    assert h["serve.shadow.stage_us"].count >= 1    # staging THREAD
+    assert h["serve.shadow.verify_us"].count >= 1
+    assert h["serve.shadow.swap_us"].count >= 1
+    assert h["serve.shadow.build_us"].count == srv.stats.swaps
+    # lifecycle covers at least its own swap span
+    assert (h["serve.shadow.build_us"].vmax
+            >= h["serve.shadow.swap_us"].vmin)
+    assert rep.reg.gauges["serve.shadow.in_flight"] == 0.0
+    assert rep.reg.counters["serve.shadow.swaps"] == srv.stats.swaps
+    # nothing leaked into the (disabled) default registry
+    assert not obs.get_registry().histograms
+
+
+# -- fleet percentiles + end-to-end ------------------------------------
+
+def test_run_fleet_percentiles_bit_exact_and_snapshots(tmp_path):
+    """End-to-end: the FleetResult percentiles equal a union-stream
+    oracle over the replicas' latency histograms, and the written
+    per-source snapshot streams re-merge to the same numbers."""
+    fleet = Fleet([_replica(0), _replica(1), _replica(2)],
+                  FleetConfig(serve_batch=4, merge_every=16,
+                              pulse_every=8))
+    paths = [str(tmp_path / f"r{i}.jsonl") for i in range(3)]
+    paths.append(str(tmp_path / "router.jsonl"))
+    res = run_fleet(fleet, _request, 48, jsonl_paths=paths)
+
+    assert res.requests == 48
+    assert len(res.per_replica_qps) == 3
+    assert all(q > 0 for q in res.per_replica_qps)
+    assert res.aggregate_qps == pytest.approx(
+        sum(res.per_replica_qps))
+    assert 0.0 <= res.router_overhead_frac < 0.1
+
+    oracle = Histogram()
+    for rep in fleet.replicas:
+        oracle.merge(rep.reg.histograms["serve.request_us"])
+    assert (res.p50_us, res.p95_us, res.p99_us) == tuple(
+        oracle.percentile(q) for q in (50, 95, 99))
+
+    # offline re-merge of the written streams reproduces them exactly
+    snaps = [obs.last_snapshot(p) for p in paths]
+    assert [s["source"] for s in snaps] == \
+        ["replica0", "replica1", "replica2", "router"]
+    agg = obs.FleetAggregator.from_snapshots(snaps[:3])
+    assert agg.percentiles("serve.request_us") == (
+        res.p50_us, res.p95_us, res.p99_us)
+
+    # the merged fleet record is itself schema-valid JSONL material
+    rec = fleet.aggregate().snapshot()
+    assert rec["schema"] == "metrics_snapshot/v1"
+    assert rec["source"] == "fleet"
+    json.dumps(rec)                      # serialisable
+
+    with pytest.raises(ValueError):
+        run_fleet(fleet, _request, 1, jsonl_paths=paths[:2])
+
+
+def test_fleet_gauges_lag_queue_and_skew():
+    fleet = Fleet([_replica(0), _replica(1)],
+                  FleetConfig(serve_batch=4, pulse_every=0))
+    for r in range(17):                  # odd: one request queued
+        fleet.submit(_request(r))
+    fleet._pulse()
+    g = fleet.reg.gauges
+    assert g["fleet.queue_depth"] == 1.0
+    assert g["fleet.lag.replica0"] + g["fleet.lag.replica1"] >= 0.0
+    assert "fleet.tier_skew_rows" in g
+    assert "fleet.swaps_in_flight" in g
+    assert Fleet([_replica(0)], FleetConfig()).divergence() == 0.0
+    with pytest.raises(ValueError):
+        Fleet([], FleetConfig())

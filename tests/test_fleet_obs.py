@@ -1,0 +1,265 @@
+"""Fleet observability plane: registry binding, snapshot round-trips,
+``close_sink`` final-window flush, and the bit-exactness contract —
+fleet percentiles from ``FleetAggregator`` (live registries OR
+re-merged ``metrics_snapshot/v1`` streams) must equal a single-process
+oracle over the union stream, bucket for bucket."""
+
+import importlib.util
+import json
+import pathlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import obs
+from repro.obs.registry import Histogram, Registry
+
+_SCHEMA_TOOL = (pathlib.Path(__file__).resolve().parents[1]
+                / "tools" / "check_bench_schema.py")
+_spec = importlib.util.spec_from_file_location("check_bench_schema",
+                                               _SCHEMA_TOOL)
+check_bench_schema = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench_schema)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    obs.disable()
+    obs.get_registry().reset()
+    obs.set_sink(None)
+    yield
+    obs.disable()
+    obs.get_registry().reset()
+    obs.set_sink(None)
+
+
+# -- thread-local registry binding -------------------------------------
+
+def test_bind_scopes_module_calls_to_named_registry():
+    """Module-level obs calls inside ``bind(reg)`` land in that
+    registry — the replica-namespace mechanism — and the default stays
+    untouched (and disabled)."""
+    r1 = Registry(enabled=True, name="replica0")
+    r2 = Registry(enabled=True, name="replica1")
+    with obs.bind(r1):
+        obs.inc("serve.requests", 2)
+        obs.observe("lat_us", 100.0)
+        with obs.span("serve.lookup"):
+            pass
+        with obs.bind(r2):            # nested: innermost wins
+            obs.inc("serve.requests", 5)
+            assert obs.get_registry() is r2
+        assert obs.get_registry() is r1
+    assert r1.counters["serve.requests"] == 2
+    assert r2.counters["serve.requests"] == 5
+    assert r1.histograms["lat_us"].count == 1
+    assert "serve.lookup_us" in r1.histograms
+    assert "serve.lookup_us" not in r2.histograms
+    default = obs.get_registry()
+    assert not default.counters and not default.histograms
+    assert not obs.enabled()
+
+
+def test_bind_exception_safe():
+    r = Registry(enabled=True, name="x")
+    with pytest.raises(RuntimeError):
+        with obs.bind(r):
+            raise RuntimeError("boom")
+    assert obs.get_registry() is not r
+
+
+# -- snapshot round-trip -----------------------------------------------
+
+def test_registry_from_snapshot_round_trip():
+    reg = Registry(enabled=True, name="replica3")
+    reg.inc("req", 7)
+    reg.inc("frac", 2.5)
+    reg.gauge("occ", 0.25)
+    rng = np.random.default_rng(0)
+    reg.histogram("lat_us").record_many(rng.lognormal(6, 2, 300))
+    reg.ticks = 42
+    snap = json.loads(json.dumps(obs.snapshot(reg)))
+    assert snap["source"] == "replica3"
+    assert not check_bench_schema.validate(snap)
+    back = obs.registry_from_snapshot(snap)
+    assert back.name == "replica3"
+    assert back.ticks == 42
+    assert back.counters == {"req": 7, "frac": 2.5}
+    assert back.gauges == {"occ": 0.25}
+    h, hb = reg.histograms["lat_us"], back.histograms["lat_us"]
+    np.testing.assert_array_equal(hb.counts, h.counts)
+    assert (hb.count, hb.vmin, hb.vmax) == (h.count, h.vmin, h.vmax)
+    for q in (50, 95, 99):
+        assert hb.percentile(q) == h.percentile(q)
+    # unnamed registries snapshot without a source key
+    assert "source" not in obs.snapshot(Registry(enabled=True))
+
+
+# -- fleet percentiles: bit-exact vs the union-stream oracle ----------
+
+def _replica_regs(streams):
+    regs = []
+    for i, vals in enumerate(streams):
+        reg = Registry(enabled=True, name=f"replica{i}")
+        reg.inc("serve.requests", len(vals))
+        reg.gauge("queue", float(i))
+        reg.histogram("serve.request_us").record_many(np.asarray(vals))
+        regs.append(reg)
+    return regs
+
+
+def test_fleet_p99_is_merged_p99_not_mean_of_p99s():
+    """The headline contract: fleet percentiles equal the single
+    process that recorded every replica's sample — bit-for-bit — and
+    demonstrably differ from averaging per-replica percentiles."""
+    rng = np.random.default_rng(3)
+    # deliberately skewed: one replica saw 10x the traffic at 10x the
+    # latency — mean-of-p99s is badly wrong exactly here
+    streams = [rng.uniform(100, 200, 1000) * 10,
+               rng.uniform(100, 200, 100),
+               rng.uniform(100, 200, 50)]
+    agg = obs.FleetAggregator(_replica_regs(streams))
+
+    oracle = Histogram()
+    oracle.record_many(np.concatenate(streams))
+    p50, p95, p99 = agg.percentiles("serve.request_us")
+    assert (p50, p95, p99) == tuple(
+        oracle.percentile(q) for q in (50, 95, 99))
+
+    mean_of_p99 = float(np.mean([
+        r.histograms["serve.request_us"].percentile(99)
+        for r in agg.sources]))
+    assert abs(mean_of_p99 - p99) / p99 > 0.2   # the shortcut is wrong
+
+    merged = agg.merged()
+    assert merged.name == "fleet"
+    assert merged.counters["serve.requests"] == 1150
+    np.testing.assert_array_equal(
+        merged.histograms["serve.request_us"].counts, oracle.counts)
+    # gauges keep per-replica attribution instead of clobbering
+    assert merged.gauges["replica0.queue"] == 0.0
+    assert merged.gauges["replica2.queue"] == 2.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=400),
+       st.integers(min_value=0, max_value=7))
+def test_split_snapshot_streams_remerge_bit_exact(m, n, seed):
+    """Property (satellite): recording a stream in ONE process vs
+    splitting it across M replicas, snapshotting each to JSON and
+    re-merging offline gives identical bucket counts AND identical
+    interpolated percentiles — including empty windows (replicas that
+    saw nothing) and the min/max clamp edges (constant streams hit
+    them)."""
+    rng = np.random.default_rng(seed)
+    if seed % 3 == 0:
+        vals = np.full(n, 777.7)        # constant: percentile clamps
+    else:
+        vals = rng.lognormal(6.0, 2.0, n)
+    # deterministic uneven split; some parts may be EMPTY
+    parts = np.array_split(vals, m)
+
+    oracle = Histogram()
+    oracle.record_many(vals)
+
+    regs = []
+    for i, part in enumerate(parts):
+        reg = Registry(enabled=True, name=f"r{i}")
+        if part.size:
+            reg.histogram("lat_us").record_many(part)
+        else:
+            reg.histogram("lat_us")     # registered, zero samples
+        regs.append(reg)
+    snaps = [json.loads(json.dumps(obs.snapshot(r))) for r in regs]
+    for s in snaps:
+        assert not check_bench_schema.validate(s)
+
+    agg = obs.FleetAggregator.from_snapshots(snaps)
+    merged = agg.merged().histograms["lat_us"]
+    np.testing.assert_array_equal(merged.counts, oracle.counts)
+    assert merged.count == oracle.count
+    if n:
+        assert merged.vmin == oracle.vmin
+        assert merged.vmax == oracle.vmax
+    for q in (1, 50, 95, 99, 100):
+        assert merged.percentile(q) == oracle.percentile(q)
+
+    # the offline one-shot goes through the same fold
+    rec = obs.merge_snapshots(snaps)
+    assert not check_bench_schema.validate(rec)
+    assert rec["source"] == "fleet"
+    back = Histogram.from_snapshot(rec["histograms"]["lat_us"])
+    np.testing.assert_array_equal(back.counts, oracle.counts)
+
+
+def test_last_snapshot_reads_final_line(tmp_path):
+    p = tmp_path / "m.jsonl"
+    with open(p, "w") as f:
+        for seq in (1, 2, 3):
+            f.write(json.dumps({"schema": "metrics_snapshot/v1",
+                                "seq": seq}) + "\n")
+    assert obs.last_snapshot(str(p))["seq"] == 3
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("\n")
+    with pytest.raises(ValueError):
+        obs.last_snapshot(str(empty))
+
+
+# -- close_sink: the final-partial-window regression -------------------
+
+def test_close_sink_flushes_final_partial_window(tmp_path):
+    """The bug this pins: a loop exiting between periodic flushes used
+    to drop every tick since the last cadence write.  ``close_sink``
+    must land exactly one extra line holding them."""
+    obs.enable()
+    path = tmp_path / "m.jsonl"
+    obs.set_sink(obs.JsonlSink(str(path), every=4))
+    for _ in range(6):
+        obs.inc("work")
+        obs.tick()
+    # periodic write at tick 4 only; ticks 5-6 are the partial window
+    lines = path.read_text().splitlines()
+    assert len(lines) == 1 and json.loads(lines[0])["ticks"] == 4
+    obs.close_sink()
+    lines = [json.loads(x) for x in path.read_text().splitlines()]
+    assert len(lines) == 2
+    assert lines[-1]["ticks"] == 6
+    assert lines[-1]["counters"]["work"] == 6
+    for rec in lines:
+        assert not check_bench_schema.validate(rec)
+    # idempotent: the sink is detached, nothing more is written
+    obs.close_sink()
+    obs.tick()
+    assert len(path.read_text().splitlines()) == 2
+
+
+def test_close_sink_skips_duplicate_after_flush(tmp_path):
+    """A driver that already flushed at the current tick count must not
+    get a duplicated final line from ``close_sink``."""
+    obs.enable()
+    path = tmp_path / "m.jsonl"
+    obs.set_sink(obs.JsonlSink(str(path), every=0))
+    obs.inc("work")
+    obs.tick()
+    obs.flush()
+    assert len(path.read_text().splitlines()) == 1
+    obs.close_sink()                      # ticks unchanged since flush
+    assert len(path.read_text().splitlines()) == 1
+    # but new ticks after the flush DO land
+    obs.set_sink(obs.JsonlSink(str(path), every=0))
+    obs.tick()
+    obs.close_sink()
+    assert len(path.read_text().splitlines()) == 1  # fresh sink truncated
+    assert json.loads(path.read_text())["ticks"] == 2
+
+
+def test_close_sink_noop_when_disabled_or_sinkless(tmp_path):
+    obs.close_sink()                      # no sink: nothing to do
+    path = tmp_path / "m.jsonl"
+    obs.set_sink(obs.JsonlSink(str(path), every=0))
+    obs.tick()                            # disabled: tick is a no-op
+    obs.close_sink()                      # disabled: no terminal write
+    assert path.read_text() == ""

@@ -473,11 +473,113 @@ def _validate_kernel(rec: dict) -> list[str]:
     return errors
 
 
+FLEET_TOP = {
+    "schema": str,
+    "benchmark": str,
+    "arch": str,
+    "policy": str,
+    "serve_batch": numbers.Integral,
+    "requests": numbers.Integral,
+    "merge_every": numbers.Integral,
+    "retier_every": numbers.Integral,
+    "retier_async": bool,
+    "drift": numbers.Real,
+    "sweep": list,
+}
+
+FLEET_SWEEP = {
+    "replicas": numbers.Integral,
+    "policy": str,
+    "aggregate_qps": numbers.Real,
+    "per_replica_qps": list,
+    "p50_us": numbers.Real,
+    "p95_us": numbers.Real,
+    "p99_us": numbers.Real,
+    "route_p50_us": numbers.Real,
+    "router_overhead_frac": numbers.Real,
+    "requests": numbers.Integral,
+    "merges": numbers.Integral,
+    "divergence": numbers.Real,
+    "divergence_premerge": numbers.Real,
+    "swaps_colocated": numbers.Integral,
+}
+
+# the routing decision must be noise next to the work it routes:
+# route-time p50 stays under this fraction of the per-request p50
+FLEET_ROUTER_BUDGET = 0.10
+
+# aggregate capacity QPS must not DROP as replicas are added, up to
+# this replica count (beyond it, per-replica request starvation on the
+# fixed smoke stream makes steady windows too thin to gate on)
+FLEET_MONOTONE_UPTO = 4
+
+
+def _validate_fleet(rec: dict) -> list[str]:
+    """``bench_fleet/v1`` (repro.launch.fleet): replica-scaling sweep.
+    The load-bearing invariants: fleet capacity is monotone in replica
+    count (up to ``FLEET_MONOTONE_UPTO``), the router's decision cost
+    stays under ``FLEET_ROUTER_BUDGET`` of the per-request p50, fleet
+    percentiles are ordered (they come from the exact cross-replica
+    bucket merge — a violation means the merge regressed), and the
+    periodic priority merge drives cross-replica divergence DOWN."""
+    errors: list[str] = []
+    _check_keys(rec, FLEET_TOP, "top-level", errors)
+    entries = _check_sweep(rec, FLEET_SWEEP, errors)
+    reps = [e.get("replicas") for e in entries]
+    if len(set(reps)) != len(reps):
+        errors.append("sweep: duplicate replica-count entries")
+    for i, e in enumerate(entries):
+        ps = [e.get(k) for k in ("p50_us", "p95_us", "p99_us")]
+        if all(_is_num(p) for p in ps) and \
+                not (ps[0] <= ps[1] + 1e-9 <= ps[2] + 2e-9):
+            errors.append(f"sweep[{i}]: fleet percentiles not monotone "
+                          f"(p50 {ps[0]} / p95 {ps[1]} / p99 {ps[2]})")
+        frac = e.get("router_overhead_frac")
+        if _is_num(frac) and not 0.0 <= frac < FLEET_ROUTER_BUDGET:
+            errors.append(
+                f"sweep[{i}]: router_overhead_frac {frac} outside "
+                f"[0, {FLEET_ROUTER_BUDGET}) — the routing decision "
+                "must be noise next to the per-request p50")
+        per = e.get("per_replica_qps")
+        n = e.get("replicas")
+        if isinstance(per, list) and isinstance(n, numbers.Integral):
+            if len(per) != n:
+                errors.append(f"sweep[{i}]: per_replica_qps has "
+                              f"{len(per)} entries for {n} replicas")
+            if not all(_is_num(q) and q > 0 for q in per):
+                errors.append(f"sweep[{i}]: per_replica_qps entries "
+                              "must be positive numbers")
+        d, dp = e.get("divergence"), e.get("divergence_premerge")
+        if _is_num(d) and d < 0:
+            errors.append(f"sweep[{i}]: divergence negative")
+        if _is_num(d) and _is_num(dp) and e.get("merges", 0) \
+                and isinstance(n, numbers.Integral) and n > 1 \
+                and d > dp + 1e-9:
+            errors.append(
+                f"sweep[{i}]: divergence {d} above pre-merge "
+                f"divergence {dp} — the periodic Eq. 7 merge must "
+                "drive it down")
+    ok = [e for e in entries
+          if isinstance(e.get("replicas"), numbers.Integral)
+          and _is_num(e.get("aggregate_qps"))]
+    ok.sort(key=lambda e: e["replicas"])
+    for lo, hi in zip(ok, ok[1:]):
+        if hi["replicas"] > FLEET_MONOTONE_UPTO:
+            break
+        if hi["aggregate_qps"] + 1e-9 < lo["aggregate_qps"]:
+            errors.append(
+                "sweep: aggregate_qps drops with replica count "
+                f"({lo['replicas']}: {lo['aggregate_qps']} -> "
+                f"{hi['replicas']}: {hi['aggregate_qps']})")
+    return errors
+
+
 SCHEMAS = {
     "bench_qps/v1": _validate_qps,
     "bench_hier/v1": _validate_hier,
     "bench_pipeline/v1": _validate_pipeline,
     "bench_kernel/v1": _validate_kernel,
+    "bench_fleet/v1": _validate_fleet,
     "metrics_snapshot/v1": _validate_metrics,
 }
 

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Re-merge ``metrics_snapshot/v1`` JSONL streams and print a table.
+
+    PYTHONPATH=src python tools/summarize_metrics.py run.jsonl [...]
+
+Takes one or many snapshot streams (``--metrics-out`` files from
+``launch.serve`` / ``launch.pipeline``, or the per-replica streams from
+``launch.fleet``).  Each stream's records are cumulative, so only its
+LAST line enters the merge (``repro.obs.fleet.last_snapshot``); across
+files the fold is the exact bucket merge (``obs.FleetAggregator`` via
+``Histogram.from_snapshot``) — the printed fleet percentiles are the
+percentiles of the union latency stream, bit-identical to what a
+single process recording every sample would report, NOT a mean of
+per-file percentiles.
+
+Output: one row per span/histogram (count, p50/p95/p99 in the
+histogram's native unit, ``_us`` for spans), then counters, then
+gauges (namespaced ``<source>.<name>`` when merging multiple named
+sources).  ``--statsd`` prints the merged registry as statsd line
+protocol instead.  docs/observability.md#fleet-aggregation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs import FleetAggregator, last_snapshot  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="merge metrics_snapshot/v1 streams exactly and "
+                    "print per-metric percentiles")
+    ap.add_argument("paths", nargs="+", metavar="FILE.jsonl",
+                    help="snapshot streams; each contributes its last "
+                         "(cumulative) record")
+    ap.add_argument("--statsd", action="store_true",
+                    help="emit statsd line protocol instead of the "
+                         "table")
+    args = ap.parse_args()
+
+    snaps = [last_snapshot(p) for p in args.paths]
+    agg = FleetAggregator.from_snapshots(snaps)
+    merged = agg.merged()
+
+    if args.statsd:
+        for line in agg.statsd():
+            print(line)
+        return 0
+
+    srcs = [s.get("source") or f"r{i}" for i, s in enumerate(snaps)]
+    print(f"merged {len(snaps)} snapshot stream(s): {', '.join(srcs)}")
+    rows = [(name, h.count, h.percentile(50), h.percentile(95),
+             h.percentile(99))
+            for name, h in sorted(merged.histograms.items())]
+    if rows:
+        w = max(len(r[0]) for r in rows)
+        print(f"\n{'histogram':<{w}}  {'count':>9}  {'p50':>12}  "
+              f"{'p95':>12}  {'p99':>12}")
+        for name, count, p50, p95, p99 in rows:
+            print(f"{name:<{w}}  {count:>9d}  {p50:>12.1f}  "
+                  f"{p95:>12.1f}  {p99:>12.1f}")
+    if merged.counters:
+        w = max(len(k) for k in merged.counters)
+        print(f"\n{'counter':<{w}}  {'total':>12}")
+        for name, val in sorted(merged.counters.items()):
+            print(f"{name:<{w}}  {val:>12g}")
+    if merged.gauges:
+        w = max(len(k) for k in merged.gauges)
+        print(f"\n{'gauge':<{w}}  {'value':>12}")
+        for name, val in sorted(merged.gauges.items()):
+            print(f"{name:<{w}}  {val:>12g}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
