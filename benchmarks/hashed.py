@@ -1,0 +1,204 @@
+"""Hashed-store compression sweep: AUC + serving latency vs pool ratio.
+
+The ROBE-style ``HashedStore`` bounds embedding memory by a pool size
+chosen up front (``V*D / (S*Z)`` compression, independent of vocab
+growth).  This benchmark trains the SAME bench DLRM end-to-end at a
+range of target ratios — the pool is the trained parameter, the
+backward scatter-adds through the ``hashed_gather`` custom_vjp — and
+records, per ratio:
+
+  * eval AUC of the compressed model vs the dense fp32 baseline
+    trained by the identical ``make_compressed_train_step`` driver for
+    the same number of steps (``auc_gap`` is the compression cost);
+  * pool bytes (fp32) and the combined SHARK-rowwise x hashing mode
+    (``quantize_pool``: int8 pool + per-slot scales) bytes + AUC;
+  * online serving percentiles through the same ``OnlineServer`` +
+    ``serve_forward`` stack that ``launch.serve --store-backend
+    hashed`` drives (Eq. 7 priority folds per request and rebuilds the
+    hot-row fp32 cache at every re-tier boundary).
+
+The pool's table learning rate runs hotter than the dense baseline's
+(shared slots accumulate squared gradient from every colliding row, so
+per-slot adagrad decays its effective step faster); the head optimizer
+is identical in both arms.
+
+``tools/check_bench_schema.py`` enforces on the emitted
+``bench_hash/v1`` record: bytes strictly decreasing in the target
+ratio (the memory bound is the whole point), int8-combined bytes below
+fp32-pool bytes at every ratio, latency percentile monotonicity, and a
+sweep that actually reaches 100x.
+
+    PYTHONPATH=src python -m benchmarks.hashed [--fast] [--emit PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import make_setup, eval_auc
+from benchmarks.qps import write_bench_json
+
+BENCH_SCHEMA = "bench_hash/v1"
+
+SWEEP_KEYS = ("qps", "steady_qps", "p50_us", "p95_us", "p99_us",
+              "latency_p50", "latency_p95", "latency_p99",
+              "p99_retier_attributed", "p99_while_retiering",
+              "lookups", "hits", "cache_hit_rate", "retiers")
+
+
+def _train(setup, hcfg, steps, table_lr, head_lr, seed):
+    """One training arm (dense when ``hcfg`` is None) through the same
+    compressed step driver; returns the final TrainState."""
+    from repro.models import embedding as E
+    from repro.optim import optimizers as opt_lib
+    from repro.store import init_hashed
+    from repro.train.steps import make_compressed_train_step
+
+    spec = setup.model.spec
+    step = make_compressed_train_step(
+        setup.model.loss_from_emb,
+        lambda b: E.globalize(b["indices"], spec),
+        lambda b: b["labels"], "embed_table", table_lr,
+        spec.num_fields, hashed_cfg=hcfg,
+        dense_optimizer=opt_lib.adam(head_lr), with_accum=False)
+    params = dict(setup.model.init(jax.random.PRNGKey(seed)))
+    if hcfg is not None:
+        params["embed_table"] = init_hashed(hcfg).pool
+    state = step.init_state(params)
+    jstep = jax.jit(step)
+    for i in range(steps):
+        b = {k: jnp.asarray(v)
+             for k, v in setup.ds.batch(setup.batch_size, i).items()}
+        state, _ = jstep(state, b)
+    return state
+
+
+def _materialized_auc(setup, state, hs, hcfg) -> float:
+    """Eval AUC with the virtual table materialized from the pool."""
+    from repro.store.hashed import gather_rows_host
+
+    spec = setup.model.spec
+    mat = jnp.asarray(gather_rows_host(
+        hs, hcfg, np.arange(spec.total_rows)))
+    p = dict(state.params)
+    p["embed_table"] = mat
+    return eval_auc(setup, p)
+
+
+def run_hashed_sweep(ratios=(1.0, 4.0, 20.0, 100.0, 1000.0),
+                     train_steps=700, requests=96, serve_batch=8,
+                     cache_rows=256, retier_every=32, chunk_dim=8,
+                     num_hashes=4, table_lr=0.2, head_lr=0.05,
+                     drift=4.0, a=1.2, eval_batches=16,
+                     seed=0) -> dict:
+    """One ``bench_hash/v1`` record over target compression ratios."""
+    from repro.serve import OnlineConfig, OnlineServer, serve_forward
+    from repro.store import (HashedConfig, build, plan_pool_slots,
+                             quantize_pool)
+    from repro.store.hashed import HashedStore
+
+    setup = make_setup(seed=seed)
+    setup.eval_batches = eval_batches
+    spec = setup.model.spec
+    bytes_fp32 = spec.total_rows * spec.dim * 4
+
+    base = _train(setup, None, train_steps, head_lr, head_lr, seed)
+    auc_fp32 = eval_auc(setup, base.params)
+
+    sweep = []
+    for ratio in ratios:
+        slots = plan_pool_slots(spec.total_rows, spec.dim, chunk_dim,
+                                float(ratio))
+        hcfg = HashedConfig(vocab=spec.total_rows, dim=spec.dim,
+                            chunk_dim=chunk_dim, num_slots=slots,
+                            num_hashes=num_hashes)
+        state = _train(setup, hcfg, train_steps, table_lr, head_lr,
+                       seed)
+        hs = HashedStore(pool=state.params["embed_table"],
+                         pool_scale=jnp.ones((slots,), jnp.float32),
+                         priority=state.priority)
+        auc = _materialized_auc(setup, state, hs, hcfg)
+
+        # SHARK-rowwise x hashing combined mode: int8 pool + scales
+        q = quantize_pool(hs)
+        auc_combined = _materialized_auc(setup, state, q, hcfg)
+
+        backend = build("hashed", hs, hcfg)
+        server = OnlineServer(
+            backend=backend,
+            online=OnlineConfig(cache_rows=cache_rows,
+                                retier_every=retier_every))
+        result = serve_forward(
+            server, setup.model, spec, state.params,
+            serve_batch=serve_batch, requests=requests, drift=drift,
+            num_dense=setup.ds.cfg.num_dense, a=a, seed=seed)
+
+        entry = {
+            "ratio_target": float(ratio),
+            "pool_slots": int(slots),
+            "bytes": int(backend.nbytes()),
+            "ratio_actual": round(bytes_fp32 / backend.nbytes(), 2),
+            "bytes_combined": int(q.nbytes()),
+            "auc": round(float(auc), 5),
+            "auc_gap": round(float(auc_fp32 - auc), 5),
+            "auc_combined": round(float(auc_combined), 5),
+        }
+        d = result.as_dict()
+        entry.update({k: d[k] for k in SWEEP_KEYS})
+        sweep.append(entry)
+
+    return {"schema": BENCH_SCHEMA, "benchmark": "hashed_ratio_sweep",
+            "vocab": int(spec.total_rows), "dim": int(spec.dim),
+            "chunk_dim": int(chunk_dim), "num_hashes": int(num_hashes),
+            "train_steps": int(train_steps),
+            "table_lr": float(table_lr), "head_lr": float(head_lr),
+            "requests": int(requests), "serve_batch": int(serve_batch),
+            "cache_rows": int(cache_rows),
+            "retier_every": int(retier_every), "drift": float(drift),
+            "retier_async": False,
+            "bytes_fp32": int(bytes_fp32),
+            "auc_fp32": round(float(auc_fp32), 5),
+            "sweep": sweep}
+
+
+def run(fast: bool = False) -> list[dict]:
+    """benchmarks.run entry: CSV rows from a reduced sweep."""
+    rec = run_hashed_sweep(
+        ratios=(4.0, 100.0) if fast else (1.0, 4.0, 20.0, 100.0,
+                                          1000.0),
+        train_steps=120 if fast else 700,
+        requests=32 if fast else 96,
+        eval_batches=4 if fast else 16)
+    return [{"metric": f"hash_ratio{e['ratio_target']:g}",
+             "value": e["steady_qps"], "auc": e["auc"],
+             "auc_gap": e["auc_gap"], "bytes": e["bytes"]}
+            for e in rec["sweep"]]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced budgets (CI)")
+    ap.add_argument("--ratios", default=None, metavar="R[,R...]")
+    ap.add_argument("--train-steps", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--serve-batch", type=int, default=8)
+    ap.add_argument("--emit", default="BENCH_hash.json", metavar="PATH")
+    args = ap.parse_args()
+    ratios = tuple(float(x) for x in args.ratios.split(",")) \
+        if args.ratios else ((4.0, 100.0) if args.fast
+                             else (1.0, 4.0, 20.0, 100.0, 1000.0))
+    rec = run_hashed_sweep(
+        ratios=ratios,
+        train_steps=args.train_steps or (120 if args.fast else 700),
+        requests=args.requests or (32 if args.fast else 96),
+        serve_batch=args.serve_batch,
+        eval_batches=4 if args.fast else 16)
+    write_bench_json(rec, args.emit)
+    print(json.dumps(rec))
+    print(f"wrote {args.emit}")

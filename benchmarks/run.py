@@ -5,11 +5,14 @@ table-specific payload as key=value pairs).
 
     PYTHONPATH=src python -m benchmarks.run [--fast]
 
-``--emit BENCH_qps.json`` instead runs the micro-batched serving sweep
-(``qps.run_online_sweep``) and writes its stable-schema ``bench_qps/v1``
-record to the given path — the perf-trajectory file future PRs diff
-against (validate with ``tools/check_bench_schema.py``).  The CSV jobs
-are skipped in that mode.
+``--emit PATH`` instead regenerates ONE committed benchmark artifact
+and skips the CSV jobs: the output basename is looked up in
+``benchmarks.manifest.COMMITTED_BENCH`` (BENCH_qps.json,
+BENCH_hier.json, BENCH_pipeline.json, BENCH_kernel.json,
+BENCH_hash.json; BENCH_fleet.json points at its own driver) and the
+matching stable-schema record is written — the perf-trajectory files
+future PRs diff against.  ``tools/check_bench_schema.py --committed``
+validates the same manifest, so the emit and gate lists cannot drift.
 """
 
 from __future__ import annotations
@@ -25,6 +28,76 @@ def _emit(name: str, t0: float, rows) -> None:
         payload = ";".join(f"{k}={v}" for k, v in row.items())
         print(f"{name},{us:.0f},{payload}")
     sys.stdout.flush()
+
+
+def _emit_bench_record(name: str, path: str, args) -> None:
+    """Emit one committed benchmark artifact, dispatched on the output
+    file's basename through ``benchmarks.manifest.COMMITTED_BENCH`` —
+    the same table the bench-schema CI gate validates against, so the
+    set of emittable records and the set of gated records cannot
+    drift."""
+    import json
+
+    from benchmarks.manifest import COMMITTED_BENCH
+
+    fast = args.fast
+    entry = COMMITTED_BENCH.get(name)
+    if entry is None:
+        known = ", ".join(sorted(COMMITTED_BENCH))
+        raise SystemExit(f"--emit {name}: not a committed benchmark "
+                         f"artifact (manifest: {known})")
+
+    if name == "BENCH_qps.json":
+        from benchmarks import qps
+
+        rec = qps.run_online_sweep(
+            qps._parse_serve_batches(args.serve_batches),
+            requests=96 if fast else 384,
+            retier_every=32 if fast else 128,
+            retier_async=args.retier_async)
+    elif name == "BENCH_pipeline.json":
+        from repro.launch.pipeline import (PipelineConfig, fast_config,
+                                           run_pipeline,
+                                           verify_failures)
+
+        cfg = fast_config() if fast else PipelineConfig()
+        rec = run_pipeline(cfg)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+        failures = verify_failures(rec)
+        if failures:
+            raise SystemExit(f"pipeline verify FAILED: {failures}")
+        return
+    elif name == "BENCH_hier.json":
+        from benchmarks import hier
+
+        rec = hier.run_hier_sweep(
+            fractions=(0.1, 0.5) if fast else (0.05, 0.15, 0.4, 1.0),
+            requests=64 if fast else 256,
+            retier_async=args.retier_async)
+    elif name == "BENCH_hash.json":
+        from benchmarks import hashed
+
+        rec = hashed.run_hashed_sweep(
+            ratios=(4.0, 100.0) if fast else (1.0, 4.0, 20.0, 100.0,
+                                              1000.0),
+            train_steps=120 if fast else 700,
+            requests=32 if fast else 96,
+            eval_batches=4 if fast else 16)
+    elif name == "BENCH_kernel.json":
+        from benchmarks import kernels
+
+        rec = kernels.run(iters=1 if fast else 2)
+    else:
+        _, hint = entry
+        raise SystemExit(f"{name} is emitted by its own driver: "
+                         f"`{hint}`")
+
+    from benchmarks.qps import write_bench_json
+
+    write_bench_json(rec, path)
+    print(f"wrote {path}")
 
 
 def main() -> None:
@@ -50,37 +123,21 @@ def main() -> None:
     fast = args.fast
 
     if args.emit_pipeline:
-        import json
-
-        from repro.launch.pipeline import (PipelineConfig, fast_config,
-                                           run_pipeline,
-                                           verify_failures)
-
-        cfg = fast_config() if fast else PipelineConfig()
-        rec = run_pipeline(cfg)
-        with open(args.emit_pipeline, "w") as f:
-            json.dump(rec, f, indent=1, sort_keys=True)
-        print(f"wrote {args.emit_pipeline}")
-        failures = verify_failures(rec)
-        if failures:
-            raise SystemExit(f"pipeline verify FAILED: {failures}")
+        _emit_bench_record("BENCH_pipeline.json", args.emit_pipeline,
+                           args)
         return
 
     if args.emit:
-        from benchmarks import qps
+        import os
 
-        rec = qps.run_online_sweep(
-            qps._parse_serve_batches(args.serve_batches),
-            requests=96 if fast else 384,
-            retier_every=32 if fast else 128,
-            retier_async=args.retier_async)
-        qps.write_bench_json(rec, args.emit)
-        print(f"wrote {args.emit}")
+        _emit_bench_record(os.path.basename(args.emit), args.emit,
+                           args)
         return
 
     from benchmarks import (fig2_fperm, fig3_thresholds, freq_error,
-                            qps, qps_sharded, roofline, table2_time,
-                            table3_fquant, table4_combined)
+                            hashed, qps, qps_sharded, roofline,
+                            table2_time, table3_fquant,
+                            table4_combined)
 
     jobs = {
         "table2_time": lambda: table2_time.run(
@@ -103,6 +160,7 @@ def main() -> None:
             serve_batches=(8,) if fast else (1, 8)),
         "freq_error": lambda: freq_error.run(
             train_steps=100 if fast else 400),
+        "hashed": lambda: hashed.run(fast=fast),
         "roofline": roofline.run,
     }
     if args.only:

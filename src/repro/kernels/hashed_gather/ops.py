@@ -1,0 +1,107 @@
+"""Public op: fused hashed gather-and-combine over a chunk pool.
+
+``slot_plan`` turns bag indices into the kernel's scalar-prefetched
+addressing — per-(bag, chunk) pool slots plus sign-folded coefficients
+— and ``hashed_gather`` dispatches the fused Pallas kernel or the jnp
+oracle with the same auto-select rule as the dequant-bag family (the
+oracle under interpretation, the kernel where the backend compiles it).
+
+Block sizes layer the measured autotune cache (``kernels.autotune``,
+kind ``hashed_gather``) over the shared analytic VMEM model; the chunk
+width Z is the D-block by construction (one pool row per DMA), so only
+B_block is resolved.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import should_interpret
+from repro.kernels.dequant_bag.ops import (
+    _VMEM_SCRATCH_BUDGET,
+    _auto_block_b,
+    _cache_dtype,
+)
+from repro.kernels.hashed_gather.kernel import hashed_gather_pallas
+from repro.kernels.hashed_gather.ref import hash_slots, hashed_gather_ref
+
+Array = jax.Array
+
+
+def resolve_hashed_block_b(b: int, t: int, z: int, itemsize: int = 4,
+                           block_b: int | None = None,
+                           dtype: str | None = None) -> int:
+    """B_block for the hashed kernel: argument, then
+    ``REPRO_DEQUANT_BLOCK_B`` (shared env knob), then a measured
+    autotune-cache hit for ``(backend, hashed_gather, dtype, b, t, z)``,
+    then the analytic VMEM-budget pick (Z doubles as D_block)."""
+    if block_b is not None:
+        if block_b < 1:
+            raise ValueError(f"block_b must be >= 1, got {block_b}")
+        return int(block_b)
+    env = os.environ.get("REPRO_DEQUANT_BLOCK_B")
+    if env:
+        return max(1, int(env))
+    from repro.kernels import autotune
+    cached = autotune.lookup_cached("hashed_gather",
+                                    _cache_dtype(itemsize, dtype),
+                                    b, t, z)
+    if cached is not None:
+        return int(cached[0])
+    return _auto_block_b(b, t, z, itemsize, _VMEM_SCRATCH_BUDGET)
+
+
+def slot_plan(indices: Array, weights: Array | None, *,
+              num_chunks: int, num_hashes: int, num_slots: int,
+              seed: int = 0) -> tuple[Array, Array]:
+    """Bag indices (B, K) [+ weights (B, K)] -> kernel addressing.
+
+    Returns (slots, coeff), both (B, C*K*NH): chunk-major slot columns
+    (all of chunk c's K*NH draws contiguous, matching the kernel's
+    per-chunk grid step) and sign-folded coefficients.  Differentiable
+    w.r.t. ``weights`` (the hash itself is integer-only).
+    """
+    b, k = indices.shape
+    slots, signs = hash_slots(indices, num_chunks=num_chunks,
+                              num_hashes=num_hashes,
+                              num_slots=num_slots, seed=seed)
+    # (B, K, C, NH) -> (B, C, K, NH) -> (B, C*K*NH)
+    slots = slots.transpose(0, 2, 1, 3).reshape(b, -1)
+    if weights is None:
+        coeff = signs
+    else:
+        coeff = signs * weights.astype(jnp.float32)[:, :, None, None]
+    coeff = coeff.transpose(0, 2, 1, 3).reshape(b, -1)
+    return slots, coeff
+
+
+def hashed_gather(pool: Array, scales: Array, slots: Array,
+                  coeff: Array, *, num_chunks: int,
+                  use_pallas: bool | None = None,
+                  interpret: bool | None = None,
+                  block_b: int | None = None,
+                  nbuf: int | None = None) -> Array:
+    """Dispatch the fused kernel or the jnp oracle (same contract as
+    ``hashed_gather_ref``).  ``use_pallas=None`` auto-selects: the
+    kernel when the backend compiles it for real, the oracle under
+    interpretation."""
+    if use_pallas is None:
+        use_pallas = not should_interpret(interpret)
+    if not use_pallas:
+        return hashed_gather_ref(pool, scales, slots, coeff,
+                                 num_chunks=num_chunks)
+    return hashed_gather_pallas(pool, scales, slots, coeff,
+                                num_chunks=num_chunks,
+                                interpret=interpret, block_b=block_b,
+                                nbuf=nbuf)
+
+
+__all__ = [
+    "hash_slots",
+    "hashed_gather",
+    "resolve_hashed_block_b",
+    "slot_plan",
+]

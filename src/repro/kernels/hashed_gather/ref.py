@@ -1,0 +1,95 @@
+"""jnp oracles for the hashed gather + the slot hash family itself.
+
+The hash family is the contract every layer shares: training, serving,
+the Pallas kernel's scalar-prefetched slot plan, the host-side cache
+materializer and the sharded lookup all call ``hash_slots`` and must
+agree bit-for-bit on which pool rows compose which embedding row.  It
+is the same uint32 multiplicative/xorshift mixing used by
+``qat_store._hash_uniform`` (stateless, jit-traceable, no RNG keys),
+salted per ``(row, chunk, hash_j)`` so the ``num_hashes`` draws per
+chunk are decorrelated and the sign bit is independent of the slot.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_GOLD = np.uint32(0x9E3779B1)    # 2^32 / golden ratio
+_KNUTH = np.uint32(2654435761)   # Knuth multiplicative constant
+_MIX1 = np.uint32(0x85EBCA6B)    # murmur3 finalizer constants
+_MIX2 = np.uint32(0xC2B2AE35)
+
+
+def _mix(h: Array) -> Array:
+    """murmur3 finalizer: full-avalanche uint32 -> uint32."""
+    h = h ^ (h >> np.uint32(16))
+    h = h * _MIX1
+    h = h ^ (h >> np.uint32(13))
+    h = h * _MIX2
+    return h ^ (h >> np.uint32(16))
+
+
+def hash_slots(indices, *, num_chunks: int, num_hashes: int,
+               num_slots: int, seed: int = 0):
+    """Row ids -> (slots, signs), shapes ``indices.shape + (C, NH)``.
+
+    slots int32 in [0, num_slots); signs fp32 in {-1, +1}.  The sign
+    comes from a second finalizer pass so it is independent of the slot
+    residue (a shared low-bit source would correlate sign with slot
+    parity for power-of-two pools).
+    """
+    idx = jnp.asarray(indices, jnp.uint32)[..., None, None]
+    c = jnp.arange(num_chunks, dtype=jnp.uint32)[:, None]
+    j = jnp.arange(num_hashes, dtype=jnp.uint32)[None, :]
+    salt = np.uint32((int(seed) * int(_GOLD)) & 0xFFFFFFFF)
+    key = idx * _KNUTH + c * _MIX1 + j * _MIX2 + salt
+    h = _mix(key)
+    slots = (h % np.uint32(num_slots)).astype(jnp.int32)
+    g = _mix(h + _GOLD)
+    signs = jnp.where((g >> np.uint32(31)) == 0, 1.0, -1.0
+                      ).astype(jnp.float32)
+    return slots, signs
+
+
+def hashed_gather_ref(pool: Array, scales: Array, slots: Array,
+                      coeff: Array, *, num_chunks: int) -> Array:
+    """jnp oracle for the fused kernel.
+
+    pool (S, Z), scales (S,), slots/coeff (B, C*T) where T is the
+    slots-per-chunk count (``K * num_hashes`` for bags) -> (B, C*Z)
+    fp32: ``out[b, c*Z:(c+1)*Z] = sum_t (pool[slot] * scale) * coeff``.
+    Per-slot multiply order matches the kernel's ``(row * s) * w``.
+    """
+    b = slots.shape[0]
+    z = pool.shape[1]
+    t = slots.shape[1] // num_chunks
+    rows = jnp.take(pool, slots, axis=0).astype(jnp.float32)
+    sg = jnp.take(scales, slots, axis=0).astype(jnp.float32)
+    terms = (rows * sg[..., None]) * coeff[..., None]
+    return terms.reshape(b, num_chunks, t, z).sum(axis=2) \
+                .reshape(b, num_chunks * z)
+
+
+def hashed_grad_ref(g: Array, scales: Array | None, slots: Array,
+                    coeff: Array, num_pool_slots: int, *,
+                    num_chunks: int) -> Array:
+    """Scatter transpose oracle: d pool from the chunked cotangent.
+
+    g (B, C*Z) fp32 -> (S, Z) fp32 via segment-sum over every
+    ``(b, c, t)`` slot contribution (``coeff * scale * g_chunk``).
+    """
+    b = g.shape[0]
+    z = g.shape[1] // num_chunks
+    t = slots.shape[1] // num_chunks
+    gc = g.reshape(b, num_chunks, 1, z)
+    w = coeff.reshape(b, num_chunks, t)
+    if scales is not None:
+        w = w * jnp.take(scales, slots, axis=0).reshape(
+            b, num_chunks, t)
+    contrib = (w[..., None] * gc).reshape(-1, z)
+    return jax.ops.segment_sum(contrib, slots.reshape(-1),
+                               num_segments=num_pool_slots)

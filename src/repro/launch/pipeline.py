@@ -71,6 +71,8 @@ class PipelineConfig:
     seed: int = 0
     resume: bool = False         # keep ckpt_dir and resume training
     use_pallas: bool | None = None   # None = backend auto-detect
+    store_backend: str = "packed"    # "packed" | "hashed" serving store
+    hash_ratio: float = 100.0    # fp32/pool target (store_backend=hashed)
 
 
 def fast_config(**overrides) -> PipelineConfig:
@@ -250,20 +252,47 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
 
     # ------------------------------------------------------------ pack
     tb = obs.timeblock("pipeline.pack").start()
-    packed = ps.pack(store, final_cfg)
     bytes_fp32 = spec.total_rows * spec.dim * 4
-    bytes_packed = packed.nbytes()
     pack_dir = os.path.join(cfg.ckpt_dir, "packed")
     if os.path.isdir(pack_dir):
         shutil.rmtree(pack_dir)
     pmgr = CheckpointManager(pack_dir, keep=1)
-    pmgr.save(cfg.steps, packed)
-    restored_packed, _ = pmgr.restore(packed)
-    # the handoff artifact must equal a fresh offline pack of the same
-    # trained rows, bit for bit, through the checkpoint round trip
-    verify_pack = (_bits_equal(restored_packed, packed)
-                   and _bits_equal(restored_packed,
-                                   ps.pack(store, final_cfg)))
+    # the store round-trips as a kind-tagged manifest: each backend
+    # self-describes its payload (packed_store/v1 / hashed_store/v1)
+    # and ``store.from_manifest`` dispatches the rebuild on the tag
+    from repro.store import from_manifest as store_from_manifest
+    hashed_backend = None
+    restored_packed = None
+    if cfg.store_backend == "hashed":
+        from repro.store import (HashedConfig, build as store_build,
+                                 fit_pool_from_table, plan_pool_slots)
+        slots = plan_pool_slots(spec.total_rows, spec.dim, 8,
+                                cfg.hash_ratio)
+        hcfg = HashedConfig(vocab=spec.total_rows, dim=spec.dim,
+                            chunk_dim=8, num_slots=slots)
+        hs = fit_pool_from_table(jnp.asarray(table), hcfg,
+                                 priority=pri)
+        src_backend = store_build("hashed", hs, hcfg, mesh=mesh)
+        bytes_packed = src_backend.nbytes()
+        pmgr.save(cfg.steps, src_backend.snapshot_manifest())
+        restored_tree, _ = pmgr.restore(src_backend.snapshot_manifest())
+        hashed_backend = store_from_manifest(restored_tree, mesh=mesh)
+        verify_pack = _bits_equal(hashed_backend.snapshot_manifest(),
+                                  src_backend.snapshot_manifest())
+    else:
+        packed = ps.pack(store, final_cfg)
+        bytes_packed = packed.nbytes()
+        manifest = {"kind": "packed_store/v1", "packed": packed,
+                    "priority": store.priority}
+        pmgr.save(cfg.steps, manifest)
+        restored_tree, _ = pmgr.restore(manifest)
+        restored_packed = store_from_manifest(
+            restored_tree, store=store, cfg=final_cfg).host_packed
+        # the handoff artifact must equal a fresh offline pack of the
+        # same trained rows, bit for bit, through the round trip
+        verify_pack = (_bits_equal(restored_packed, packed)
+                       and _bits_equal(restored_packed,
+                                       ps.pack(store, final_cfg)))
     stage_s["pack"] = round(tb.stop(), 3)
     rec["bytes_fp32"] = int(bytes_fp32)
     rec["bytes_packed"] = int(bytes_packed)
@@ -288,7 +317,12 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
 
     loss_fp32, auc_fp32 = eval_quality(
         jnp.asarray(jax.device_get(state.params["embed_table"])))
-    loss_packed, auc_packed = eval_quality(ps.unpack(restored_packed))
+    if hashed_backend is not None:
+        served_tbl = jnp.asarray(hashed_backend.gather_fp32_host(
+            np.arange(spec.total_rows)))
+    else:
+        served_tbl = ps.unpack(restored_packed)
+    loss_packed, auc_packed = eval_quality(served_tbl)
     rec["eval_loss_fp32"] = round(loss_fp32, 5)
     rec["eval_loss_packed"] = round(loss_packed, 5)
     rec["eval_auc_fp32"] = round(auc_fp32, 5)
@@ -296,28 +330,35 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
 
     # ----------------------------------------------------------- serve
     tb = obs.timeblock("pipeline.serve").start()
-    from repro.serve import (OnlineConfig, OnlineServer,
-                             serve_forward_microbatched)
+    from repro.serve import OnlineConfig, OnlineServer, serve_forward
     server = OnlineServer(
         store, final_cfg,
         OnlineConfig(cache_rows=cfg.cache_rows,
                      retier_every=cfg.retier_every),
-        mesh=mesh)
-    # direct handoff: the server's own pack of the trained store must
-    # BE the pipeline's packed artifact
-    handoff_ok = _bits_equal(server.host_packed, restored_packed)
+        mesh=mesh, backend=hashed_backend)
+    if hashed_backend is None:
+        # direct handoff: the server's own pack of the trained store
+        # must BE the pipeline's packed artifact
+        handoff_ok = _bits_equal(server.host_packed, restored_packed)
+    else:
+        handoff_ok = True       # the restored backend IS the server's
     serve_params = {k: jax.device_get(v)
                     for k, v in state.params.items()}
-    loop_res = serve_forward_microbatched(
+    loop_res = serve_forward(
         server, model, spec, serve_params,
         serve_batch=cfg.serve_batch, requests=cfg.serve_requests,
         drift=cfg.drift, num_dense=num_dense, seed=cfg.seed)
     # lockstep bit-identity under live priorities: after a final
     # re-tier the served store equals a fresh pack of the live EMA
+    # (hashed: the shared pool must come through serving untouched —
+    # only the priority EMA and the cache may move)
     server.retier()
-    verify_serve = _bits_equal(
-        ps.unpack(server.host_packed),
-        ps.unpack(ps.pack(server.store, final_cfg)))
+    if hashed_backend is None:
+        verify_serve = _bits_equal(
+            ps.unpack(server.host_packed),
+            ps.unpack(ps.pack(server.store, final_cfg)))
+    else:
+        verify_serve = _bits_equal(server.backend.hs.pool, hs.pool)
     stage_s["serve"] = round(tb.stop(), 3)
     rec["serve_requests"] = int(cfg.serve_requests)
     rec["serve_batch"] = int(cfg.serve_batch)
@@ -328,6 +369,7 @@ def run_pipeline(cfg: PipelineConfig) -> dict:
                                              and handoff_ok)
     rec["verify_grad_fp32_tolerance"] = bool(grad_ok)
     rec["verify_accum_checkpointed"] = bool(accum_ckpt_ok)
+    rec["store_backend"] = cfg.store_backend
     rec["stage_seconds"] = stage_s
     return rec
 
@@ -370,6 +412,15 @@ def _main() -> None:
                          "newest checkpoint")
     ap.add_argument("--target-ratio", type=float, default=0.5)
     ap.add_argument("--prune-to", type=float, default=0.85)
+    ap.add_argument("--store-backend", default="packed",
+                    choices=("packed", "hashed"),
+                    help="serving store backend: 'packed' = the "
+                         "tier-partitioned pack, 'hashed' = ROBE-style "
+                         "pool fit to the trained table "
+                         "(repro.store.build)")
+    ap.add_argument("--hash-ratio", type=float, default=100.0,
+                    help="target fp32-table / pool compression ratio "
+                         "(--store-backend hashed)")
     ap.add_argument("--serve-requests", type=int, default=None)
     ap.add_argument("--emit", default=None, metavar="PATH",
                     help="also write the bench_pipeline/v1 record here")
@@ -392,7 +443,9 @@ def _main() -> None:
     overrides = dict(arch=args.arch, mesh=args.mesh,
                      ckpt_dir=args.ckpt_dir, resume=args.resume,
                      target_ratio=args.target_ratio,
-                     prune_to=args.prune_to)
+                     prune_to=args.prune_to,
+                     store_backend=args.store_backend,
+                     hash_ratio=args.hash_ratio)
     for key, val in (("steps", args.steps), ("batch", args.batch),
                      ("serve_requests", args.serve_requests)):
         if val is not None:

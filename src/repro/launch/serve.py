@@ -91,6 +91,27 @@ def _main() -> None:
                          "forward (--online; 0 = legacy request-at-a-"
                          "time batches of --batch users).  --requests "
                          "then counts single-user requests")
+    ap.add_argument("--store-backend", default="packed",
+                    choices=("packed", "hier", "hashed"),
+                    help="embedding store backend (repro.store.build): "
+                         "'packed' = flat tier-partitioned store, "
+                         "'hier' = three-level HBM/host/disk "
+                         "(equivalent to --hbm-budget-mb), 'hashed' = "
+                         "ROBE-style compositional rows materialized "
+                         "from a shared chunk pool (--online)")
+    ap.add_argument("--hash-ratio", type=float, default=100.0,
+                    help="target fp32-table / pool compression ratio "
+                         "for --store-backend hashed (pool rows are "
+                         "planned from it; 1000x memory at ~1000x)")
+    ap.add_argument("--hash-chunk-dim", type=int, default=8,
+                    help="pool row width Z for --store-backend hashed "
+                         "(must divide the embedding dim)")
+    ap.add_argument("--hash-bits", type=int, default=32,
+                    choices=(32, 8),
+                    help="pool element width for --store-backend "
+                         "hashed: 32 = fp32 pool, 8 = int8 pool + "
+                         "per-slot scales (the SHARK-rowwise x hashing "
+                         "combined mode)")
     ap.add_argument("--hbm-budget-mb", type=float, default=0.0,
                     help="serve through the hierarchical store "
                          "(repro.store): device HBM holds only the "
@@ -161,6 +182,21 @@ def _main() -> None:
     if args.fuse_matmul and args.hbm_budget_mb > 0:
         ap.error("--fuse-matmul requires a fully resident store "
                  "(no --hbm-budget-mb)")
+    if args.hbm_budget_mb > 0 and args.store_backend == "packed":
+        args.store_backend = "hier"      # legacy spelling of the flag
+    if args.store_backend == "hier" and args.hbm_budget_mb <= 0:
+        ap.error("--store-backend hier needs --hbm-budget-mb")
+    if args.store_backend == "hashed":
+        if not args.online:
+            ap.error("--store-backend hashed requires --online")
+        if args.hbm_budget_mb > 0:
+            ap.error("--store-backend hashed is incompatible with "
+                     "--hbm-budget-mb")
+        if args.fuse_matmul:
+            ap.error("--store-backend hashed has no fused bag->matmul "
+                     "path (rows materialize on the fly)")
+        if args.verify_hier:
+            ap.error("--verify-hier requires the hier backend")
     if args.autotune_cache:
         import os
         os.environ["REPRO_AUTOTUNE_CACHE"] = args.autotune_cache
@@ -237,12 +273,12 @@ def _main() -> None:
 
     if args.online:
         from repro.serve import (OnlineConfig, OnlineServer,
-                                 serve_forward_hier, serve_forward_loop,
-                                 serve_forward_microbatched,
+                                 serve_forward, serve_forward_loop,
                                  stream_bytes_per_request)
 
         hier_cfg = None
-        if args.hbm_budget_mb > 0:
+        backend = None
+        if args.store_backend == "hier":
             from repro.store import HierConfig
             host_budget = (int(args.host_budget_mb * 2 ** 20)
                            if args.host_budget_mb > 0 else None)
@@ -250,6 +286,22 @@ def _main() -> None:
                 hbm_budget_bytes=int(args.hbm_budget_mb * 2 ** 20),
                 host_budget_bytes=host_budget,
                 store_dir=args.store_dir)
+        elif args.store_backend == "hashed":
+            from repro.store import (HashedConfig, build,
+                                     fit_pool_from_table,
+                                     plan_pool_slots, quantize_pool)
+            slots = plan_pool_slots(spec.total_rows, spec.dim,
+                                    args.hash_chunk_dim,
+                                    args.hash_ratio,
+                                    pool_bits=args.hash_bits)
+            hcfg = HashedConfig(vocab=spec.total_rows, dim=spec.dim,
+                                chunk_dim=args.hash_chunk_dim,
+                                num_slots=slots,
+                                pool_bits=args.hash_bits)
+            hs = fit_pool_from_table(store.table, hcfg, priority=pri)
+            if args.hash_bits == 8:
+                hs = quantize_pool(hs)
+            backend = build("hashed", hs, hcfg, mesh=mesh)
         server = OnlineServer(
             store, cfg,
             OnlineConfig(cache_rows=args.cache_rows,
@@ -257,15 +309,20 @@ def _main() -> None:
                          retier_async=args.retier_async,
                          shadow_rows_per_step=args.shadow_rows,
                          verify_swap=args.verify_swap),
-            mesh=mesh, hier=hier_cfg)
+            mesh=mesh, hier=hier_cfg, backend=backend)
+        packed_bytes = server.backend.nbytes()
+        tiers_at_pack = None
         if server.hier is not None:
-            packed_bytes = sum(server.hier.nbytes().values())
             tiers_at_pack = server.hier.tiers.copy()
             print(f"hier {packed_bytes / 2 ** 20:.2f} MiB total, "
                   f"levels {server.hier.nbytes()} "
                   f"rows {server.hier.counts()}")
+        elif args.store_backend == "hashed":
+            print(f"hashed pool {hcfg.num_slots} x {hcfg.chunk_dim} "
+                  f"@ {args.hash_bits}b = "
+                  f"{packed_bytes / 2 ** 20:.3f} MiB "
+                  f"({fp32 / packed_bytes:.0f}x vs fp32 table)")
         else:
-            packed_bytes = server.host_packed.nbytes()
             from repro.core.packed_store import packed_tiers
             tiers_at_pack = packed_tiers(server.host_packed)
         print(f"packed {packed_bytes / 2 ** 20:.2f} MiB "
@@ -274,20 +331,15 @@ def _main() -> None:
               f"retier every {args.retier_every} requests")
         num_dense = arch.smoke_num_dense if arch.has_dense else 0
         if args.serve_batch > 0:
-            rec.update(stream_bytes_per_request(
-                tiers_at_pack, spec, args.requests, drift=args.drift))
-            if server.hier is not None:
-                result = serve_forward_hier(
-                    server, model, spec, params,
-                    serve_batch=args.serve_batch,
-                    requests=args.requests, drift=args.drift,
-                    num_dense=num_dense)
-            else:
-                result = serve_forward_microbatched(
-                    server, model, spec, params,
-                    serve_batch=args.serve_batch,
-                    requests=args.requests, drift=args.drift,
-                    num_dense=num_dense, fuse_matmul=args.fuse_matmul)
+            if tiers_at_pack is not None:
+                rec.update(stream_bytes_per_request(
+                    tiers_at_pack, spec, args.requests,
+                    drift=args.drift))
+            result = serve_forward(
+                server, model, spec, params,
+                serve_batch=args.serve_batch,
+                requests=args.requests, drift=args.drift,
+                num_dense=num_dense, fuse_matmul=args.fuse_matmul)
             shape_note = (f"{args.requests} requests micro-batched "
                           f"x{args.serve_batch}")
         else:
@@ -320,10 +372,15 @@ def _main() -> None:
                     "drift": args.drift,
                     "serve_batch": args.serve_batch,
                     "fuse_matmul": args.fuse_matmul,
+                    "store_backend": args.store_backend,
                     "packed_mib": round(packed_bytes / 2 ** 20, 3),
                     "packed_fp32_ratio": round(packed_bytes / fp32, 4)})
         if server.hier is not None:
             rec["hbm_budget_mb"] = args.hbm_budget_mb
+        if args.store_backend == "hashed":
+            rec.update({"pool_slots": int(hcfg.num_slots),
+                        "hash_bits": args.hash_bits,
+                        "hash_ratio": round(fp32 / packed_bytes, 2)})
         if args.verify_hier:
             from repro.core import packed_store as ps
             from repro.store import hier_lookup

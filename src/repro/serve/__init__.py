@@ -12,8 +12,9 @@ Layers live, traffic-adaptive state over the offline artifacts of
   loop     request-loop timing harness + drifting-zipf workload synth
            + micro-batching (``MicroBatcher``: fixed-shape pad+mask
            fusion of single-user requests, one forward per N requests)
-           + the hierarchical-store forward (``serve_forward_hier``:
-           host staging of warm/cold misses + fused hot gather)
+           + ``serve_forward``, the ONE backend-dispatched driver
+           (staging backends run the host-staged pipeline, resident
+           backends the plain cache-first forward)
   shadow   copy-on-write shadow re-tier: ``ShadowRepack`` /
            ``ShadowMigrate`` build the next store generation in bounded
            chunks off the request path; ``OnlineServer`` swaps it in
@@ -59,6 +60,7 @@ from repro.serve.loop import (  # noqa: F401
     drifting_zipf_batch,
     run_loop,
     run_microbatched_loop,
+    serve_forward,
     serve_forward_hier,
     serve_forward_loop,
     serve_forward_microbatched,

@@ -491,14 +491,51 @@ def serve_forward_microbatched(server: OnlineServer, model, spec,
         requests, serve_batch)
 
 
-def serve_forward_hier(server: OnlineServer, model, spec, params, *,
-                       serve_batch: int, requests: int,
-                       drift: float = 4.0, num_dense: int = 0,
-                       a: float = 1.2, seed: int = 0) -> LoopResult:
-    """Micro-batched online driver over the hierarchical store.
+def serve_forward(server: OnlineServer, model, spec, params, *,
+                  serve_batch: int, requests: int, drift: float = 4.0,
+                  num_dense: int = 0, a: float = 1.2, seed: int = 0,
+                  fuse_matmul: bool = False) -> LoopResult:
+    """ONE micro-batched entry point for every store backend.
+
+    Dispatches on the backend's ``needs_staging`` capability (protocol,
+    not ``isinstance``): backends whose misses stage through a host
+    buffer (hier) run the staged pipeline, fully device-addressable
+    backends (packed, hashed) run the plain cache-first forward.  This
+    is what ``launch.serve --online --store-backend B`` drives.
+    """
+    if server.backend.needs_staging:
+        if fuse_matmul:
+            raise ValueError("fuse_matmul needs a fully resident "
+                             "packed store (backend stages misses)")
+        return _serve_forward_staged(
+            server, model, spec, params, serve_batch=serve_batch,
+            requests=requests, drift=drift, num_dense=num_dense, a=a,
+            seed=seed)
+    return serve_forward_microbatched(
+        server, model, spec, params, serve_batch=serve_batch,
+        requests=requests, drift=drift, num_dense=num_dense, a=a,
+        seed=seed, fuse_matmul=fuse_matmul)
+
+
+def serve_forward_hier(server: OnlineServer, model, spec, params,
+                       **kw) -> LoopResult:
+    """Deprecated shim: ``serve_forward`` dispatches on the backend's
+    staging capability — staged serving no longer needs a hier-specific
+    entry point."""
+    if not server.backend.needs_staging:
+        raise ValueError("serve_forward_hier needs an OnlineServer "
+                         "built with hier=HierConfig(...)")
+    return serve_forward(server, model, spec, params, **kw)
+
+
+def _serve_forward_staged(server: OnlineServer, model, spec, params, *,
+                          serve_batch: int, requests: int,
+                          drift: float = 4.0, num_dense: int = 0,
+                          a: float = 1.2, seed: int = 0) -> LoopResult:
+    """Micro-batched online driver over a staging store backend.
 
     Same stream and cadence contract as ``serve_forward_microbatched``,
-    with the forward split into the hier pipeline per batch:
+    with the forward split into the staged pipeline per batch:
 
       1. host: resolve residency per index, dequantize warm/cold
          misses into ONE fixed-shape staging buffer and ship it with a
@@ -519,10 +556,7 @@ def serve_forward_hier(server: OnlineServer, model, spec, params, *,
     """
     from repro.store.hier import combine_rows
 
-    hier = server.hier
-    if hier is None:
-        raise ValueError("serve_forward_hier needs an OnlineServer "
-                         "built with hier=HierConfig(...)")
+    backend = server.backend
     lfn = server.lookup_fn()
     offsets = np.asarray(spec.offsets(), np.int64)
 
@@ -549,8 +583,10 @@ def serve_forward_hier(server: OnlineServer, model, spec, params, *,
         counter["b"] += 1
         with obs.span("serve.stage"):
             g = mb.indices.astype(np.int64) + offsets[None, :]
-            sb = hier.stage(g, skip=server.cache_mask[g],
-                            valid=mb.valid[:, None])
+            skip = (server.cache_mask[g]
+                    if server.cache_mask is not None else None)
+            sb = backend.stage_host(g, skip=skip,
+                                    valid=mb.valid[:, None])
         with obs.span("serve.synth"):
             b = {"indices": jnp.asarray(mb.indices),
                  "labels": jnp.zeros((mb.indices.shape[0],))}
@@ -562,8 +598,8 @@ def serve_forward_hier(server: OnlineServer, model, spec, params, *,
             valid = jnp.asarray(mb.valid)
             last["a"] = (b, valid, sb.hot_local, sb.stage_slot,
                          sb.staging)
-            out, hits, gidx = fwd(hier.hot_dev, server.cache, params, b,
-                                  valid, sb.hot_local, sb.stage_slot,
+            out, hits, gidx = fwd(server.packed, server.cache, params,
+                                  b, valid, sb.hot_local, sb.stage_slot,
                                   sb.staging)
             jax.block_until_ready(out)
         with obs.span("serve.combine"):
@@ -577,6 +613,9 @@ def serve_forward_hier(server: OnlineServer, model, spec, params, *,
         lambda r: drifting_zipf_batch(cards, 1, r, requests, a=a,
                                       drift=drift, seed=seed)[0],
         requests, serve_batch)
+    hier = backend.hier
+    if hier is None:
+        return result
     lookups = max(server.stats.lookups, 1)
     hstats = hier.stats.as_dict()
     hstats["hier_miss_rate"] = round(

@@ -1,11 +1,12 @@
 """Online serving state: live priority EMA + hot cache + delta re-tier.
 
-``OnlineServer`` owns everything the offline path froze at pack time:
+``OnlineServer`` owns the live, traffic-adaptive state around ONE
+``store.api.EmbeddingStore`` backend (packed / hier / hashed — built
+via ``store.build`` or passed as ``backend=``):
 
-  * the QATStore (fp32 table + Eq. 7 priority vector) — the table is
-    frozen in serving, the priority keeps moving with traffic,
-  * the authoritative *host* PackedStore and its placed copy (identical
-    single-device, ``shard_packed`` row-sharded under a mesh),
+  * the backend: payload arrays, placement, lookup kernels, priority
+    vector and re-tier machinery, all behind the protocol — the
+    request path below contains NO backend branches,
   * the hot-row cache (``serve.cache``), rebuilt after every re-tier,
   * ``ServeStats`` counters (requests / lookups / hits / retiers /
     rows_moved).
@@ -18,9 +19,9 @@ what ``repro.launch.serve --online`` does — a re-tier swaps in payload
 arrays with *new shapes*, so jit recompiles exactly at re-tier
 boundaries and nowhere else.
 
-Re-tiering itself is ``packed_store.repack_delta``: only tier-crossing
-rows migrate, everything else keeps its payload bytes, and the result is
-bit-identical to a fresh full ``pack`` of the same store.
+Re-tiering dispatches through the backend: ``repack_delta`` for the
+flat store, ``HierStore.migrate`` across levels, a cache-only refresh
+for the hashed pool (shared slots cannot re-tier).
 
 With ``OnlineConfig.retier_async`` the re-tier instead runs as a
 **shadow build** (``serve.shadow``): the boundary request only opens the
@@ -30,6 +31,13 @@ forward pre-compiled on a warm-up thread) before one atomic pointer
 swap — the state machine is build -> chunk -> [verify ->] swap, with
 ``discard_shadow`` as the crash-before-swap exit.  The swapped result is
 bit-identical to a synchronous re-tier at the snapshot fold state.
+
+Back-compat: the ``hier=HierConfig(...)`` keyword and the
+``store``/``cfg`` positional pair are thin shims over
+``store.build("hier"|"packed", ...)``; ``server.store`` /
+``server.host_packed`` / ``server.packed`` / ``server.hier`` proxy the
+backend's state so existing callers (and the shadow commit protocol)
+keep working unchanged.
 """
 
 from __future__ import annotations
@@ -40,20 +48,10 @@ import time
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.core.packed_store import (
-    PackedStore,
-    pack,
-    packed_tiers,
-    repack_delta,
-)
-from repro.core.priority import PriorityConfig, serve_update
-from repro.core.qat_store import FQuantConfig, QATStore, current_tiers
-from repro.core.tiers import tier_crossings
-from repro.serve.cache import HotRowCache, build_cache, cached_lookup
+from repro.core.priority import PriorityConfig
 
 Array = jax.Array
 
@@ -98,33 +96,34 @@ class ServeStats:
 
 
 class OnlineServer:
-    """Mutable serving-side owner of packed store, cache and priorities."""
+    """Mutable serving-side owner of an EmbeddingStore backend, the hot
+    cache and the serve-side priority fold."""
 
-    def __init__(self, store: QATStore, cfg: FQuantConfig,
+    def __init__(self, store=None, cfg=None,
                  online: OnlineConfig = OnlineConfig(), *, mesh=None,
-                 axis: str = "model", hier=None):
-        """``hier`` (a ``repro.store.HierConfig``) switches the server
-        to the hierarchical store: the device holds only the
-        priority-hot rows under the HBM budget, spill lives in host RAM
-        / mmap'd cold shards, and ``retier`` migrates rows between
-        levels (``HierStore.migrate``) instead of delta-repacking a
-        fully resident store.  ``self.packed`` is then the *hot* device
-        store; drive the forward with ``serve.loop.serve_forward_hier``.
-        """
-        self.store = store
-        self.cfg = cfg
+                 axis: str = "model", hier=None, backend=None):
+        """``backend`` (a ``store.api.EmbeddingStore``) is the new
+        construction path: ``OnlineServer(backend=store.build("hashed",
+        hs, hcfg), online=...)``.  The legacy forms build one: the
+        ``(store, cfg)`` QATStore pair builds ``"packed"``, and
+        ``hier=HierConfig(...)`` builds ``"hier"`` (deprecated shims —
+        both dispatch through ``store.build``)."""
+        if backend is None:
+            from repro.store import build
+            if store is None or cfg is None:
+                raise ValueError("OnlineServer needs either backend= "
+                                 "or the (store, cfg) QATStore pair")
+            if hier is not None:
+                backend = build("hier", store, cfg, hier, mesh=mesh,
+                                axis=axis)
+            else:
+                backend = build("packed", store, cfg, mesh=mesh,
+                                axis=axis)
+        self.backend = backend
         self.online = online
-        self.mesh = mesh
-        self.axis = axis
+        self.mesh = backend.mesh
+        self.axis = backend.axis
         self.stats = ServeStats()
-        self.hier = None
-        if hier is not None:
-            from repro.store import build_hier
-            self.hier = build_hier(store, cfg, hier, mesh=mesh,
-                                   axis=axis)
-            self.host_packed = None
-        else:
-            self.host_packed: PackedStore = pack(store, cfg)
         # shadow re-tier state (OnlineConfig.retier_async)
         self.shadow = None            # active ShadowRepack/ShadowMigrate
         self._retier_pending = False  # boundary crossed while building
@@ -138,135 +137,82 @@ class OnlineServer:
         self._shadow_t0 = 0.0         # perf_counter at begin_retier —
                                       # serve.shadow.build_us measures
                                       # the whole plan->swap lifecycle
-        self._place()
         self._rebuild_cache()
         if online.retier_async:
-            self._prewarm_quantize()
+            self.backend.prewarm_retier(online.shadow_rows_per_step)
 
-    def _prewarm_quantize(self) -> None:
-        """Compile the fixed-shape chunk-quantize pipeline off the
-        serving path.  Every shadow chunk quantizes at exactly the
-        ``shadow_rows_per_step`` pad shape (``quantize_rows`` pad_to
-        contract), so this one warm call means no chunk ever pays an
-        XLA compile on a serving request."""
-        from repro.core.packed_store import quantize_rows
-        dim = (self.hier.dim if self.hier is not None
-               else self.host_packed.payload32.shape[-1])
-        quantize_rows(np.zeros((3, dim), np.float32), np.arange(3),
-                      np.arange(3), self.cfg,
-                      pad_to=self.online.shadow_rows_per_step)
+    # -- backend state proxies (back-compat + shadow commit protocol) --
 
-    # -- placement -----------------------------------------------------
+    @property
+    def store(self):
+        """The backend's QATStore (None for hashed)."""
+        return self.backend.store
+
+    @store.setter
+    def store(self, value) -> None:
+        self.backend.store = value
+
+    @property
+    def cfg(self):
+        """The backend's FQuantConfig (None for hashed)."""
+        return self.backend.cfg
+
+    @property
+    def host_packed(self):
+        return self.backend.host_packed
+
+    @host_packed.setter
+    def host_packed(self, value) -> None:
+        self.backend.host_packed = value
+
+    @property
+    def packed(self):
+        """The placed device store the jitted forward closes over."""
+        return self.backend.device_store
+
+    @packed.setter
+    def packed(self, value) -> None:
+        self.backend.device_store = value
+
+    @property
+    def hier(self):
+        return self.backend.hier
 
     def _place(self) -> None:
-        if self.hier is not None:
-            self.packed = self.hier.hot_dev
-        elif self.mesh is not None:
-            from repro.dist.packed import shard_packed
-            self.packed = shard_packed(self.host_packed, self.mesh,
-                                       self.axis)
-        else:
-            self.packed = self.host_packed
+        self.backend.place()
 
     def lookup_fn(self):
-        """Miss-path gather matching the placement of ``self.packed``:
-        the fused tiled dequant-bag kernel where the backend compiles
-        it (TPU), its bit-identical jnp oracle elsewhere.  In hier mode
-        this is the *hot-store* gather (``self.packed`` is the hot
-        device store); staged warm/cold rows merge in
-        ``store.hier.combine_rows``."""
-        if self.mesh is None:
-            from repro.core.packed_store import lookup_fused
-            return lookup_fused
-        from repro.dist.packed import sharded_lookup
-        mesh, axis = self.mesh, self.axis
-        return lambda pk, idx: sharded_lookup(pk, idx, mesh=mesh,
-                                              axis=axis)
+        """Miss-path gather matching the placement of ``self.packed``
+        (protocol dispatch: fused dequant-bag / sharded / hashed)."""
+        return self.backend.lookup_fn()
 
     def bag_matmul_fn(self):
         """Fused bag->first-matmul matching the placement of
-        ``self.packed``: ``fn(pk, idx, w)`` computes
-        ``lookup(pk, idx).reshape(B, F*D) @ w`` without materialising
-        the embedding activations (``kernels.bag_matmul``); the sharded
-        variant psums the (B, H) post-matmul tile.  Serving drivers use
-        this for models exposing ``extras["fused_head"]`` under
-        ``fuse_matmul`` (not available in hier mode — staged warm/cold
-        rows merge outside the packed store the kernel reads)."""
-        if self.hier is not None:
-            raise ValueError("fused bag->matmul serving requires a "
-                             "fully resident packed store (no hier)")
-        if self.mesh is None:
-            from repro.core.packed_store import bag_matmul
-            return bag_matmul
-        from repro.dist.packed import sharded_bag_matmul
-        mesh, axis = self.mesh, self.axis
-        return lambda pk, idx, w: sharded_bag_matmul(pk, idx, w,
-                                                     mesh=mesh, axis=axis)
+        ``self.packed`` (packed backends only — hier/hashed raise)."""
+        return self.backend.bag_matmul_fn()
 
     def _rebuild_cache(self) -> None:
-        if self.hier is not None:
-            # rows gathered host-side across levels (bit-identical to
-            # the device path) — warm/cold pressure rows enter here as
-            # soon as their EMA ranks them, one re-tier cadence before
-            # migration makes them device-resident
-            from repro.serve.cache import cache_from_rows
-            k = int(min(self.online.cache_rows, self.hier.vocab))
-            if k <= 0:
-                from repro.serve.cache import empty_cache
-                self.cache = empty_cache(self.hier.vocab, self.hier.dim)
-            else:
-                _, ids = jax.lax.top_k(self.store.priority, k)
-                ids = np.asarray(ids)
-                self.cache = cache_from_rows(
-                    jnp.asarray(ids, jnp.int32),
-                    jnp.asarray(self.hier.gather_fp32_host(ids)),
-                    self.hier.vocab)
-        else:
-            # built from the host copy: K rows dequantized on one device
-            self.cache: HotRowCache = build_cache(
-                self.host_packed, self.store.priority,
-                self.online.cache_rows)
-        # host-side membership mask: lets the hier staging path skip
-        # rows the fp32 cache will serve anyway (no double traffic);
-        # only the hier paths read it, so flat serving skips the
-        # O(vocab) rebuild
-        if self.hier is not None:
-            self.cache_mask = np.zeros(self.hier.vocab, bool)
-            ids = np.asarray(self.cache.ids)
-            if ids.size:
-                self.cache_mask[ids] = True
-        else:
-            self.cache_mask = None
+        self.cache, self.cache_mask = self.backend.build_cache(
+            self.online.cache_rows)
         if obs.enabled():
             self._export_gauges()
 
     def _export_gauges(self) -> None:
         """Occupancy gauges for the current placement (docs/
-        observability.md): precision-tier row counts always, per-level
-        row counts and bytes in hier mode.  Refreshed after every
-        (re)placement — build, retier, migrate."""
+        observability.md) — the backend names its own gauge set.
+        Refreshed after every (re)placement — build, retier, migrate."""
         obs.gauge("serve.cache.rows", float(self.cache.capacity))
-        if self.hier is not None:
-            tiers = self.hier.tiers
-            for lev, n in self.hier.counts().items():
-                obs.gauge(f"store.{lev}", float(n))     # hot/warm/cold
-            for lev, nb in self.hier.nbytes().items():
-                obs.gauge(f"store.{lev}_bytes", float(nb))
-        else:
-            tiers = packed_tiers(self.host_packed)
-            obs.gauge("store.packed_bytes",
-                      float(self.host_packed.nbytes()))
-        counts = np.bincount(np.asarray(tiers).reshape(-1), minlength=3)
-        for name, n in zip(("int8", "half", "fp32"), counts):
-            obs.gauge(f"store.tier_rows_{name}", float(n))
+        for name, value in self.backend.occupancy().items():
+            obs.gauge(name, value)
 
     # -- request path --------------------------------------------------
 
     def lookup(self, indices: Array, *, valid: Array | None = None,
                count: int | None = None) -> Array:
         """Eager cache-first gather + traffic fold.  int (...,) -> fp32
-        (..., D), bit-identical to ``packed_store.lookup`` on a fresh
-        full pack of the current store.
+        (..., D) through the backend's cached request path (for exact
+        backends, bit-identical to a fresh full pack of the current
+        store).
 
         ``valid`` (bool, broadcastable to ``indices``) masks padded
         micro-batch slots out of the hit/lookup accounting AND the
@@ -277,27 +223,8 @@ class OnlineServer:
         single-request contract).
         """
         count = 1 if count is None else count
-        if self.hier is not None:
-            # the eager form of serve.loop.serve_forward_hier's inner
-            # pipeline: cache hits are skipped from staging (they are
-            # neither staged nor counted as warm/cold hits — every
-            # lookup resolves from exactly one place)
-            from repro.serve.cache import cache_select
-            from repro.store.hier import combine_rows
-            g = np.asarray(indices, np.int64)
-            sb = self.hier.stage(g, skip=self.cache_mask[g],
-                                 valid=valid)
-            rows = combine_rows(self.hier.hot_dev, sb.hot_local,
-                                sb.stage_slot, sb.staging,
-                                self.lookup_fn())
-            rows, hits = cache_select(
-                self.cache, jnp.asarray(indices), rows,
-                valid=None if valid is None else jnp.asarray(valid))
-            self.observe(indices, int(hits), valid=valid, count=count)
-            return rows
-        rows, hits = cached_lookup(
-            self.packed, self.cache, indices, self.lookup_fn(),
-            valid=None if valid is None else jnp.asarray(valid))
+        rows, hits = self.backend.cached_lookup(
+            self.cache, self.cache_mask, indices, valid=valid)
         self.observe(indices, int(hits), valid=valid, count=count)
         return rows
 
@@ -324,6 +251,7 @@ class OnlineServer:
         ``serve_batch > retier_every`` the adaptation rate is once per
         micro-batch, not once per boundary.
         """
+        import jax.numpy as jnp
         before = self.stats.requests
         self.stats.requests += count
         if valid is None:
@@ -345,10 +273,8 @@ class OnlineServer:
             if hits is not None:
                 obs.inc("serve.cache.hits", int(hits))
             obs.gauge("serve.cache.hit_rate", self.stats.hit_rate)
-        pcfg = self.online.priority or self.cfg.priority
-        self.store = self.store._replace(
-            priority=serve_update(self.store.priority, indices, pcfg,
-                                  valid=vmask))
+        pcfg = self.online.priority or self._default_priority_cfg()
+        self.backend.fold_priority(indices, pcfg, valid=vmask)
         if self.online.retier_every:
             re = self.online.retier_every
             if self.stats.requests // re > before // re:
@@ -359,40 +285,39 @@ class OnlineServer:
             return self._shadow_tick(count)
         return False
 
+    def _default_priority_cfg(self) -> PriorityConfig:
+        cfg = self.backend.cfg
+        if cfg is not None and cfg.priority is not None:
+            return cfg.priority
+        return PriorityConfig()
+
     # -- shadow re-tier (async) ----------------------------------------
 
     def begin_retier(self) -> bool:
         """Open a shadow build against the current fold state.
 
-        The ``QATStore`` is an immutable NamedTuple — priority folds
-        ``_replace`` into a NEW store — so capturing ``self.store``
-        here IS the snapshot: the shadow's re-tier decision is frozen
-        while live folds keep drifting ``self.store`` forward (the
-        next build picks them up, same as a re-tier that ran at the
-        boundary).  Returns True when a shadow was opened.
+        The backend snapshots its own fold state (the ``QATStore`` is
+        an immutable NamedTuple — priority folds ``_replace`` into a
+        NEW store, so capturing the reference IS the snapshot): the
+        shadow's re-tier decision is frozen while live folds keep
+        drifting the backend forward (the next build picks them up,
+        same as a re-tier that ran at the boundary).  Returns True when
+        a shadow was opened; a backend with nothing to move matches the
+        synchronous no-move path (count the re-tier, refresh the cache,
+        no swap).
         """
         if self.shadow is not None:     # one generation at a time
             self._retier_pending = True
             return False
-        from repro.serve.shadow import ShadowMigrate, ShadowRepack
-        snapshot = self.store
         rows = self.online.shadow_rows_per_step
         self._shadow_t0 = time.perf_counter()
         with obs.span("serve.shadow.plan"):
-            if self.hier is not None:
-                self.shadow = ShadowMigrate(self.hier, snapshot,
-                                            self.cfg, chunk_rows=rows)
-            else:
-                sh = ShadowRepack(self.host_packed, snapshot, self.cfg,
-                                  chunk_rows=rows)
-                if sh.moved == 0:
-                    # nothing crosses: match the synchronous no-move
-                    # path (count the re-tier, refresh the cache, no
-                    # swap)
-                    self.stats.retiers += 1
-                    self._rebuild_cache()
-                    return False
-                self.shadow = sh
+            sh = self.backend.begin_retier(rows)
+        if sh is None:
+            self.stats.retiers += 1
+            self._rebuild_cache()
+            return False
+        self.shadow = sh
         self.stats.shadow_builds += 1
         obs.inc("serve.shadow.builds", 1)
         obs.gauge("serve.shadow.in_flight", 1.0)
@@ -540,13 +465,14 @@ class OnlineServer:
     # -- incremental re-tier -------------------------------------------
 
     def retier(self) -> bool:
-        """Delta-repack tier-crossing rows + rebuild the hot cache.
+        """Backend re-tier + hot cache rebuild.
 
-        Equivalent to (but much cheaper than) ``pack(self.store,
-        self.cfg)`` followed by re-placement.  Returns True if any row
-        migrated.  In hier mode this is the *migration* step instead:
-        ``HierStore.migrate`` re-tiers crossed rows AND moves rows
-        between HBM / host RAM / disk by their live priority rank.
+        Flat store: delta-repack tier-crossing rows — equivalent to
+        (but much cheaper than) ``pack(self.store, self.cfg)`` followed
+        by re-placement.  Hier: ``HierStore.migrate`` re-tiers crossed
+        rows AND moves rows between HBM / host RAM / disk by their live
+        priority rank.  Hashed: cache refresh only (pool slots are
+        shared, nothing migrates).  Returns True if anything changed.
 
         Wall time accumulates into ``stats.retier_seconds`` (always —
         the serve loops attribute tail latency from it) and into the
@@ -560,29 +486,12 @@ class OnlineServer:
         if self.shadow is not None or self._retier_pending:
             self.discard_shadow()
         with obs.timeblock("serve.retier") as tb:
-            moved = self._retier_locked()
-        self.stats.retier_seconds += tb.seconds
-        return moved
-
-    def _retier_locked(self) -> bool:
-        if self.hier is not None:
-            moved = self.hier.migrate(self.store, self.cfg)
+            res = self.backend.retier()
             self.stats.retiers += 1
-            self.stats.rows_moved += moved["crossed"]
-            obs.inc("serve.retier.rows_moved", moved["crossed"])
-            self._place()
+            if res["rows_moved"]:
+                self.stats.rows_moved += int(res["rows_moved"])
+                obs.inc("serve.retier.rows_moved",
+                        int(res["rows_moved"]))
             self._rebuild_cache()
-            return bool(moved["promoted"] or moved["demoted"]
-                        or moved["crossed"])
-        old = packed_tiers(self.host_packed)
-        new = np.asarray(current_tiers(self.store, self.cfg))
-        changed, _ = tier_crossings(old, new)
-        self.stats.retiers += 1
-        if changed.size:
-            self.host_packed = repack_delta(self.host_packed, self.store,
-                                            self.cfg, changed)
-            self.stats.rows_moved += int(changed.size)
-            obs.inc("serve.retier.rows_moved", int(changed.size))
-            self._place()
-        self._rebuild_cache()
-        return bool(changed.size)
+        self.stats.retier_seconds += tb.seconds
+        return bool(res["changed"])

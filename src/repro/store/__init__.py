@@ -1,19 +1,36 @@
-"""repro.store — hierarchical embedding store (HBM / host RAM / disk).
+"""repro.store — embedding storage backends behind ONE protocol.
 
-Places the tier-partitioned ``PackedStore`` rows across three levels
-under byte budgets, behind one lookup API that is bit-identical to a
-fully device-resident store:
+``api`` defines the ``EmbeddingStore`` protocol + registry every
+backend answers (``build("packed"|"hier"|"hashed", ...)``), so the
+serving stack dispatches with no backend branches:
 
+  api       ``EmbeddingStore`` protocol, ``PackedBackend`` /
+            ``HierBackend`` / ``HashedBackend``, ``register_backend``
+            / ``build`` / ``from_manifest``
   budget    priority-driven placement planner (per-shard HBM budgets)
   manifest  mmap'd cold shards + ``hier_store/v1`` manifest + the
             host-side dequant mirror (``np_lookup``)
-  hier      ``HierStore``: build / stage / combine / migrate
+  hier      ``HierStore``: build / stage / combine / migrate —
+            three-level HBM / host RAM / disk residency
+  hashed    ``HashedStore``: ROBE-style compositional rows
+            materialized from a shared chunk pool (memory bound by
+            pool size, independent of vocabulary)
 
-Entry points: ``repro.launch.serve --online --hbm-budget-mb N
---store-dir D`` (driver) and ``benchmarks/hier.py`` (budget-fraction
-sweep).  See docs/storage.md.
+Entry points: ``repro.launch.serve --online [--store-backend B]``
+(driver), ``benchmarks/hier.py`` and ``benchmarks/hashed.py``
+(sweeps).  See docs/storage.md.
 """
 
+from repro.store.api import (  # noqa: F401
+    EmbeddingStore,
+    HashedBackend,
+    HierBackend,
+    PackedBackend,
+    backend_names,
+    build,
+    from_manifest,
+    register_backend,
+)
 from repro.store.budget import (  # noqa: F401
     COLD,
     HOT,
@@ -21,6 +38,17 @@ from repro.store.budget import (  # noqa: F401
     BudgetPlan,
     hot_shard_bytes,
     plan_placement,
+)
+from repro.store.hashed import (  # noqa: F401
+    HashedConfig,
+    HashedStore,
+    fit_pool_from_table,
+    hashed_bag_lookup,
+    hashed_lookup,
+    hashed_state_tree,
+    init_hashed,
+    plan_pool_slots,
+    quantize_pool,
 )
 from repro.store.hier import (  # noqa: F401
     HierConfig,

@@ -1,0 +1,246 @@
+"""`HashedStore`: ROBE-style compositional embedding storage.
+
+SHARK's rowwise quantization (Eq. 5-6) bounds bytes per *surviving*
+row, but memory still scales linearly with cardinality.  The hashed
+store bounds it by a **pool size chosen up front**: no row is ever
+stored — row ``r`` is materialized on the fly from a shared ``(S, Z)``
+parameter chunk pool,
+
+    row[r, c*Z:(c+1)*Z] = sum_j  sign_j(r, c) * pool[h_j(r, c)]
+
+with ``num_hashes`` universal-hash draws per chunk (arxiv 2207.10731).
+Compression is ``V*D / (S*Z)`` and is independent of vocabulary growth.
+
+Composition with the rest of SHARK:
+
+  * **Taylor field-prune** applies unchanged — fields are pruned, not
+    rows, and a pruned field simply stops looking up.
+  * **Eq. 7 priority** stays per *row* (V,) — it cannot re-tier pool
+    slots (they are shared), but it drives the hot-row fp32 cache in
+    front of the hash path and keeps the serve-time fold identical to
+    the packed backends.
+  * **Rowwise quantization composes** by quantizing the chunk pool
+    itself: ``quantize_pool`` snaps the pool to int8 with per-slot
+    scales (the SHARK-rowwise x hashing *combined* mode); the fused
+    kernel dequants per chunk exactly like ``dequant_bag``.
+
+Training runs the serving kernel through the ``custom_vjp`` twins in
+``kernels.hashed_gather.autodiff`` — the pool is the trained parameter
+and the backward scatter-adds into it.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rowwise_quant as rq
+from repro.kernels.hashed_gather.ops import hashed_gather, slot_plan
+from repro.kernels.hashed_gather.ref import hash_slots
+
+Array = jax.Array
+
+
+class HashedConfig(NamedTuple):
+    """Static shape/hash parameters (carried alongside the arrays, the
+    way ``FQuantConfig`` rides next to ``QATStore``)."""
+    vocab: int
+    dim: int
+    chunk_dim: int = 8       # Z: pool row width; must divide dim
+    num_slots: int = 2048    # S: pool rows
+    num_hashes: int = 2      # draws combined per chunk
+    pool_bits: int = 32      # 32 = fp32 pool; 8 = int8 + per-slot scale
+    seed: int = 0
+
+    @property
+    def num_chunks(self) -> int:
+        if self.dim % self.chunk_dim:
+            raise ValueError(f"chunk_dim {self.chunk_dim} must divide "
+                             f"dim {self.dim}")
+        return self.dim // self.chunk_dim
+
+    def pool_nbytes(self) -> int:
+        per_elem = 1 if self.pool_bits == 8 else 4
+        scale = self.num_slots * 4 if self.pool_bits == 8 else 0
+        return self.num_slots * self.chunk_dim * per_elem + scale
+
+    def compression_ratio(self) -> float:
+        """fp32 table bytes / pool bytes (>= 1 means compressed)."""
+        return (self.vocab * self.dim * 4) / max(self.pool_nbytes(), 1)
+
+
+def plan_pool_slots(vocab: int, dim: int, chunk_dim: int,
+                    target_ratio: float, pool_bits: int = 32) -> int:
+    """Pool rows S hitting a target fp32-bytes / pool-bytes ratio."""
+    per_slot = chunk_dim + 4 if pool_bits == 8 else chunk_dim * 4
+    s = int(round(vocab * dim * 4 / (max(target_ratio, 1e-9)
+                                     * per_slot)))
+    return max(s, 1)
+
+
+class HashedStore(NamedTuple):
+    """Array state (a pytree: every leaf is an array).
+
+    pool (S, Z) fp32 or int8; pool_scale (S,) fp32 per-slot dequant
+    scale (ones for fp32 pools, so ``pool * scale`` is exact);
+    priority (V,) the Eq. 7 EMA driving the hot-row cache.
+    """
+    pool: Array
+    pool_scale: Array
+    priority: Array
+
+    @property
+    def num_slots(self) -> int:
+        return self.pool.shape[0]
+
+    @property
+    def chunk_dim(self) -> int:
+        return self.pool.shape[1]
+
+    def nbytes(self) -> int:
+        """Serving bytes: the pool and its scales (the priority EMA is
+        bookkeeping, matching PackedStore.nbytes which excludes it)."""
+        scale = 0 if self.pool.dtype == jnp.float32 \
+            else int(np.asarray(self.pool_scale).nbytes)
+        return int(np.asarray(self.pool).nbytes) + scale
+
+
+def init_hashed(cfg: HashedConfig, seed: int | None = None,
+                priority: Array | None = None) -> HashedStore:
+    """Fresh fp32 pool ~ N(0, 0.05/sqrt(num_hashes)) — materialized
+    rows then match a 0.05-std dense init in variance."""
+    key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+    std = 0.05 / float(np.sqrt(cfg.num_hashes))
+    pool = std * jax.random.normal(
+        key, (cfg.num_slots, cfg.chunk_dim), jnp.float32)
+    if priority is None:
+        priority = jnp.zeros((cfg.vocab,), jnp.float32)
+    return HashedStore(pool=pool,
+                       pool_scale=jnp.ones((cfg.num_slots,),
+                                           jnp.float32),
+                       priority=jnp.asarray(priority, jnp.float32))
+
+
+def fit_pool_from_table(table: Array, cfg: HashedConfig,
+                        priority: Array | None = None,
+                        cg_iters: int = 12) -> HashedStore:
+    """Least-squares fit of the pool to an existing table.
+
+    Materialization is *linear* in the pool, so the best pool for a
+    fixed hash family solves the normal equations ``A^T A p = A^T x``
+    (A = materialize, A^T = the signed chunk scatter).  The solve runs
+    ``cg_iters`` conjugate-gradient steps from the scatter-mean seed
+    (the diagonal-Gram approximation, already exact when draws never
+    collide).  Used to seed serving smokes from a trained dense table
+    without re-training; residual error at high compression is the
+    hashing scheme's inherent loss, not the solver's.
+    """
+    v, d = table.shape
+    c, z = cfg.num_chunks, cfg.chunk_dim
+    x = table.astype(jnp.float32)
+    ids = jnp.arange(v, dtype=jnp.int32)
+    slots, signs = hash_slots(ids, num_chunks=c,
+                              num_hashes=cfg.num_hashes,
+                              num_slots=cfg.num_slots, seed=cfg.seed)
+    flat = slots.reshape(-1)
+
+    def fwd(p):          # A: pool -> materialized table
+        chunks = jnp.take(p, slots, axis=0)       # (V, C, NH, Z)
+        return (chunks * signs[..., None]).sum(-2).reshape(v, d)
+
+    def adj(r):          # A^T: table cotangent -> pool scatter
+        rc = r.reshape(v, c, 1, z)
+        contrib = (signs[..., None] * rc).reshape(-1, z)
+        return jax.ops.segment_sum(contrib, flat,
+                                   num_segments=cfg.num_slots)
+
+    counts = jax.ops.segment_sum(jnp.ones_like(flat, jnp.float32),
+                                 flat, num_segments=cfg.num_slots)
+    b = adj(x)
+    pool = b / jnp.maximum(counts, 1.0)[:, None]   # scatter-mean seed
+    if cg_iters > 0:
+        def gram(p):
+            return adj(fwd(p))
+        r = b - gram(pool)
+        p_dir = r
+        rs = jnp.vdot(r, r)
+        for _ in range(cg_iters):
+            gp = gram(p_dir)
+            alpha = rs / jnp.maximum(jnp.vdot(p_dir, gp), 1e-30)
+            pool = pool + alpha * p_dir
+            r = r - alpha * gp
+            rs_new = jnp.vdot(r, r)
+            p_dir = r + (rs_new / jnp.maximum(rs, 1e-30)) * p_dir
+            rs = rs_new
+    if priority is None:
+        priority = jnp.zeros((v,), jnp.float32)
+    return HashedStore(pool=pool,
+                       pool_scale=jnp.ones((cfg.num_slots,),
+                                           jnp.float32),
+                       priority=jnp.asarray(priority, jnp.float32))
+
+
+def quantize_pool(hs: HashedStore) -> HashedStore:
+    """SHARK-rowwise x hashing combined mode: snap the pool itself to
+    int8 with per-slot scales (Eq. 5-6 RTN applied to pool rows)."""
+    pool = hs.pool.astype(jnp.float32)
+    scale = rq.rowwise_scale(pool, 8, "narrow").astype(jnp.float32)
+    imin, imax = rq.int_range(8)
+    q = jnp.clip(jnp.round(pool / scale), imin, imax).astype(jnp.int8)
+    return hs._replace(pool=q, pool_scale=scale.reshape(-1))
+
+
+def pool_f32(hs: HashedStore) -> Array:
+    """Dequantized pool view (exact for fp32 pools: scale is ones)."""
+    return hs.pool.astype(jnp.float32) * hs.pool_scale[:, None]
+
+
+def hashed_bag_lookup(hs: HashedStore, cfg: HashedConfig,
+                      indices: Array, weights: Array | None = None,
+                      use_pallas: bool | None = None,
+                      interpret: bool | None = None) -> Array:
+    """Bag-sum lookup: indices (B, K) [+ weights (B, K)] -> (B, D)
+    fp32, materialized through the fused gather-and-combine kernel
+    (zero-weight slots skip their chunk DMAs)."""
+    slots, coeff = slot_plan(indices, weights,
+                             num_chunks=cfg.num_chunks,
+                             num_hashes=cfg.num_hashes,
+                             num_slots=cfg.num_slots, seed=cfg.seed)
+    return hashed_gather(hs.pool, hs.pool_scale, slots, coeff,
+                         num_chunks=cfg.num_chunks,
+                         use_pallas=use_pallas, interpret=interpret)
+
+
+def hashed_lookup(hs: HashedStore, cfg: HashedConfig, indices: Array,
+                  use_pallas: bool | None = None,
+                  interpret: bool | None = None) -> Array:
+    """Per-index materialization: int (...,) -> fp32 (..., D).  The
+    K = 1 bag specialisation (the serving gather)."""
+    idx = jnp.asarray(indices)
+    flat = idx.reshape(-1, 1)
+    out = hashed_bag_lookup(hs, cfg, flat, use_pallas=use_pallas,
+                            interpret=interpret)
+    return out.reshape(*idx.shape, cfg.dim)
+
+
+def gather_rows_host(hs: HashedStore, cfg: HashedConfig,
+                     ids) -> np.ndarray:
+    """Host-side fp32 materialization (cache rebuilds / oracles)."""
+    ids = np.asarray(ids, np.int64).reshape(-1)
+    out = hashed_lookup(hs, cfg, jnp.asarray(ids, jnp.int32),
+                        use_pallas=False)
+    return np.asarray(jax.device_get(out), np.float32)
+
+
+def hashed_state_tree(hs: HashedStore, cfg: HashedConfig) -> dict:
+    """Checkpointable manifest payload (``hashed_store/v1``)."""
+    return {
+        "kind": "hashed_store/v1",
+        "config": dict(cfg._asdict()),
+        "pool": hs.pool,
+        "pool_scale": hs.pool_scale,
+        "priority": hs.priority,
+    }

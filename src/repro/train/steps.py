@@ -195,6 +195,7 @@ def make_compressed_train_step(loss_from_emb: Callable,
                                use_pallas: bool | None = None,
                                with_accum: bool = True,
                                field_mask=None,
+                               hashed_cfg=None,
                                eps: float = 1e-10) -> Callable:
     """The end-to-end compression train step: serving kernels + Eq. 5-8
     fold + in-training Taylor/access accumulation, in ONE backward.
@@ -222,15 +223,46 @@ def make_compressed_train_step(loss_from_emb: Callable,
     State: ``TrainState`` with opt = (dense_opt_state, accum (V,)) and
     ``accum`` = ``train.accum.TaylorAccum`` — both checkpoint through
     ``CheckpointManager`` as ordinary state leaves.
+
+    ``hashed_cfg`` (a ``store.hashed.HashedConfig``) switches the table
+    to the ROBE-style compositional form: ``params[table_path]`` then
+    holds the (S, Z) chunk POOL, the gather/scatter pair is the
+    ``kernels.hashed_gather`` custom_vjp (rows materialize on the fly;
+    the backward scatter-adds into the pool), and the Eq. 5-6 snap is
+    skipped — pool slots are shared across rows, so there is no per-row
+    payload to tier; Eq. 7 priority still folds per VIRTUAL row and
+    drives the serving-side hot cache.  Row-wise adagrad runs per pool
+    slot ((S,) accumulator).
     """
     from repro.kernels.dequant_bag.autodiff import lookup_train
     from repro.optim import optimizers as opt_lib
     from repro.train import accum as accum_lib
+    from repro.core import priority as priority_lib
     dense_optimizer = dense_optimizer or opt_lib.adam(lr)
     pcfg = (fq_cfg.priority if fq_cfg is not None
             else qat_store.FQuantConfig().priority)
 
-    if mesh is not None:
+    if hashed_cfg is not None:
+        if mesh is not None:
+            from repro.dist.hashed import sharded_hashed_lookup_train
+
+            def gather(tbl, gidx):
+                return sharded_hashed_lookup_train(
+                    tbl, gidx, num_chunks=hashed_cfg.num_chunks,
+                    num_hashes=hashed_cfg.num_hashes,
+                    num_slots=hashed_cfg.num_slots,
+                    seed=hashed_cfg.seed, mesh=mesh, axis=axis,
+                    use_pallas=use_pallas)
+        else:
+            from repro.kernels.hashed_gather.autodiff import \
+                hashed_lookup_train
+
+            def gather(tbl, gidx):
+                return hashed_lookup_train(
+                    tbl, gidx, num_chunks=hashed_cfg.num_chunks,
+                    num_hashes=hashed_cfg.num_hashes,
+                    seed=hashed_cfg.seed, use_pallas=use_pallas)
+    elif mesh is not None:
         from repro.dist.packed import sharded_lookup_train
 
         def gather(tbl, gidx):
@@ -242,10 +274,17 @@ def make_compressed_train_step(loss_from_emb: Callable,
 
     def init_compressed_state(params) -> TrainState:
         dense = {k: v for k, v in params.items() if k != table_path}
-        vocab, dim = params[table_path].shape
+        if hashed_cfg is not None:
+            vocab, dim = hashed_cfg.vocab, hashed_cfg.dim
+        else:
+            vocab, dim = params[table_path].shape
+        # adagrad accumulator: one cell per trained row (pool slots for
+        # the hashed form, vocab rows otherwise)
         opt = (dense_optimizer.init(dense),
-               jnp.full((vocab,), 0.1, jnp.float32))
-        pri = jnp.zeros((vocab,), jnp.float32) if fq_cfg else None
+               jnp.full((params[table_path].shape[0],), 0.1,
+                        jnp.float32))
+        pri = (jnp.zeros((vocab,), jnp.float32)
+               if (fq_cfg or hashed_cfg is not None) else None)
         acc = (accum_lib.init_accum(vocab, num_fields, dim)
                if with_accum else None)
         return TrainState(params=params, opt=opt,
@@ -287,7 +326,12 @@ def make_compressed_train_step(loss_from_emb: Callable,
 
         # ---- F-Quant fold: Eq. 7 priority + Eq. 5-6 sparse snap -----
         priority = state.priority
-        if fq_cfg is not None:
+        if hashed_cfg is not None:
+            # shared pool slots cannot snap per row; Eq. 7 still folds
+            # per VIRTUAL row (serving cache + field-prune ranking)
+            priority = priority_lib.priority_update_from_batch(
+                priority, gidx, labels_fn(batch), pcfg)
+        elif fq_cfg is not None:
             store = qat_store.QATStore(table=table, priority=priority)
             store = qat_store.post_step_sparse(
                 store, gidx, labels_fn(batch), fq_cfg,

@@ -574,12 +574,107 @@ def _validate_fleet(rec: dict) -> list[str]:
     return errors
 
 
+HASH_TOP = {
+    "schema": str,
+    "benchmark": str,
+    "vocab": numbers.Integral,
+    "dim": numbers.Integral,
+    "chunk_dim": numbers.Integral,
+    "num_hashes": numbers.Integral,
+    "train_steps": numbers.Integral,
+    "table_lr": numbers.Real,
+    "head_lr": numbers.Real,
+    "requests": numbers.Integral,
+    "serve_batch": numbers.Integral,
+    "cache_rows": numbers.Integral,
+    "retier_every": numbers.Integral,
+    "drift": numbers.Real,
+    "retier_async": bool,
+    "bytes_fp32": numbers.Integral,
+    "auc_fp32": numbers.Real,
+    "sweep": list,
+}
+
+HASH_SWEEP = {
+    "ratio_target": numbers.Real,
+    "ratio_actual": numbers.Real,
+    "pool_slots": numbers.Integral,
+    "bytes": numbers.Integral,
+    "bytes_combined": numbers.Integral,
+    "auc": numbers.Real,
+    "auc_gap": numbers.Real,
+    "auc_combined": numbers.Real,
+    "qps": numbers.Real,
+    "steady_qps": numbers.Real,
+    "p50_us": numbers.Real,
+    "p99_us": numbers.Real,
+    "lookups": numbers.Integral,
+    "hits": numbers.Integral,
+    "cache_hit_rate": numbers.Real,
+    "retiers": numbers.Integral,
+    **LATENCY_KEYS,
+}
+
+# a hashed sweep that never reaches this target ratio has not
+# demonstrated the memory bound the backend exists for
+HASH_MIN_TOP_RATIO = 100.0
+
+
+def _validate_hash(rec: dict) -> list[str]:
+    """``bench_hash/v1`` (benchmarks/hashed.py): pool-ratio sweep.
+    The load-bearing invariants: pool bytes fall STRICTLY as the
+    target ratio rises (the compression knob must actually compress),
+    the int8-combined pool is smaller than the fp32 pool at every
+    ratio, latency percentiles are ordered, and the sweep reaches at
+    least ``HASH_MIN_TOP_RATIO`` x."""
+    errors: list[str] = []
+    _check_keys(rec, HASH_TOP, "top-level", errors)
+    entries = _check_sweep(rec, HASH_SWEEP, errors)
+    _check_latency(entries, errors)
+    ratios = [e.get("ratio_target") for e in entries]
+    if len(set(ratios)) != len(ratios):
+        errors.append("sweep: duplicate ratio_target entries")
+    ok = [e for e in entries
+          if _is_num(e.get("ratio_target"))
+          and isinstance(e.get("bytes"), numbers.Integral)]
+    ok.sort(key=lambda e: e["ratio_target"])
+    for lo, hi in zip(ok, ok[1:]):
+        if hi["bytes"] >= lo["bytes"]:
+            errors.append(
+                "sweep: pool bytes must fall strictly as the target "
+                f"ratio rises ({lo['ratio_target']:g}x: {lo['bytes']} "
+                f"-> {hi['ratio_target']:g}x: {hi['bytes']})")
+    if ok and ok[-1]["ratio_target"] < HASH_MIN_TOP_RATIO:
+        errors.append(
+            f"sweep: top ratio {ok[-1]['ratio_target']:g}x below the "
+            f"required {HASH_MIN_TOP_RATIO:g}x")
+    bf = rec.get("bytes_fp32")
+    for i, e in enumerate(entries):
+        b, bc = e.get("bytes"), e.get("bytes_combined")
+        if isinstance(b, numbers.Integral) \
+                and isinstance(bc, numbers.Integral) and bc >= b:
+            errors.append(f"sweep[{i}]: int8-combined bytes {bc} not "
+                          f"below fp32 pool bytes {b}")
+        ra = e.get("ratio_actual")
+        if isinstance(b, numbers.Integral) and b > 0 \
+                and isinstance(bf, numbers.Integral) and _is_num(ra) \
+                and abs(ra - bf / b) > 0.02 * max(ra, 1.0):
+            errors.append(f"sweep[{i}]: ratio_actual {ra} "
+                          f"inconsistent with byte counts "
+                          f"({bf / b:.2f})")
+        if _is_num(e.get("cache_hit_rate")) \
+                and not 0.0 <= e["cache_hit_rate"] <= 1.0:
+            errors.append(f"sweep[{i}]: cache_hit_rate out of [0, 1]")
+    return errors
+
+
 SCHEMAS = {
     "bench_qps/v1": _validate_qps,
     "bench_hier/v1": _validate_hier,
     "bench_pipeline/v1": _validate_pipeline,
     "bench_kernel/v1": _validate_kernel,
     "bench_fleet/v1": _validate_fleet,
+    "bench_hash/v1": _validate_hash,
     "metrics_snapshot/v1": _validate_metrics,
 }
 
@@ -603,8 +698,35 @@ def _load_records(path: str) -> list[dict]:
     return [json.loads(text)]
 
 
+def _committed_manifest() -> tuple[dict[str, tuple[str, str]], str]:
+    """Load ``benchmarks.manifest.COMMITTED_BENCH`` by file path (and
+    return the repo root), so the gate works regardless of
+    PYTHONPATH/cwd."""
+    import importlib.util
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    spec = importlib.util.spec_from_file_location(
+        "bench_manifest", os.path.join(root, "benchmarks",
+                                       "manifest.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return dict(mod.COMMITTED_BENCH), root
+
+
 def main() -> int:
-    paths = sys.argv[1:] or ["BENCH_qps.json"]
+    args = sys.argv[1:]
+    expected: dict[str, str] = {}
+    if "--committed" in args:
+        args.remove("--committed")
+        manifest, root = _committed_manifest()
+        import os
+        committed = [os.path.join(root, name) for name in
+                     sorted(manifest)]
+        expected = {os.path.join(root, name): schema
+                    for name, (schema, _) in manifest.items()}
+        paths = args + committed
+    else:
+        paths = args or ["BENCH_qps.json"]
     failed = False
     for path in paths:
         try:
@@ -621,6 +743,10 @@ def main() -> int:
         for ln, rec in enumerate(recs, 1):
             where = f"{path}:{ln}" if len(recs) > 1 else path
             errors = validate(rec)
+            want = expected.get(path)
+            if want is not None and rec.get("schema") != want:
+                errors.append(f"schema is {rec.get('schema')!r}, the "
+                              f"committed manifest expects {want!r}")
             for err in errors:
                 print(f"{where}: {err}")
             file_errors += len(errors)
